@@ -1,0 +1,133 @@
+"""Roofline analysis from the dry-run artifacts (assignment §ROOFLINE).
+
+Per (arch x shape x mesh) cell:
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs            [s]
+    memory term     = HLO_bytes_per_device / HBM_bw                [s]
+    collective term = ICI bytes / ICI_bw + pod (DCN) bytes / DCN_bw [s]
+
+HLO_FLOPs / bytes / collective-bytes come from the trip-count-aware HLO
+walker (benchmarks/hlo_cost.py) — NOT from raw cost_analysis(), which counts
+scan bodies once (verified; see EXPERIMENTS.md).  The memory term from CPU
+HLO is an UPPER bound (CPU fusion granularity < TPU); an analytic
+lower bound (params + optimizer + activation streams) is reported alongside.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW, DCN_BW  # noqa
+from repro.configs import ARCHS, SHAPES  # noqa
+from repro.models.flops import model_flops  # noqa
+
+RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results")
+
+
+def analytic_memory_bytes(arch: str, shape_name: str, n_chips: int) -> float:
+    """Per-device HBM-traffic lower bound for one step."""
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    n = cfg.param_count()
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        # fwd + bwd + remat-fwd stream the active params thrice (bf16),
+        # optimizer reads/writes m, v, p, g in f32
+        traffic = 3 * 2 * n_active + 12 * n + 8 * n
+    elif shape.kind == "prefill":
+        traffic = 2 * n_active
+    else:  # decode: read active params + the KV cache
+        if cfg.family == "ssm":
+            cache = cfg.n_layers * cfg.d_inner * cfg.ssm_state * 4
+        elif cfg.family == "hybrid":
+            cache = cfg.n_layers * cfg.lru_width * 4
+        else:
+            W = min(shape.cache_len, 10 ** 9)
+            cache = (cfg.n_layers * 2 * W * cfg.n_kv_heads
+                     * cfg.head_dim * 2)
+        traffic = 2 * n_active + cache * shape.global_batch
+    return traffic / n_chips
+
+
+def load_cells(mesh: Optional[str] = None,
+               strategy: str = "acesync") -> List[Dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        rec = json.load(open(f))
+        if not rec.get("ok"):
+            continue
+        if mesh and rec["mesh"] != mesh:
+            continue
+        if rec.get("strategy", "acesync") != strategy and \
+                rec.get("mode") is None:
+            continue
+        out.append(rec)
+    return out
+
+
+def roofline_row(rec: Dict) -> Dict:
+    w = rec["walker"]
+    coll = w["collective_bytes_per_device"]
+    ici = sum(v for k, v in coll.items() if k not in ("pod", "unknown"))
+    pod = coll.get("pod", 0.0)
+    compute_s = w["flops_per_device"] / PEAK_FLOPS_BF16
+    mem_ub_s = w["bytes_per_device"] / HBM_BW
+    mem_lb_s = analytic_memory_bytes(rec["arch"], rec["shape"],
+                                     rec["n_chips"]) / HBM_BW
+    coll_s = ici / ICI_BW + pod / DCN_BW
+    mem_s = max(mem_lb_s, min(mem_ub_s, mem_lb_s * 4))  # bounded estimate
+    terms = {"compute": compute_s, "memory": mem_s, "collective": coll_s}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    frac = compute_s / bound if bound > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute_s, "memory_s": mem_s,
+        "memory_ub_s": mem_ub_s, "memory_lb_s": mem_lb_s,
+        "collective_s": coll_s, "pod_bytes": pod, "ici_bytes": ici,
+        "dominant": dom, "roofline_frac": frac,
+        "model_flops": rec["model_flops_global"],
+        "hlo_flops": rec["hlo_flops_global"],
+        "useful_ratio": rec.get("useful_ratio"),
+        "mem_per_dev_gb": rec.get("bytes_per_device", 0) / 1e9,
+        "hbm_gb": rec.get("memory", {}).get("temp_size_in_bytes", 0) / 1e9,
+    }
+
+
+def table(mesh="16x16") -> List[Dict]:
+    return [roofline_row(r) for r in load_cells(mesh)]
+
+
+def fmt_table(rows: List[Dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'collect_s':>10s} {'dom':>10s} {'useful':>7s} {'frac':>6s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['compute_s']:10.4f} "
+            f"{r['memory_s']:10.4f} {r['collective_s']:10.4f} "
+            f"{r['dominant']:>10s} "
+            f"{(r['useful_ratio'] or 0):7.3f} {r['roofline_frac']:6.3f}")
+    return "\n".join(lines)
+
+
+def main():
+    for mesh in ("16x16", "2x16x16"):
+        rows = table(mesh)
+        if rows:
+            print(f"\n=== roofline {mesh} ({len(rows)} cells) ===")
+            print(fmt_table(rows))
+    # write machine-readable
+    out = {m: table(m) for m in ("16x16", "2x16x16")}
+    with open(os.path.join(RESULTS, "roofline.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"\nwrote {os.path.join(RESULTS, 'roofline.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""Benchmark harness. One function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (assignment contract)."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                ".."))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+
+def _time(fn, *args, iters=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def row(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# micro: compression operators (the paper's hot loop)
+# ---------------------------------------------------------------------------
+
+
+def bench_compression():
+    from repro.core import compression as C
+    from repro.core.sync import _leaf_sync_local
+    n = 1 << 20  # 1M gradient entries
+    g = jnp.asarray(np.random.RandomState(0).randn(n).astype(np.float32))
+    e = jnp.zeros_like(g)
+    om = jnp.ones((1,), jnp.float32)
+    for name, keep, bits in [("FULL", 1.0, 16), ("INT8", 1.0, 8),
+                             ("TOPK10_INT8", 0.10, 8),
+                             ("TOPK1_INT8", 0.01, 8)]:
+        level = C.Level(name, keep, bits)
+        fn = jax.jit(lambda g, e, lv=level: _leaf_sync_local(
+            g, e, om, om[0], level=lv, gamma=1.0, n_pods=1, block=1024))
+        us = _time(fn, g, e)
+        mbps = n * 4 / (us / 1e6) / 1e6
+        wire = level.wire_bytes(n, 2)
+        row(f"sync_leaf_{name}_1M", us,
+            f"{mbps:.0f}MBps;wire={wire/1e3:.0f}KB")
+
+
+def bench_kernels():
+    from repro.kernels import ops
+    n = 1 << 18
+    g = jnp.asarray(np.random.RandomState(1).randn(n).astype(np.float32))
+    e = jnp.zeros_like(g)
+    us = _time(lambda: ops.ef_topk(g, e, gamma=1.0, k=104)[0])
+    row("kernel_ef_topk_interp_256k", us, "interpret-mode(correctness path)")
+    us2 = _time(lambda: ops.quantize_int8(g)[0])
+    row("kernel_quantize_int8_interp_256k", us2, "")
+
+
+# ---------------------------------------------------------------------------
+# table 1 + fig 2 (paper's comparison) — smoke scale
+# ---------------------------------------------------------------------------
+
+
+def bench_table1(steps=60):
+    from benchmarks import table1
+    t0 = time.perf_counter()
+    res = table1.main(steps)
+    us = (time.perf_counter() - t0) * 1e6
+    full = res["fullsync"]["comm_bytes"]
+    ace = res["acesync"]["comm_bytes"]
+    red = 100 * (1 - ace / max(full, 1))
+    row("table1_4strategies", us,
+        f"comm_reduction={red:.1f}%;paper=60.3%")
+
+
+# ---------------------------------------------------------------------------
+# train/serve step timings (smoke configs)
+# ---------------------------------------------------------------------------
+
+
+def bench_train_step():
+    from repro.configs import SMOKE_ARCHS
+    from repro.configs.base import RunConfig, ShapeConfig
+    from repro.core.trainer import Trainer
+    from repro.models.registry import build_model
+    shape = ShapeConfig("b", 128, 4, "train")
+    for arch in ("paper-350m", "qwen3-8b", "dbrx-132b", "falcon-mamba-7b",
+                 "recurrentgemma-2b"):
+        cfg = SMOKE_ARCHS[arch]
+        run = RunConfig(model=cfg, shape=shape, total_steps=100)
+        model = build_model(cfg, run)
+        tr = Trainer(model, run, mesh=None, strategy="acesync")
+        state = tr.init_state(jax.random.PRNGKey(0))
+        batch = model.make_batch(jax.random.PRNGKey(1), shape)
+        plan = tr.default_plan()
+        fn = tr.step_fn(plan, "grad_sync")
+
+        def step(s):
+            s2, m = fn(s, batch)
+            return m["loss"]
+        us = _time(step, state, iters=3, warmup=1)
+        tok = shape.global_batch * shape.seq_len
+        row(f"train_step_smoke_{arch}", us,
+            f"{tok/(us/1e6):.0f}tok_s")
+
+
+def bench_decode_step():
+    from repro.configs import SMOKE_ARCHS
+    from repro.configs.base import ShapeConfig
+    from repro.models.registry import build_model
+    for arch in ("paper-350m", "falcon-mamba-7b"):
+        model = build_model(SMOKE_ARCHS[arch])
+        params = model.init(jax.random.PRNGKey(0))
+        pf = ShapeConfig("p", 64, 2, "prefill")
+        batch = model.make_batch(jax.random.PRNGKey(1), pf)
+        _, cache = jax.jit(model.prefill)(params, batch)
+        tok = jnp.zeros((2, 1), jnp.int32)
+        dec = jax.jit(model.decode_step)
+
+        def step(c):
+            return dec(params, c, jnp.int32(63), tok)[0]
+        us = _time(step, cache, iters=5, warmup=2)
+        row(f"decode_step_smoke_{arch}", us,
+            f"{2/(us/1e6):.0f}tok_s")
+
+
+# ---------------------------------------------------------------------------
+# roofline summary (from dry-run artifacts, if present)
+# ---------------------------------------------------------------------------
+
+
+def bench_roofline_summary():
+    from benchmarks import roofline
+    rows = roofline.table("16x16")
+    if not rows:
+        row("roofline_16x16", 0.0, "no dry-run artifacts")
+        return
+    t0 = time.perf_counter()
+    best = max(rows, key=lambda r: r["roofline_frac"])
+    worst = min(rows, key=lambda r: r["roofline_frac"])
+    us = (time.perf_counter() - t0) * 1e6
+    row("roofline_16x16_cells", us,
+        f"n={len(rows)};best={best['arch']}/{best['shape']}"
+        f"@{best['roofline_frac']:.2f};"
+        f"worst={worst['arch']}/{worst['shape']}"
+        f"@{worst['roofline_frac']:.3f}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_compression()
+    bench_kernels()
+    bench_train_step()
+    bench_decode_step()
+    bench_roofline_summary()
+    bench_table1(steps=int(os.environ.get("TABLE1_STEPS", "60")))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""The paper's cloud-edge experiment in miniature: 64 heterogeneous edge
+devices (5-200 Mbps, 10-300 ms), 4 synchronization strategies, communication
++ quality comparison — the Table 1 / Figure 2 reproduction.
+
+Run:  PYTHONPATH=src python examples/cloud_edge_sim.py [--steps 120]
+"""
+import argparse
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import table1
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=120)
+args = ap.parse_args()
+table1.main(args.steps)

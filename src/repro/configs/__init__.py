@@ -1,0 +1,64 @@
+"""Assigned architecture configs (exact dims from the assignment spec) plus
+the paper's own 350M transformer.  Each arch also provides a reduced *smoke*
+variant for CPU tests.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig, SHAPES, ACESyncConfig
+
+from repro.configs.dbrx_132b import CONFIG as dbrx_132b, SMOKE as dbrx_132b_smoke
+from repro.configs.qwen3_moe_30b_a3b import CONFIG as qwen3_moe_30b_a3b, SMOKE as qwen3_moe_30b_a3b_smoke
+from repro.configs.minitron_8b import CONFIG as minitron_8b, SMOKE as minitron_8b_smoke
+from repro.configs.qwen3_8b import CONFIG as qwen3_8b, SMOKE as qwen3_8b_smoke
+from repro.configs.starcoder2_3b import CONFIG as starcoder2_3b, SMOKE as starcoder2_3b_smoke
+from repro.configs.gemma2_9b import CONFIG as gemma2_9b, SMOKE as gemma2_9b_smoke
+from repro.configs.falcon_mamba_7b import CONFIG as falcon_mamba_7b, SMOKE as falcon_mamba_7b_smoke
+from repro.configs.llava_next_mistral_7b import CONFIG as llava_next_mistral_7b, SMOKE as llava_next_mistral_7b_smoke
+from repro.configs.recurrentgemma_2b import CONFIG as recurrentgemma_2b, SMOKE as recurrentgemma_2b_smoke
+from repro.configs.seamless_m4t_medium import CONFIG as seamless_m4t_medium, SMOKE as seamless_m4t_medium_smoke
+from repro.configs.paper_350m import CONFIG as paper_350m, SMOKE as paper_350m_smoke
+
+ARCHS = {
+    "dbrx-132b": dbrx_132b,
+    "qwen3-moe-30b-a3b": qwen3_moe_30b_a3b,
+    "minitron-8b": minitron_8b,
+    "qwen3-8b": qwen3_8b,
+    "starcoder2-3b": starcoder2_3b,
+    "gemma2-9b": gemma2_9b,
+    "falcon-mamba-7b": falcon_mamba_7b,
+    "llava-next-mistral-7b": llava_next_mistral_7b,
+    "recurrentgemma-2b": recurrentgemma_2b,
+    "seamless-m4t-medium": seamless_m4t_medium,
+    "paper-350m": paper_350m,
+}
+
+SMOKE_ARCHS = {
+    "dbrx-132b": dbrx_132b_smoke,
+    "qwen3-moe-30b-a3b": qwen3_moe_30b_a3b_smoke,
+    "minitron-8b": minitron_8b_smoke,
+    "qwen3-8b": qwen3_8b_smoke,
+    "starcoder2-3b": starcoder2_3b_smoke,
+    "gemma2-9b": gemma2_9b_smoke,
+    "falcon-mamba-7b": falcon_mamba_7b_smoke,
+    "llava-next-mistral-7b": llava_next_mistral_7b_smoke,
+    "recurrentgemma-2b": recurrentgemma_2b_smoke,
+    "seamless-m4t-medium": seamless_m4t_medium_smoke,
+    "paper-350m": paper_350m_smoke,
+}
+
+# archs whose long_500k cell is skipped (pure full-attention; see DESIGN.md)
+LONG_CONTEXT_ARCHS = {"falcon-mamba-7b", "recurrentgemma-2b"}
+
+
+def cells(include_long_skips: bool = False):
+    """All (arch, shape) dry-run cells honouring the long_500k skip rule."""
+    out = []
+    for arch in ARCHS:
+        if arch == "paper-350m":
+            continue
+        for shape in SHAPES.values():
+            if (shape.name == "long_500k" and not include_long_skips
+                    and arch not in LONG_CONTEXT_ARCHS):
+                continue
+            out.append((arch, shape.name))
+    return out

@@ -1,0 +1,16 @@
+"""starcoder2-3b: 30L d_model=3072 24H (GQA kv=2) d_ff=12288 vocab=49152,
+GQA + RoPE. [arXiv:2402.19173; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-3b", family="dense",
+    n_layers=30, d_model=3072, n_heads=24, n_kv_heads=2, head_dim=128,
+    d_ff=12288, vocab_size=49152,
+    rope_theta=100_000.0,
+)
+
+SMOKE = ModelConfig(
+    name="starcoder2-3b-smoke", family="dense",
+    n_layers=2, d_model=48, n_heads=4, n_kv_heads=2, head_dim=12,
+    d_ff=96, vocab_size=256,
+)

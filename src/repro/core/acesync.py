@@ -1,0 +1,98 @@
+"""ACE-Sync public API: state container + the jittable gradient-sync pass
+that fuses error feedback (eq 7), compression (eq 6), hierarchical
+aggregation (eq 8) and the online importance-estimator update (eqs 3-4).
+
+Usage inside a per-pod train step (see core/trainer.py):
+
+    agg_grads, new_ace = acesync.sync_gradients(
+        grads, ace_state, plan, mesh=mesh, shardings=param_shardings,
+        cfg=run.acesync)
+
+All heavy tensors (error buffers) are sharded like the parameters; the
+estimator state is a few hundred scalars.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ACESyncConfig
+from repro.core import importance as imp
+from repro.core import sync as S
+from repro.core.scheduler import SyncPlan
+
+
+class ACEState(NamedTuple):
+    errors: dict            # pytree like params (error-feedback residuals)
+    importance: imp.ImportanceState
+    struct_feat: jax.Array  # (G, N_STRUCT) static structural features
+    div_ema: jax.Array      # divergence EMA scalar
+    mse_ema: jax.Array      # estimator fit quality
+
+
+def init_state(rng, params_like, param_specs, cfg: ACESyncConfig,
+               error_dtype=jnp.float32) -> ACEState:
+    metas = S.group_metas(param_specs)
+    struct = imp.structural_features(
+        [{"depth": m.depth, "size": m.size, "kind": m.kind} for m in metas])
+    errors = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, error_dtype), params_like)
+    return ACEState(
+        errors=errors,
+        importance=imp.init_state(rng, len(metas), cfg.importance_hidden),
+        struct_feat=struct,
+        div_ema=jnp.zeros((), jnp.float32),
+        mse_ema=jnp.zeros((), jnp.float32))
+
+
+def state_specs(params_specs, cfg: ACESyncConfig,
+                error_dtype=jnp.float32) -> ACEState:
+    """ShapeDtypeStruct version of init_state (dry-run, no allocation)."""
+    metas = S.group_metas(params_specs)
+    G = len(metas)
+    rng = jax.random.PRNGKey(0)
+    small = jax.eval_shape(
+        lambda: init_state(rng, jax.tree.map(
+            lambda s: jnp.zeros((), s.dtype), params_specs),
+            params_specs, cfg))
+    errors = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, error_dtype), params_specs)
+    return small._replace(errors=errors)
+
+
+def sync_gradients(grads, state: ACEState, plan: SyncPlan, *,
+                   mesh, shardings, cfg: ACESyncConfig
+                   ) -> Tuple[dict, ACEState, Dict[str, jax.Array]]:
+    """The ACE-Sync round. Returns (aggregated grads, new state, metrics)."""
+    # --- per-group stats for the importance estimator ---
+    mean_abs, var, nrm = S.grad_group_stats(grads)
+    if mesh is not None and S.POD_AXIS in mesh.axis_names \
+            and mesh.shape[S.POD_AXIS] > 1:
+        mean_abs = jax.lax.pmean(mean_abs, S.POD_AXIS)
+        var = jax.lax.pmean(var, S.POD_AXIS)
+        nrm = jax.lax.pmean(nrm, S.POD_AXIS)
+    ist = imp.update_stats(state.importance, mean_abs, var, nrm)
+    # online supervision: the observed (normalised) gradient-norm momentum is
+    # the ground-truth importance signal for this window
+    target = ist.norm_mom / jnp.maximum(jnp.max(ist.norm_mom), 1e-12)
+    ist, mse = imp.train_step(ist, state.struct_feat, target,
+                              alpha=cfg.alpha, lr=cfg.importance_lr)
+
+    # --- error feedback + compression + pod aggregation ---
+    agg, new_errors = S.sync_tree(grads, state.errors, plan, mesh=mesh,
+                                  shardings=shardings, gamma=cfg.gamma,
+                                  block=cfg.topk_block)
+
+    new_state = state._replace(errors=new_errors, importance=ist,
+                               mse_ema=0.99 * state.mse_ema + 0.01 * mse)
+    metrics = {"imp_mse": mse, "grad_norm_mean": jnp.mean(nrm)}
+    return agg, new_state, metrics
+
+
+def current_scores(state: ACEState, cfg: ACESyncConfig) -> jax.Array:
+    """Importance scores I(theta_i) (G,) — used by the host-side planner."""
+    temp = imp.temporal_features(state.importance)
+    return imp.scores(state.importance.params, temp, state.struct_feat,
+                      cfg.alpha)

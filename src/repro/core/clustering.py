@@ -1,0 +1,79 @@
+"""Device clustering (paper: "device clustering ensures long-term
+convergence and cross-device personalization").
+
+Pods/devices are clustered by telemetry profile (bandwidth mean/var,
+latency, straggle factor); each cluster gets a shared compression policy
+scale and reliability weight omega.  Plain k-means on the host (numpy) —
+this runs once per replan, on a handful of device profiles.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+def kmeans(x: np.ndarray, k: int, iters: int = 50,
+           seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """x: (N, F). Returns (assignments (N,), centroids (k, F))."""
+    n = x.shape[0]
+    k = min(k, n)
+    rng = np.random.RandomState(seed)
+    # k-means++ init
+    cent = [x[rng.randint(n)]]
+    for _ in range(1, k):
+        d2 = np.min([np.sum((x - c) ** 2, axis=1) for c in cent], axis=0)
+        p = d2 / max(d2.sum(), 1e-12)
+        cent.append(x[rng.choice(n, p=p)])
+    cent = np.stack(cent)
+    assign = np.zeros(n, np.int64)
+    for _ in range(iters):
+        d = ((x[:, None, :] - cent[None]) ** 2).sum(-1)
+        new_assign = d.argmin(1)
+        if np.all(new_assign == assign):
+            break
+        assign = new_assign
+        for j in range(k):
+            m = assign == j
+            if m.any():
+                cent[j] = x[m].mean(0)
+    return assign, cent
+
+
+def normalise_profiles(profiles: Sequence[dict]) -> np.ndarray:
+    """profiles: dicts with bandwidth_mbps, latency_ms, jitter, straggle."""
+    keys = ("bandwidth_mbps", "latency_ms", "jitter", "straggle")
+    x = np.array([[float(p.get(k, 0.0)) for k in keys] for p in profiles])
+    mu, sd = x.mean(0), x.std(0) + 1e-8
+    return (x - mu) / sd
+
+
+def cluster_devices(profiles: Sequence[dict], k: int,
+                    seed: int = 0) -> List[int]:
+    x = normalise_profiles(profiles)
+    assign, _ = kmeans(x, k, seed=seed)
+    return assign.tolist()
+
+
+def reliability_weights(profiles: Sequence[dict],
+                        assignments: Sequence[int]) -> List[float]:
+    """omega_k (paper eq. 8): softmax over a reliability score =
+    bandwidth / (latency * straggle), shared within a cluster."""
+    import math
+    scores = []
+    for p in profiles:
+        bw = float(p.get("bandwidth_mbps", 1.0))
+        lat = float(p.get("latency_ms", 1.0))
+        st = float(p.get("straggle", 1.0))
+        scores.append(math.log(max(bw, 1e-3))
+                      - 0.1 * math.log(max(lat, 1e-3))
+                      - math.log(max(st, 1e-3)))
+    # cluster-average the scores (personalised-but-stable weights)
+    by_cluster = {}
+    for s, a in zip(scores, assignments):
+        by_cluster.setdefault(a, []).append(s)
+    cl_mean = {a: sum(v) / len(v) for a, v in by_cluster.items()}
+    sc = np.array([cl_mean[a] for a in assignments])
+    e = np.exp(sc - sc.max())
+    w = e / e.sum()
+    return w.tolist()

@@ -1,0 +1,139 @@
+"""Gradient compression operators (paper eqs. 6-7).
+
+All operators work on a device-local flat gradient block (the nested
+shard_map in core/sync.py hands each device its own shard), blocked into
+``block``-sized rows:
+
+  * block-local top-k ("TOPK"): keep the k largest-|g| entries of every
+    block — the TPU-native adaptation of DGC's sampled global top-k; the
+    selection never needs a global sort and the indices fit in uint16.
+  * blockwise int8 quantisation ("INT8"): absmax scale per block
+    (generalises the paper's  Q(g) = sign(g)*||g||*q  to blocks).
+
+Error feedback (eq. 7): g_ef = g + gamma * e; after compression the residual
+e' = g_ef - decompress(compress(g_ef)) stays in the local buffer.
+
+The pure-jnp implementations here double as the reference oracles for the
+Pallas kernels in repro/kernels (which fuse EF + select + quantise into one
+VMEM pass for the TPU runtime).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 1024
+
+
+class Level(NamedTuple):
+    """One rung of the compression ladder."""
+    name: str
+    keep_ratio: float       # fraction of entries transmitted (1.0 = all)
+    value_bits: int         # 16 (bf16), 8 (int8), 0 (skip)
+
+    @property
+    def is_full(self) -> bool:
+        return self.keep_ratio >= 1.0 and self.value_bits >= 16
+
+    @property
+    def is_skip(self) -> bool:
+        return self.keep_ratio <= 0.0
+
+    @property
+    def is_topk(self) -> bool:
+        return 0.0 < self.keep_ratio < 1.0
+
+    def block_k(self, block: int = BLOCK) -> int:
+        """Static k per block (multiple of 8 lanes, >= 8)."""
+        k = int(round(self.keep_ratio * block))
+        return max(8, ((k + 7) // 8) * 8)
+
+    def wire_bytes(self, n: int, n_pods: int, block: int = BLOCK) -> int:
+        """Bytes this level moves over the pod axis per device per sync
+        (all_gather receive volume; psum for FULL counted as ring bytes)."""
+        if self.is_skip or n_pods <= 1:
+            return 0
+        nb = (n + block - 1) // block
+        if self.is_full:
+            # bf16 psum (ring): 2 * (P-1)/P * 2n bytes on the wire
+            return int(2 * (n_pods - 1) / n_pods * 2 * n)
+        if self.keep_ratio >= 1.0:  # INT8 dense
+            per = n + 4 * nb  # int8 payload + f32 scales
+            return per * (n_pods - 1)
+        k = self.block_k(block)
+        per = nb * k * (1 + 2) + 4 * nb  # int8 vals + u16 idx + f32 scales
+        return per * (n_pods - 1)
+
+
+def pad_to_blocks(flat: jax.Array, block: int = BLOCK) -> jax.Array:
+    n = flat.shape[0]
+    nb = (n + block - 1) // block
+    pad = nb * block - n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(nb, block)
+
+
+# ---------------------------------------------------------------------------
+# block-local top-k sparsification
+# ---------------------------------------------------------------------------
+
+
+def topk_compress(blocks: jax.Array, k: int):
+    """blocks: (nb, B) f32 -> (values int8 (nb,k), idx uint16 (nb,k),
+    scales f32 (nb,)). Values int8-quantised with per-block absmax scale."""
+    mag = jnp.abs(blocks)
+    _, idx = jax.lax.top_k(mag, k)                       # (nb, k) int32
+    vals = jnp.take_along_axis(blocks, idx, axis=1)      # (nb, k) f32
+    scale = jnp.max(jnp.abs(vals), axis=1) / 127.0       # (nb,)
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(vals / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, idx.astype(jnp.uint16), scale.astype(jnp.float32)
+
+
+def topk_decompress(q, idx, scale, block: int = BLOCK):
+    """Inverse of :func:`topk_compress` -> dense (nb, B) f32."""
+    nb, k = q.shape
+    vals = q.astype(jnp.float32) * scale[:, None]
+    out = jnp.zeros((nb, block), jnp.float32)
+    return out.at[jnp.arange(nb)[:, None], idx.astype(jnp.int32)].add(vals)
+
+
+# ---------------------------------------------------------------------------
+# blockwise int8 quantisation (dense)
+# ---------------------------------------------------------------------------
+
+
+def int8_compress(blocks: jax.Array):
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def int8_decompress(q, scale):
+    return q.astype(jnp.float32) * scale[:, None]
+
+
+# ---------------------------------------------------------------------------
+# single-device compress->decompress round trip (for residuals / simulation)
+# ---------------------------------------------------------------------------
+
+
+def roundtrip(flat: jax.Array, level: Level, block: int = BLOCK) -> jax.Array:
+    """decompress(compress(flat)) — what the receiver reconstructs."""
+    n = flat.shape[0]
+    if level.is_full:
+        return flat.astype(jnp.bfloat16).astype(jnp.float32)
+    if level.is_skip:
+        return jnp.zeros_like(flat)
+    blocks = pad_to_blocks(flat.astype(jnp.float32), block)
+    if level.is_topk:
+        out = topk_decompress(*topk_compress(blocks, level.block_k(block)),
+                              block)
+    else:
+        out = int8_decompress(*int8_compress(blocks))
+    return out.reshape(-1)[:n].astype(flat.dtype)

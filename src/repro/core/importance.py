@@ -1,0 +1,140 @@
+"""Attention-based parameter-importance estimator (paper eqs. 3-4).
+
+Per parameter group i the estimator produces I(theta_i) in [0, 1]:
+
+    I(theta_i) = alpha * Attn_temp(g_i) + (1 - alpha) * Attn_struct(theta_i)
+    Attn_temp(g_i) = sigmoid(W1 * |g_i|_ema + W2 * Var(g_i)_ema)      (eq 4)
+
+The structural branch is a small softmax attention OVER GROUPS (queries from
+temporal statistics, keys/values from static structural features) so groups
+compete — consistent with the knapsack view of bandwidth allocation.
+
+The estimator is trained online: the target for step t is the observed
+normalised update magnitude of each group over the next window (the paper's
+"gradient snapshot" supervision), minimised with its own Adam.  Everything
+is O(n_groups * hidden) — negligible next to the model.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+N_TEMPORAL = 4   # |g| ema, var ema, norm momentum, relative step
+N_STRUCT = 6     # rel depth, log size, type one-hot (embed/attn/mlp/other)
+
+
+class ImportanceState(NamedTuple):
+    params: dict          # estimator weights
+    opt_m: dict
+    opt_v: dict
+    feat_ema: jax.Array   # (G, 2) ema of mean|g| and var(g)
+    norm_mom: jax.Array   # (G,) gradient-norm momentum
+    step: jax.Array       # scalar int32
+
+
+def init_params(rng, n_groups: int, hidden: int):
+    k = jax.random.split(rng, 6)
+    s = 1.0 / math.sqrt(hidden)
+
+    return {
+        # eq (4) temporal branch
+        "w1": jnp.full((1,), 1.0, jnp.float32),
+        "w2": jnp.full((1,), 1.0, jnp.float32),
+        "b_temp": jnp.zeros((1,), jnp.float32),
+        # structural attention
+        "wq": jax.random.normal(k[0], (N_TEMPORAL, hidden)) * 0.3,
+        "wk": jax.random.normal(k[1], (N_STRUCT, hidden)) * 0.3,
+        "wv": jax.random.normal(k[2], (N_STRUCT, hidden)) * 0.3,
+        "w_out": jax.random.normal(k[3], (hidden, 1)) * s,
+        "b_out": jnp.zeros((1,), jnp.float32),
+    }
+
+
+def init_state(rng, n_groups: int, hidden: int) -> ImportanceState:
+    p = init_params(rng, n_groups, hidden)
+    zeros = jax.tree.map(jnp.zeros_like, p)
+    return ImportanceState(
+        params=p, opt_m=zeros, opt_v=jax.tree.map(jnp.zeros_like, p),
+        feat_ema=jnp.zeros((n_groups, 2), jnp.float32),
+        norm_mom=jnp.zeros((n_groups,), jnp.float32),
+        step=jnp.zeros((), jnp.int32))
+
+
+def structural_features(group_meta) -> jnp.ndarray:
+    """group_meta: list of dicts {depth: float in [0,1], size: int,
+    kind: str}. Static per model — computed once."""
+    kinds = {"embed": 0, "attn": 1, "mlp": 2, "other": 3}
+    rows = []
+    for m in group_meta:
+        one = [0.0] * 4
+        one[kinds.get(m["kind"], 3)] = 1.0
+        rows.append([m["depth"], math.log10(max(m["size"], 1)) / 12.0] + one)
+    return jnp.asarray(rows, jnp.float32)
+
+
+def update_stats(state: ImportanceState, grad_mean_abs, grad_var, grad_norm,
+                 decay: float = 0.9) -> ImportanceState:
+    """grad_*: (G,) per-group scalars from the current step."""
+    feat = jnp.stack([grad_mean_abs, grad_var], axis=1)
+    feat_ema = decay * state.feat_ema + (1 - decay) * feat
+    norm_mom = decay * state.norm_mom + (1 - decay) * grad_norm
+    return state._replace(feat_ema=feat_ema, norm_mom=norm_mom,
+                          step=state.step + 1)
+
+
+def temporal_features(state: ImportanceState) -> jnp.ndarray:
+    g = state.feat_ema
+    # normalise across groups so scales are comparable
+    mu = jnp.mean(g, axis=0, keepdims=True)
+    sd = jnp.std(g, axis=0, keepdims=True) + 1e-8
+    gn = (g - mu) / sd
+    nm = state.norm_mom
+    nmn = (nm - jnp.mean(nm)) / (jnp.std(nm) + 1e-8)
+    step_feat = jnp.full_like(nmn, jnp.log1p(state.step.astype(jnp.float32))
+                              / 10.0)
+    return jnp.stack([gn[:, 0], gn[:, 1], nmn, step_feat], axis=1)  # (G,4)
+
+
+def scores(params, temp_feat, struct_feat, alpha: float) -> jnp.ndarray:
+    """-> (G,) importance in [0,1]. eq (3)."""
+    # temporal branch (eq 4): sigmoid(W1 |g| + W2 Var(g))
+    attn_temp = jax.nn.sigmoid(params["w1"] * temp_feat[:, 0]
+                               + params["w2"] * temp_feat[:, 1]
+                               + params["b_temp"])
+    # structural branch: attention over groups
+    q = temp_feat @ params["wq"]          # (G, H)
+    k = struct_feat @ params["wk"]        # (G, H)
+    v = struct_feat @ params["wv"]        # (G, H)
+    att = jax.nn.softmax(q @ k.T / math.sqrt(q.shape[-1]), axis=-1)
+    ctx = att @ v                          # (G, H)
+    attn_struct = jax.nn.sigmoid((ctx @ params["w_out"])[:, 0]
+                                 + params["b_out"])
+    return alpha * attn_temp + (1 - alpha) * attn_struct
+
+
+def train_step(state: ImportanceState, struct_feat, target, *,
+               alpha: float, lr: float) -> tuple[ImportanceState, jax.Array]:
+    """One online Adam step toward the observed importance ``target`` (G,).
+    Returns (new_state, mse)."""
+    temp_feat = temporal_features(state)
+
+    def loss_fn(p):
+        s = scores(p, temp_feat, struct_feat, alpha)
+        return jnp.mean((s - target) ** 2)
+
+    mse, grads = jax.value_and_grad(loss_fn)(state.params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    t = state.step.astype(jnp.float32) + 1.0
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                         state.opt_m, grads)
+    new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                         state.opt_v, grads)
+    def upd(p, m, v):
+        mh = m / (1 - b1 ** t)
+        vh = v / (1 - b2 ** t)
+        return p - lr * mh / (jnp.sqrt(vh) + eps)
+    new_p = jax.tree.map(upd, state.params, new_m, new_v)
+    return state._replace(params=new_p, opt_m=new_m, opt_v=new_v), mse

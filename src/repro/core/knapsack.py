@@ -1,0 +1,85 @@
+"""Knapsack bandwidth allocation (paper abstract / conclusion).
+
+Maximise   sum_i I(theta_i) * value(level_i)
+subject to sum_i wire_bytes(level_i, n_i) <= budget_bytes
+
+over the static level ladder.  Because the ladder is monotone (more bytes
+-> more preserved value), the classic greedy-by-density algorithm on the
+*incremental* (delta_value / delta_bytes) items is optimal up to one item —
+the standard fractional-knapsack bound — and runs in O(G * L log(G * L)) on
+the host.  Runs every ``replan_every`` steps; the result is a static sync
+plan (one level index per parameter group).
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.compression import Level
+
+
+def level_value(level: Level) -> float:
+    """Fraction of gradient 'information' preserved by a level.
+
+    Top-k keeps roughly the keep_ratio mass-heaviest entries (empirically
+    ~sqrt(ratio) of the l2 mass for heavy-tailed gradients); int8 preserves
+    almost everything. These constants only need to ORDER the ladder."""
+    if level.is_skip:
+        return 0.0
+    base = math.sqrt(level.keep_ratio)
+    quant = 1.0 if level.value_bits >= 16 else 0.97
+    return base * quant
+
+
+def solve(importance: Sequence[float], sizes: Sequence[int],
+          levels: Sequence[Level], budget_bytes: float,
+          n_pods: int) -> List[int]:
+    """-> per-group level index. Greedy incremental knapsack."""
+    G = len(importance)
+    assert len(sizes) == G
+    levels = list(levels)
+    # order levels by wire bytes ascending (SKIP first)
+    order = sorted(range(len(levels)),
+                   key=lambda j: levels[j].wire_bytes(10 ** 6, max(n_pods, 2)))
+    choice = [order[0]] * G          # start everything at the cheapest level
+    spent = sum(levels[choice[i]].wire_bytes(sizes[i], n_pods)
+                for i in range(G))
+
+    # incremental upgrade items: (density, group, to_level_position)
+    items = []
+    for i in range(G):
+        for pos in range(1, len(order)):
+            j_prev, j = order[pos - 1], order[pos]
+            dv = (level_value(levels[j]) - level_value(levels[j_prev])) \
+                * max(importance[i], 1e-6) * math.log1p(sizes[i])
+            db = (levels[j].wire_bytes(sizes[i], n_pods)
+                  - levels[j_prev].wire_bytes(sizes[i], n_pods))
+            if db <= 0:
+                continue
+            items.append((dv / db, i, pos, db))
+    items.sort(key=lambda t: -t[0])
+
+    pos_of = [0] * G
+    # multiple passes: a skipped prerequisite may unlock later upgrades
+    for _ in range(len(order)):
+        progressed = False
+        for dens, i, pos, db in items:
+            if pos != pos_of[i] + 1:
+                continue  # upgrades must be taken in ladder order
+            if spent + db > budget_bytes:
+                continue
+            spent += db
+            pos_of[i] = pos
+            choice[i] = order[pos]
+            progressed = True
+        if not progressed:
+            break
+    return choice
+
+
+def plan_bytes(choice: Sequence[int], sizes: Sequence[int],
+               levels: Sequence[Level], n_pods: int) -> int:
+    return int(sum(levels[c].wire_bytes(n, n_pods)
+                   for c, n in zip(choice, sizes)))

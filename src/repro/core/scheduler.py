@@ -1,0 +1,138 @@
+"""Adaptive compression-expansion scheduling (paper eq. 5) + sync-plan
+management.
+
+The scheduler turns per-pod telemetry (bandwidth estimate B_k(t)) into a
+byte budget and a compression-ratio envelope:
+
+    c_k(t) = c_min + (c_max - c_min) * exp(-beta * B_k(t))        (eq 5)
+
+(c is the compression aggressiveness: low bandwidth -> large c -> keep
+fewer bytes; the byte budget is (1 - c) x FullSync volume).  The budget plus the importance scores feed the knapsack
+(core/knapsack.py) to produce the static per-group level plan.  Plans are
+recomputed on the host every ``replan_every`` steps; the jitted train step
+takes the plan as a static argument, so plan changes trigger a (cached)
+re-jit — a bounded number of variants since levels form a small ladder.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ACESyncConfig
+from repro.core import knapsack
+from repro.core.compression import Level
+
+
+def levels_from_config(cfg: ACESyncConfig) -> List[Level]:
+    return [Level(*lv) for lv in cfg.levels]
+
+
+def compression_level(cfg: ACESyncConfig, bandwidth_mbps: float) -> float:
+    """eq (5) verbatim: c_k(t) = c_min + (c_max-c_min)*exp(-beta*B_k(t)).
+    c is the compression AGGRESSIVENESS (paper: "under low bandwidth, the
+    framework increases compression")."""
+    return cfg.c_min + (cfg.c_max - cfg.c_min) * math.exp(
+        -cfg.beta * bandwidth_mbps)
+
+
+def kept_fraction(cfg: ACESyncConfig, bandwidth_mbps: float) -> float:
+    """Fraction of the FullSync byte volume the budget allows: 1 - c_k(t)
+    (floored so SKIP-everything never happens)."""
+    return max(0.02, 1.0 - compression_level(cfg, bandwidth_mbps))
+
+
+def byte_budget(cfg: ACESyncConfig, bandwidth_mbps: float,
+                total_bytes_full: int) -> float:
+    """Per-sync byte budget: the kept-fraction envelope applied to the
+    full-sync wire volume."""
+    return kept_fraction(cfg, bandwidth_mbps) * total_bytes_full
+
+
+@dataclass
+class SyncPlan:
+    """Static compression plan: one level index per parameter group."""
+    level_idx: Tuple[int, ...]            # per group
+    levels: Tuple[Level, ...]
+    omega: Tuple[float, ...]              # per-pod aggregation weights
+    sync_interval: int                    # H
+
+    def signature(self) -> tuple:
+        """Hashable key for the jit cache."""
+        return (self.level_idx, tuple(self.levels), self.sync_interval)
+
+    def level_of(self, gi: int) -> Level:
+        return self.levels[self.level_idx[gi]]
+
+
+class Scheduler:
+    """Host-side policy engine: telemetry + importance -> SyncPlan."""
+
+    def __init__(self, cfg: ACESyncConfig, group_sizes: Sequence[int],
+                 n_pods: int):
+        self.cfg = cfg
+        self.sizes = list(group_sizes)
+        self.n_pods = n_pods
+        # knapsack/accounting always price levels as if >=2 peers exchange
+        # (a 1-pod run would otherwise see zero cost everywhere and the
+        # solver would degenerate to all-SKIP)
+        self.acct_pods = max(n_pods, 2)
+        self.levels = levels_from_config(cfg)
+        self.full_level = next(l for l in self.levels if l.is_full)
+        self.sync_interval = cfg.sync_interval_init
+        self._full_bytes = sum(
+            self.full_level.wire_bytes(n, self.acct_pods)
+            for n in self.sizes)
+
+    def full_plan(self, omega: Optional[Sequence[float]] = None) -> SyncPlan:
+        """FullSync baseline plan."""
+        fi = self.levels.index(self.full_level)
+        return SyncPlan(tuple([fi] * len(self.sizes)), tuple(self.levels),
+                        self._omega(omega), 1)
+
+    def uniform_topk_plan(self, ratio: float = 0.1,
+                          omega: Optional[Sequence[float]] = None) -> SyncPlan:
+        """Top-k sparsification baseline (static ratio for every group)."""
+        cand = [i for i, l in enumerate(self.levels)
+                if l.is_topk and abs(l.keep_ratio - ratio) < 1e-6]
+        idx = cand[0] if cand else min(
+            (i for i, l in enumerate(self.levels) if l.is_topk),
+            key=lambda i: abs(self.levels[i].keep_ratio - ratio))
+        return SyncPlan(tuple([idx] * len(self.sizes)), tuple(self.levels),
+                        self._omega(omega), 1)
+
+    def plan(self, importance: Sequence[float], bandwidth_mbps: float,
+             omega: Optional[Sequence[float]] = None) -> SyncPlan:
+        """ACE-Sync adaptive plan: knapsack under the eq-(5) budget."""
+        budget = byte_budget(self.cfg, bandwidth_mbps, self._full_bytes)
+        choice = knapsack.solve(list(importance), self.sizes, self.levels,
+                                budget, self.acct_pods)
+        return SyncPlan(tuple(choice), tuple(self.levels),
+                        self._omega(omega), self.sync_interval)
+
+    def adapt_interval(self, divergence: float, div_ref: float) -> int:
+        """Paper eq (9) control: grow H when divergence is small, shrink
+        when it exceeds the threshold band."""
+        cfg = self.cfg
+        rel = divergence / max(div_ref, 1e-12)
+        if rel > cfg.div_high:
+            self.sync_interval = max(1, self.sync_interval // 2)
+        elif rel < cfg.div_low:
+            self.sync_interval = min(cfg.sync_interval_max,
+                                     self.sync_interval * 2)
+        return self.sync_interval
+
+    def _omega(self, omega) -> Tuple[float, ...]:
+        if omega is None:
+            return tuple([1.0 / self.n_pods] * self.n_pods)
+        s = sum(omega)
+        return tuple(w / s for w in omega)
+
+    def plan_wire_bytes(self, plan: SyncPlan, n_pods: int = None) -> int:
+        return knapsack.plan_bytes(plan.level_idx, self.sizes, self.levels,
+                                   n_pods or self.acct_pods)
+
+    def fullsync_wire_bytes(self) -> int:
+        return self._full_bytes

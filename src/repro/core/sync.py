@@ -1,0 +1,260 @@
+"""Hierarchical cloud-edge synchronisation (paper eqs. 7-8) on the pod axis.
+
+Execution context: these functions run INSIDE the outer per-pod shard_map
+(manual over "pod"; "data"/"model" auto).  Compression is performed in a
+NESTED shard_map that is manual over "data"/"model" as well, so every device
+compresses exactly its local shard — no resharding — and exchanges payloads
+only with its pod-peers over the (slow, DCN) "pod" axis:
+
+    g_ef   = g + gamma * e                          (eq 7, error feedback)
+    payload= compress(g_ef_local)                    (level from the plan)
+    agg    = sum_k omega_k * decompress(payload_k)   (eq 8, all_gather 'pod')
+    e'     = g_ef - decompress(own payload)
+
+Levels: FULL (bf16 psum), INT8 (dense int8 + scales all_gather), TOPK_*
+(block-local top-k int8 + uint16 indices + scales all_gather), SKIP (buffer
+locally, transmit nothing).
+
+Without a mesh (unit tests) the same math runs on the single local array
+with n_pods = 1.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import compression as C
+from repro.core.scheduler import SyncPlan
+from repro.models.shardctx import norm_spec
+
+POD_AXIS = "pod"
+
+
+# ---------------------------------------------------------------------------
+# Parameter groups
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class GroupMeta:
+    name: str
+    size: int
+    depth: float          # relative depth in the network, [0, 1]
+    kind: str             # embed | attn | mlp | other
+
+
+_KIND_PATTERNS = (
+    ("embed", "embed"),
+    ("attn", "attn"), ("wq", "attn"), ("wk", "attn"), ("wv", "attn"),
+    ("wo", "attn"), ("mix", "attn"),
+    ("ffn", "mlp"), ("w_gate", "mlp"), ("w_up", "mlp"), ("w_down", "mlp"),
+    ("router", "mlp"),
+)
+
+
+def _kind_of(path: str) -> str:
+    for pat, kind in _KIND_PATTERNS:
+        if pat in path:
+            return kind
+    return "other"
+
+
+def group_metas(param_specs) -> List[GroupMeta]:
+    """Flatten the param pytree into ordered per-leaf groups."""
+    leaves = jax.tree_util.tree_flatten_with_path(param_specs)[0]
+    out = []
+    total = max(len(leaves) - 1, 1)
+    for i, (path, leaf) in enumerate(leaves):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        size = 1
+        for d in leaf.shape:
+            size *= d
+        out.append(GroupMeta(name=name, size=int(size), depth=i / total,
+                             kind=_kind_of(name)))
+    return out
+
+
+def group_sizes(param_specs) -> List[int]:
+    return [g.size for g in group_metas(param_specs)]
+
+
+# ---------------------------------------------------------------------------
+# per-leaf local compress + pod exchange
+# ---------------------------------------------------------------------------
+
+
+def _pod_info(mesh) -> int:
+    if mesh is None or POD_AXIS not in mesh.axis_names:
+        return 1
+    return mesh.shape[POD_AXIS]
+
+
+def _local_topk_sync(flat, e_flat, omega, omega_own, *, k, gamma,
+                     n_pods, block):
+    """flat/e_flat: (n,) local. Returns (agg (n,), new_e (n,))."""
+    n = flat.shape[0]
+    ef = flat + gamma * e_flat
+    blocks = C.pad_to_blocks(ef, block)
+    q, idx, scale = C.topk_compress(blocks, k)
+    own = C.topk_decompress(q, idx, scale, block).reshape(-1)[:n]
+    if n_pods > 1:
+        qs = jax.lax.all_gather(q, POD_AXIS)          # (P, nb, k) int8
+        idxs = jax.lax.all_gather(idx, POD_AXIS)
+        scales = jax.lax.all_gather(scale, POD_AXIS)
+        scales = scales * omega[:, None]              # fold omega into scales
+        nb = q.shape[0]
+        qs2 = qs.transpose(1, 0, 2).reshape(nb, -1)
+        idxs2 = idxs.transpose(1, 0, 2).reshape(nb, -1)
+        sc2 = jnp.repeat(scales.transpose(1, 0), k, axis=1)  # (nb, P*k)
+        vals = qs2.astype(jnp.float32) * sc2
+        dense = jnp.zeros((nb, block), jnp.float32)
+        dense = dense.at[jnp.arange(nb)[:, None],
+                         idxs2.astype(jnp.int32)].add(vals)
+        agg = dense.reshape(-1)[:n]
+    else:
+        agg = own * omega_own
+    new_e = ef - own
+    return agg, new_e
+
+
+def _local_int8_sync(flat, e_flat, omega, omega_own, *, gamma, n_pods,
+                     block):
+    n = flat.shape[0]
+    ef = flat + gamma * e_flat
+    blocks = C.pad_to_blocks(ef, block)
+    q, scale = C.int8_compress(blocks)
+    own = C.int8_decompress(q, scale).reshape(-1)[:n]
+    if n_pods > 1:
+        qs = jax.lax.all_gather(q, POD_AXIS)          # (P, nb, B)
+        scales = jax.lax.all_gather(scale, POD_AXIS) * omega[:, None]
+        dense = jnp.einsum("pnb,pn->nb", qs.astype(jnp.float32), scales)
+        agg = dense.reshape(-1)[:n]
+    else:
+        agg = own * omega_own
+    new_e = ef - own
+    return agg, new_e
+
+
+def _leaf_sync_local(g, e, omega, omega_own, *, level: C.Level, gamma,
+                     n_pods, block):
+    """Fully local per-device leaf sync. g/e: local shard arrays."""
+    shape = g.shape
+    flat = g.reshape(-1).astype(jnp.float32)
+    e_flat = e.reshape(-1).astype(jnp.float32)
+    if level.is_skip:
+        new_e = flat + gamma * e_flat
+        return jnp.zeros_like(flat).reshape(shape).astype(g.dtype), \
+            new_e.reshape(shape).astype(e.dtype)
+    if level.is_full:
+        ef = flat + gamma * e_flat
+        wire = ef.astype(jnp.bfloat16).astype(jnp.float32)
+        if n_pods > 1:
+            agg = jax.lax.psum(wire * omega_own, POD_AXIS)
+        else:
+            agg = wire * omega_own
+        new_e = ef - wire
+        return agg.reshape(shape).astype(g.dtype), \
+            new_e.reshape(shape).astype(e.dtype)
+    if level.is_topk:
+        agg, new_e = _local_topk_sync(flat, e_flat, omega, omega_own,
+                                      k=level.block_k(block), gamma=gamma,
+                                      n_pods=n_pods, block=block)
+    else:
+        agg, new_e = _local_int8_sync(flat, e_flat, omega, omega_own,
+                                      gamma=gamma, n_pods=n_pods,
+                                      block=block)
+    return agg.reshape(shape).astype(g.dtype), \
+        new_e.reshape(shape).astype(e.dtype)
+
+
+# ---------------------------------------------------------------------------
+# tree-level API
+# ---------------------------------------------------------------------------
+
+
+def _auto_axes(mesh):
+    return tuple(a for a in mesh.axis_names if a != POD_AXIS)
+
+
+def sync_tree(tree, errors, plan: SyncPlan, *, mesh, shardings,
+              gamma: float, block: int = C.BLOCK,
+              inside_manual: bool = None):
+    """Compress + hierarchically aggregate a gradient (or delta) pytree.
+
+    Must be called inside the outer per-pod shard_map when the mesh has a
+    pod axis.  ``shardings``: pytree of PartitionSpec matching ``tree`` (the
+    data/model sharding of each leaf).  Returns (agg_tree, new_errors).
+
+    ``inside_manual``: whether we are already inside a shard_map (then the
+    nested shard_map must infer the context mesh); default: pod axis
+    present.
+    """
+    if inside_manual is None:
+        inside_manual = mesh is not None and POD_AXIS in mesh.axis_names
+    n_pods = _pod_info(mesh)
+    omega = jnp.asarray(plan.omega, jnp.float32)
+    if n_pods == 1 and len(plan.omega) == 1:
+        omega = jnp.ones((1,), jnp.float32)  # single pod: identity weight
+    # own pod's aggregation weight, computed at the per-pod level (axis_index
+    # may not re-bind "pod" inside the nested fully-manual shard_map)
+    if n_pods > 1:
+        omega_own = omega[jax.lax.axis_index(POD_AXIS)]
+    else:
+        omega_own = omega[0]
+
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    e_leaves = treedef.flatten_up_to(errors)
+    s_leaves = treedef.flatten_up_to(shardings) if shardings is not None \
+        else [None] * len(leaves)
+    assert len(leaves) == len(plan.level_idx), \
+        (len(leaves), len(plan.level_idx))
+
+    agg_out, err_out = [], []
+    for i, (g, e, spec) in enumerate(zip(leaves, e_leaves, s_leaves)):
+        level = plan.level_of(i)
+        fn = functools.partial(_leaf_sync_local, level=level, gamma=gamma,
+                               n_pods=n_pods, block=block)
+        if mesh is not None:
+            aspec = norm_spec(spec if spec is not None else P(), mesh)
+            # drop the pod axis from specs (manual outside already)
+            aspec = P(*[None if ax == POD_AXIS else ax for ax in aspec])
+            kw = dict(in_specs=(aspec, aspec, P(None), P()),
+                      out_specs=(aspec, aspec),
+                      axis_names=set(_auto_axes(mesh)), check_vma=False)
+            if not inside_manual:
+                kw["mesh"] = mesh  # no surrounding shard_map: pass explicitly
+            inner = jax.shard_map(fn, **kw)
+            agg, new_e = inner(g, e, omega, omega_own)
+        else:
+            agg, new_e = fn(g, e, omega, omega_own)
+        agg_out.append(agg)
+        err_out.append(new_e)
+    return (jax.tree_util.tree_unflatten(treedef, agg_out),
+            jax.tree_util.tree_unflatten(treedef, err_out))
+
+
+def grad_group_stats(tree):
+    """Per-group scalars feeding the importance estimator: (mean|g|, var,
+    norm) each (G,)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    ma, var, nrm = [], [], []
+    for g in leaves:
+        g32 = g.astype(jnp.float32)
+        m = jnp.mean(jnp.abs(g32))
+        v = jnp.var(g32)
+        n = jnp.sqrt(jnp.sum(g32 * g32))
+        ma.append(m); var.append(v); nrm.append(n)
+    return (jnp.stack(ma), jnp.stack(var), jnp.stack(nrm))
+
+
+def wire_bytes_of_plan(plan: SyncPlan, sizes: Sequence[int],
+                       n_pods: int) -> int:
+    """Analytic on-the-wire bytes per device per sync for a plan."""
+    return sum(plan.level_of(i).wire_bytes(n, n_pods)
+               for i, n in enumerate(sizes))

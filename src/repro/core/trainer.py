@@ -1,0 +1,286 @@
+"""Distributed trainer: assembles model + optimizer + ACE-Sync into per-pod
+train steps (shard_map manual over "pod"; "data"/"model" auto under XLA
+SPMD).
+
+Step kinds
+----------
+  grad_sync   loss/grad -> ACE-Sync compressed pod aggregation -> AdamW.
+              The representative fused step (used by the dry-run).
+  local       loss/grad -> AdamW, NO pod traffic (H>1 local steps; pods
+              diverge on purpose — paper's edge-side accumulation).
+  delta_sync  compress + aggregate (theta - anchor) across pods, reset the
+              anchor (ACE-Sync local-update mode / FedAvg with EF).
+  param_avg   plain omega-weighted parameter averaging (FedAvg baseline).
+
+Strategies (paper Table 1): fullsync, topk, fedavg, acesync — all expressed
+as (plan, step-kind schedule) pairs over the same machinery.
+
+State layout: every leaf carries a leading pod-replica dim (n_pods, ...)
+sharded P("pod", ...), which is what lets pods hold *divergent* values
+between syncs while remaining one SPMD program.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import RunConfig
+from repro.core import acesync
+from repro.core import sync as S
+from repro.core import divergence as D
+from repro.core.scheduler import Scheduler, SyncPlan
+from repro.models.shardctx import use_shard_ctx, norm_spec, sharding_for
+from repro.optim import adamw
+
+POD = S.POD_AXIS
+
+
+def _n_pods(mesh: Optional[Mesh]) -> int:
+    if mesh is None or POD not in mesh.axis_names:
+        return 1
+    return mesh.shape[POD]
+
+
+def _pod_prefix(spec: P, rank: int) -> P:
+    """P("pod", *spec) padded with None to the leaf rank."""
+    rest = list(spec) + [None] * (rank - 1 - len(spec))
+    return P(POD, *rest[: rank - 1])
+
+
+class Trainer:
+    def __init__(self, model, run: RunConfig, mesh: Optional[Mesh] = None,
+                 strategy: str = "acesync"):
+        self.model = model
+        self.run = run
+        self.mesh = mesh
+        self.strategy = strategy
+        self.n_pods = _n_pods(mesh)
+        self.param_specs = model.param_specs()
+        self.param_shardings = model.param_shardings()
+        self.metas = S.group_metas(self.param_specs)
+        self.scheduler = Scheduler(run.acesync,
+                                   [m.size for m in self.metas],
+                                   self.n_pods)
+        self._step_cache: Dict = {}
+
+    # ------------------------------------------------------------------
+    # state
+    # ------------------------------------------------------------------
+    def _needs_anchor(self) -> bool:
+        return self.strategy in ("acesync", "fedavg")
+
+    def init_state(self, rng):
+        params = self.model.init(rng)
+        opt = adamw.init_opt_state(params)
+        ace = acesync.init_state(rng, params, self.param_specs,
+                                 self.run.acesync)
+        state = {"params": params, "m": opt["m"], "v": opt["v"],
+                 "step": jnp.zeros((), jnp.int32), "ace": ace}
+        if self._needs_anchor():
+            state["anchor"] = jax.tree.map(jnp.copy, params)
+        # add the pod-replica leading dim
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (self.n_pods,) + x.shape),
+            state)
+
+    def state_specs(self):
+        """ShapeDtypeStruct pytree of the train state (dry-run)."""
+        params = self.param_specs
+        ace = acesync.state_specs(params, self.run.acesync)
+        state = {"params": params, "m": params, "v": params,
+                 "step": jax.ShapeDtypeStruct((), jnp.int32), "ace": ace}
+        if self._needs_anchor():
+            state["anchor"] = params
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((self.n_pods,) + s.shape, s.dtype),
+            state)
+
+    def state_shardings(self):
+        """NamedSharding pytree matching :meth:`state_specs`."""
+        mesh = self.mesh
+        assert mesh is not None
+
+        def leaf_spec(tmpl_spec, leaf):
+            return sharding_for(mesh, _pod_prefix(tmpl_spec,
+                                                  len(leaf.shape)),
+                                shape=leaf.shape)
+
+        params_sh = jax.tree.map(
+            lambda sp, l: leaf_spec(sp, l), self.param_shardings,
+            jax.tree.map(lambda s: jax.ShapeDtypeStruct(
+                (self.n_pods,) + s.shape, s.dtype), self.param_specs),
+            is_leaf=lambda x: isinstance(x, P))
+        specs = self.state_specs()
+
+        def other(leaf):
+            return sharding_for(mesh, _pod_prefix(P(), len(leaf.shape)),
+                                shape=leaf.shape)
+
+        sh = {"params": params_sh, "m": params_sh, "v": params_sh,
+              "step": jax.tree.map(other, specs["step"]),
+              "ace": jax.tree.map(other, specs["ace"])}
+        # error buffers follow the param sharding
+        sh["ace"] = sh["ace"]._replace(errors=params_sh)
+        if self._needs_anchor():
+            sh["anchor"] = params_sh
+        return sh
+
+    def batch_shardings(self, shape):
+        mesh = self.mesh
+        sp = self.model.input_shardings(shape)
+        specs = self.model.input_specs(shape)
+        return jax.tree.map(
+            lambda s, spec: sharding_for(mesh, s, shape=spec.shape),
+            sp, specs, is_leaf=lambda x: isinstance(x, P))
+
+    # ------------------------------------------------------------------
+    # the per-pod step bodies
+    # ------------------------------------------------------------------
+    def _split_pod(self, tree):
+        return jax.tree.map(lambda x: x[0], tree)
+
+    def _join_pod(self, tree):
+        return jax.tree.map(lambda x: x[None], tree)
+
+    def _pmean(self, x):
+        return jax.lax.pmean(x, POD) if self.n_pods > 1 else x
+
+    def _grad_step(self, params, batch):
+        run = self.run
+
+        def loss_fn(p):
+            return self.model.loss(p, batch)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        grads, gnorm = adamw.clip_by_global_norm(grads, run.grad_clip)
+        return loss, grads, gnorm
+
+    def _optimize(self, params, grads, m, v, step):
+        run = self.run
+        lr = adamw.cosine_schedule(step, base_lr=run.lr,
+                                   warmup=run.warmup_steps,
+                                   total=run.total_steps)
+        new_params, opt = adamw.adamw_update(
+            params, grads, {"m": m, "v": v}, step, lr=lr,
+            beta1=run.beta1, beta2=run.beta2, weight_decay=run.weight_decay)
+        return new_params, opt
+
+    def _body_grad_sync(self, plan: SyncPlan, state, batch):
+        st = self._split_pod(state)
+        loss, grads, gnorm = self._grad_step(st["params"], batch)
+        agg, new_ace, metrics = acesync.sync_gradients(
+            grads, st["ace"], plan, mesh=self.mesh,
+            shardings=self.param_shardings, cfg=self.run.acesync)
+        new_params, opt = self._optimize(st["params"], agg, st["m"],
+                                         st["v"], st["step"])
+        new_st = dict(st, params=new_params, m=opt["m"], v=opt["v"],
+                      step=st["step"] + 1, ace=new_ace)
+        metrics = dict(metrics, loss=self._pmean(loss),
+                       grad_norm=self._pmean(gnorm))
+        return self._join_pod(new_st), metrics
+
+    def _body_local(self, plan: SyncPlan, state, batch):
+        st = self._split_pod(state)
+        loss, grads, gnorm = self._grad_step(st["params"], batch)
+        new_params, opt = self._optimize(st["params"], grads, st["m"],
+                                         st["v"], st["step"])
+        new_st = dict(st, params=new_params, m=opt["m"], v=opt["v"],
+                      step=st["step"] + 1)
+        metrics = {"loss": self._pmean(loss),
+                   "grad_norm": self._pmean(gnorm)}
+        return self._join_pod(new_st), metrics
+
+    def _body_delta_sync(self, plan: SyncPlan, state, batch):
+        """Compress/aggregate (theta - anchor); theta <- anchor + agg."""
+        st = self._split_pod(state)
+        delta = jax.tree.map(lambda p, a: (p - a).astype(p.dtype),
+                             st["params"], st["anchor"])
+        div = D.pod_divergence(st["params"], self.mesh)
+        agg, new_ace, metrics = acesync.sync_gradients(
+            delta, st["ace"], plan, mesh=self.mesh,
+            shardings=self.param_shardings, cfg=self.run.acesync)
+        new_params = jax.tree.map(lambda a, d: (a + d).astype(a.dtype),
+                                  st["anchor"], agg)
+        new_ace = new_ace._replace(
+            div_ema=0.9 * st["ace"].div_ema + 0.1 * self._pmean(div))
+        new_st = dict(st, params=new_params,
+                      anchor=jax.tree.map(jnp.copy, new_params),
+                      ace=new_ace)
+        metrics = dict(metrics, divergence=self._pmean(div))
+        return self._join_pod(new_st), metrics
+
+    def _body_param_avg(self, plan: SyncPlan, state, batch):
+        """FedAvg baseline: omega-weighted plain parameter average."""
+        st = self._split_pod(state)
+        omega = jnp.asarray(plan.omega, jnp.float32)
+        div = D.pod_divergence(st["params"], self.mesh)
+
+        def avg(p):
+            if self.n_pods > 1:
+                idx = jax.lax.axis_index(POD)
+                return jax.lax.psum(
+                    p.astype(jnp.float32) * omega[idx], POD).astype(p.dtype)
+            return p
+
+        new_params = jax.tree.map(avg, st["params"])
+        new_st = dict(st, params=new_params)
+        if "anchor" in new_st:
+            new_st["anchor"] = jax.tree.map(jnp.copy, new_params)
+        return self._join_pod(new_st), {"divergence": self._pmean(div)}
+
+    _BODIES = {"grad_sync": _body_grad_sync, "local": _body_local,
+               "delta_sync": _body_delta_sync, "param_avg": _body_param_avg}
+
+    # ------------------------------------------------------------------
+    # compiled step factory
+    # ------------------------------------------------------------------
+    def step_fn(self, plan: SyncPlan, kind: str = "grad_sync") -> Callable:
+        key = (plan.signature(), tuple(plan.omega), kind)
+        if key in self._step_cache:
+            return self._step_cache[key]
+        body = functools.partial(self._BODIES[kind], self, plan)
+        mesh = self.mesh
+
+        if mesh is None:
+            fn = jax.jit(body)
+        elif POD not in mesh.axis_names:
+            # single-pod mesh: no pod axis to shard_map over; the body's
+            # nested data/model shard_maps still apply.
+            def wrapped_sp(state, batch):
+                with use_shard_ctx(mesh):
+                    return body(state, batch)
+            fn = jax.jit(wrapped_sp, donate_argnums=(0,))
+        else:
+            state_specs = self.state_specs()
+            state_in = jax.tree.map(lambda l: P(POD), state_specs)
+
+            def wrapped(state, batch):
+                with use_shard_ctx(mesh, exclude=(POD,)):
+                    return body(state, batch)
+
+            smapped = jax.shard_map(
+                wrapped,
+                mesh=mesh,
+                in_specs=(state_in, P(POD)),
+                out_specs=(state_in, P()),
+                axis_names={POD}, check_vma=False)
+            fn = jax.jit(smapped, donate_argnums=(0,))
+        self._step_cache[key] = fn
+        return fn
+
+    # convenience plans per strategy ------------------------------------
+    def default_plan(self, importance=None, bandwidth_mbps: float = 50.0,
+                     omega=None) -> SyncPlan:
+        if self.strategy == "fullsync":
+            return self.scheduler.full_plan(omega)
+        if self.strategy == "topk":
+            return self.scheduler.uniform_topk_plan(0.1, omega)
+        if self.strategy == "fedavg":
+            return self.scheduler.full_plan(omega)
+        imp = (importance if importance is not None
+               else [1.0] * len(self.metas))
+        return self.scheduler.plan(imp, bandwidth_mbps, omega)

@@ -1,0 +1,74 @@
+"""Telemetry traces for the cloud-edge simulation (paper section 4.1-4.2).
+
+Generates per-device/per-pod bandwidth and latency traces matching the
+paper's testbed: bandwidth fluctuating in 5-200 Mbps, latency 10-300 ms,
+plus jitter and straggle factors.  Traces are deterministic in (seed,
+device, step) so simulated runs are reproducible and restart-safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List
+
+import numpy as np
+
+BW_MIN, BW_MAX = 5.0, 200.0         # Mbps, paper section 4.2
+LAT_MIN, LAT_MAX = 10.0, 300.0      # ms
+
+
+@dataclasses.dataclass
+class DeviceProfile:
+    device_id: int
+    base_bandwidth: float     # Mbps
+    base_latency: float       # ms
+    jitter: float             # 0..1 relative fluctuation
+    straggle: float           # >= 1.0 slowdown factor
+
+
+def make_profiles(n_devices: int, seed: int = 0) -> List[DeviceProfile]:
+    rng = np.random.RandomState(seed)
+    profiles = []
+    for i in range(n_devices):
+        # log-uniform bandwidth within the paper's range; heterogeneous tiers
+        bw = float(np.exp(rng.uniform(math.log(BW_MIN), math.log(BW_MAX))))
+        lat = float(rng.uniform(LAT_MIN, LAT_MAX))
+        jit = float(rng.uniform(0.05, 0.4))
+        straggle = float(1.0 + rng.exponential(0.15))
+        profiles.append(DeviceProfile(i, bw, lat, jit, straggle))
+    return profiles
+
+
+def bandwidth_at(profile: DeviceProfile, step: int, seed: int = 0) -> float:
+    """Smooth + bursty bandwidth fluctuation at a given step (Mbps)."""
+    phase = (profile.device_id * 997 + seed * 31) % 1000
+    slow = math.sin((step + phase) / 50.0) * 0.5 * profile.jitter
+    rng = np.random.RandomState((seed * 131 + profile.device_id * 7
+                                 + step) % (2 ** 31 - 1))
+    burst = rng.uniform(-profile.jitter, profile.jitter) * 0.5
+    bw = profile.base_bandwidth * (1.0 + slow + burst)
+    return float(np.clip(bw, BW_MIN, BW_MAX))
+
+
+def latency_at(profile: DeviceProfile, step: int, seed: int = 0) -> float:
+    rng = np.random.RandomState((seed * 173 + profile.device_id * 13
+                                 + step) % (2 ** 31 - 1))
+    lat = profile.base_latency * (1.0 + rng.uniform(0, profile.jitter))
+    return float(np.clip(lat, LAT_MIN, LAT_MAX))
+
+
+def snapshot(profiles: List[DeviceProfile], step: int,
+             seed: int = 0) -> List[Dict]:
+    """Telemetry dicts for clustering / scheduling at one step."""
+    return [{
+        "bandwidth_mbps": bandwidth_at(p, step, seed),
+        "latency_ms": latency_at(p, step, seed),
+        "jitter": p.jitter,
+        "straggle": p.straggle,
+    } for p in profiles]
+
+
+def transfer_seconds(n_bytes: float, bandwidth_mbps: float,
+                     latency_ms: float) -> float:
+    """Wall-clock for one transfer on a WAN-ish link."""
+    return latency_ms / 1e3 + n_bytes * 8 / (bandwidth_mbps * 1e6)

@@ -1,0 +1,65 @@
+"""Public jit'd wrappers for the compression kernels.
+
+On TPU these dispatch to the compiled Pallas kernels; on CPU (this
+container, and any unit-test environment) they run the same kernel bodies
+under ``interpret=True``.  ``use_pallas=False`` falls back to the pure-jnp
+oracle — the path the CPU dry-run lowers, keeping kernel code out of the
+roofline HLO while the math stays identical.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.topk_compress import ef_topk_select, LANES, ROWS
+from repro.kernels.quantize import quantize_int8_fused, dequantize_int8
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def pad_rows(flat: jax.Array):
+    """(n,) -> (rows, LANES) padded to a ROWS multiple."""
+    n = flat.shape[0]
+    per = ROWS * LANES
+    nb = (n + per - 1) // per
+    pad = nb * per - n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(nb * ROWS, LANES), n
+
+
+def ef_topk(g_flat, e_flat, *, gamma: float, k: int, use_pallas: bool = True):
+    """Fused error-feedback + block top-k on flat arrays.
+    Returns (selected_dense (n,), residual (n,))."""
+    g2, n = pad_rows(g_flat.astype(jnp.float32))
+    e2, _ = pad_rows(e_flat.astype(jnp.float32))
+    if use_pallas:
+        sel, res = ef_topk_select(g2, e2, gamma=gamma, k=k,
+                                  interpret=_on_cpu())
+    else:
+        sel, res = ref.ef_topk_select_ref(g2, e2, gamma=gamma, k=k)
+    return sel.reshape(-1)[:n], res.reshape(-1)[:n]
+
+
+def quantize_int8(x_flat, *, use_pallas: bool = True):
+    """Returns (q (rows, LANES) int8, scales (rows,1) f32, residual (n,),
+    n)."""
+    x2, n = pad_rows(x_flat.astype(jnp.float32))
+    if use_pallas:
+        q, s, r = quantize_int8_fused(x2, interpret=_on_cpu())
+    else:
+        q, s, r = ref.quantize_int8_ref(x2)
+    return q, s, r.reshape(-1)[:n], n
+
+
+def dequant_int8(q, scales, n, *, use_pallas: bool = True):
+    if use_pallas:
+        out = dequantize_int8(q, scales, interpret=_on_cpu())
+    else:
+        out = ref.dequantize_int8_ref(q, scales)
+    return out.reshape(-1)[:n]

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels (bit-exact same math, no
+pallas_call) — the ground truth for the per-kernel allclose sweeps."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk_compress import _select_body, LANES
+from repro.kernels.quantize import _quant_body
+
+
+def ef_topk_select_ref(g, e, *, gamma: float, k: int):
+    ef = g.astype(jnp.float32) + gamma * e.astype(jnp.float32)
+    mask, _ = _select_body(ef, k)
+    sel = ef * mask
+    return sel, ef - sel
+
+
+def quantize_int8_ref(x):
+    x = x.astype(jnp.float32)
+    q, scale = _quant_body(x)
+    return q.astype(jnp.int8), scale, x - q * scale
+
+
+def dequantize_int8_ref(q, scales):
+    return q.astype(jnp.float32) * scales
+
+
+def exact_topk_mask(x, k):
+    """Exact per-row top-k mask (what sync.py's lax.top_k path selects) —
+    used to bound the bisection kernel's approximation in property tests."""
+    mag = jnp.abs(x)
+    vals, _ = jax.lax.top_k(mag, k)
+    thr = vals[..., -1:]
+    return (mag >= thr).astype(x.dtype)

@@ -1,0 +1,215 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes, collect memory / cost / collective evidence.
+
+MUST set the host-device override before ANY other import touches jax."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import time
+import traceback
+from collections import Counter
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, LONG_CONTEXT_ARCHS, cells
+from repro.configs.base import RunConfig
+from repro.core.trainer import Trainer
+from repro.launch import mesh as mesh_lib
+from repro.models.registry import build_model
+from repro.models.flops import model_flops
+from repro.models.shardctx import use_shard_ctx, sharding_for, norm_spec
+
+
+def _with_sharding(specs, shardings_tree, mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct pytree."""
+    def attach(s, sh):
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh)
+    return jax.tree.map(attach, specs, shardings_tree)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               strategy: str = "acesync", run_overrides: dict = None):
+    """Returns (lowered, meta) for one cell."""
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    run = RunConfig(model=cfg, shape=shape, multi_pod=multi_pod,
+                    **(run_overrides or {}))
+    model = build_model(cfg, run)
+
+    if shape.kind == "train":
+        trainer = Trainer(model, run, mesh=mesh, strategy=strategy)
+        plan = trainer.default_plan(bandwidth_mbps=50.0)
+        fn = trainer.step_fn(plan, "grad_sync")
+        state = _with_sharding(trainer.state_specs(),
+                               trainer.state_shardings(), mesh)
+        batch = _with_sharding(model.input_specs(shape),
+                               trainer.batch_shardings(shape), mesh)
+        lowered = fn.lower(state, batch)
+        extra = {"plan": [plan.levels[i].name for i in plan.level_idx],
+                 "strategy": strategy}
+    else:
+        # serving: bf16 params, no pod-replica dim
+        isP = lambda x: isinstance(x, jax.sharding.PartitionSpec)  # noqa
+        pspecs = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16),
+            model.param_specs())
+        pshard = jax.tree.map(
+            lambda sp, s: sharding_for(mesh, sp, shape=s.shape),
+            model.param_shardings(), pspecs, is_leaf=isP)
+        params = _with_sharding(pspecs, pshard, mesh)
+        bspecs = model.input_specs(shape)
+        bshard = jax.tree.map(
+            lambda sp, s: sharding_for(mesh, sp, shape=s.shape),
+            model.input_shardings(shape), bspecs, is_leaf=isP)
+        batch = _with_sharding(bspecs, bshard, mesh)
+
+        with use_shard_ctx(mesh):
+            if shape.kind == "prefill":
+                lowered = jax.jit(model.prefill).lower(params, batch)
+            else:  # decode
+                B = shape.global_batch
+                cspecs = model.cache_specs(B, shape.cache_len)
+                cshard = jax.tree.map(
+                    lambda sp, s: sharding_for(mesh, sp, shape=s.shape),
+                    model.cache_shardings(), cspecs, is_leaf=isP)
+                caches = _with_sharding(cspecs, cshard, mesh)
+                clen = jax.ShapeDtypeStruct(
+                    (), jnp.int32, sharding=sharding_for(
+                        mesh, jax.sharding.PartitionSpec()))
+                lowered = jax.jit(model.decode_step,
+                                  donate_argnums=(1,)).lower(
+                    params, caches, clen, batch["tokens"])
+        extra = {"mode": shape.kind}
+    return lowered, mesh, model, run, extra
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             strategy: str = "acesync", out_dir: str = None,
+             run_overrides: dict = None) -> dict:
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__),
+                                    "..", "..", ".."))
+    from benchmarks import hlo_cost
+
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "strategy": strategy, "ok": False}
+    try:
+        lowered, mesh, model, run, extra = lower_cell(
+            arch, shape_name, multi_pod=multi_pod, strategy=strategy,
+            run_overrides=run_overrides)
+        rec.update(extra)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+
+        ma = compiled.memory_analysis()
+        mem = {}
+        if ma is not None:
+            mem = {k: int(getattr(ma, k, 0)) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "alias_size_in_bytes",
+                "generated_code_size_in_bytes")}
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0] if ca else {}
+        raw_cost = {"flops": float(ca.get("flops", 0.0)),
+                    "bytes": float(ca.get("bytes accessed", 0.0))} if ca \
+            else {}
+
+        txt = compiled.as_text()
+        mesh_shape = tuple(mesh.shape.values())
+        axis_names = tuple(mesh.axis_names)
+        rep = hlo_cost.analyze(txt, mesh_shape, axis_names)
+        n_chips = 1
+        for d in mesh_shape:
+            n_chips *= d
+
+        shape_cfg = SHAPES[shape_name]
+        mf = model_flops(ARCHS[arch], shape_cfg)
+        rec.update({
+            "ok": True,
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "n_chips": n_chips,
+            "memory": mem,
+            "bytes_per_device": int(sum(mem.get(k, 0) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes"))),
+            "raw_cost_analysis": raw_cost,
+            "walker": {
+                "flops_per_device": rep.flops,
+                "bytes_per_device": rep.bytes_accessed,
+                "collective_bytes_per_device": dict(rep.collective_bytes),
+                "collective_counts": dict(rep.collective_count),
+                "op_flops": dict(rep.op_flops),
+            },
+            "model_flops_global": mf,
+            "hlo_flops_global": rep.flops * n_chips,
+            "useful_ratio": (mf / (rep.flops * n_chips)
+                             if rep.flops else None),
+        })
+    except Exception as e:  # noqa
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{rec['mesh']}_{arch}_{shape_name}_{strategy}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--strategy", default="acesync",
+                    choices=["acesync", "fullsync", "topk", "fedavg"])
+    ap.add_argument("--out", default="benchmarks/results")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--q-chunk", type=int, default=None)
+    ap.add_argument("--kv-chunk", type=int, default=None)
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.remat:
+        overrides["remat"] = args.remat
+    if args.q_chunk:
+        overrides["q_chunk"] = args.q_chunk
+    if args.kv_chunk:
+        overrides["kv_chunk"] = args.kv_chunk
+
+    todo = []
+    if args.arch and args.shape:
+        todo = [(args.arch, args.shape)]
+    else:
+        todo = cells()
+        if args.arch:
+            todo = [(a, s) for a, s in todo if a == args.arch]
+
+    for arch, shape in todo:
+        rec = run_cell(arch, shape, multi_pod=args.multi_pod,
+                       strategy=args.strategy, out_dir=args.out,
+                       run_overrides=overrides or None)
+        status = "OK" if rec.get("ok") else f"FAIL {rec.get('error')}"
+        print(f"[{rec['mesh']}] {arch} x {shape} ({args.strategy}): {status}"
+              f"  compile={rec.get('compile_s')}s"
+              f"  mem/dev={rec.get('bytes_per_device', 0)/1e9:.2f}GB",
+              flush=True)
+        if rec.get("ok"):
+            cb = rec["walker"]["collective_bytes_per_device"]
+            print(f"    flops/dev={rec['walker']['flops_per_device']:.3e}"
+                  f"  bytes/dev={rec['walker']['bytes_per_device']:.3e}"
+                  f"  collectives={ {k: f'{v:.2e}' for k, v in cb.items()} }",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,276 @@
+"""Encoder-decoder transformer (seamless-m4t-medium backbone).
+
+Per the assignment spec, the audio frontend is a STUB: ``input_specs``
+provides precomputed frame embeddings (B, F, d_model) for the encoder; the
+decoder is a standard causal transformer with cross-attention.  Frame count
+F = seq_len // audio_downsample for train/prefill shapes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models.shardctx import constrain, batch_spec, seq_spec
+
+
+class EncDecTransformer:
+    """Enc-dec model. Model-API compatible; decode uses a self-attention ring
+    cache plus per-layer cached cross-attention K/V."""
+
+    def __init__(self, cfg: ModelConfig, run: Optional[RunConfig] = None):
+        self.cfg = cfg
+        self.run = run
+        self.dtype = jnp.dtype(cfg.dtype)
+        assert cfg.n_enc_layers > 0
+        self.q_chunk = run.q_chunk if run else 2048
+        self.kv_chunk = run.kv_chunk if run else 1024
+
+    def frames_len(self, shape: ShapeConfig) -> int:
+        return max(64, shape.seq_len // self.cfg.audio_downsample)
+
+    # ---- params ----
+    def _enc_block_init(self, rng, n):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(rng)
+        return {"attn": L.attn_init(k1, cfg, n),
+                "ffn": L.mlp_init(k2, cfg, n),
+                "ln1": jnp.zeros((n, cfg.d_model), jnp.float32),
+                "ln2": jnp.zeros((n, cfg.d_model), jnp.float32)}
+
+    def _dec_block_init(self, rng, n):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(rng, 3)
+        return {"self_attn": L.attn_init(k1, cfg, n),
+                "cross_attn": L.attn_init(k2, cfg, n),
+                "ffn": L.mlp_init(k3, cfg, n),
+                "ln1": jnp.zeros((n, cfg.d_model), jnp.float32),
+                "ln2": jnp.zeros((n, cfg.d_model), jnp.float32),
+                "ln3": jnp.zeros((n, cfg.d_model), jnp.float32)}
+
+    def init(self, rng):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(rng, 3)
+        return {"embed": L.embed_init(k3, cfg),
+                "enc_blocks": self._enc_block_init(k1, cfg.n_enc_layers),
+                "dec_blocks": self._dec_block_init(k2, cfg.n_layers),
+                "enc_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+                "final_norm": jnp.zeros((cfg.d_model,), jnp.float32)}
+
+    def param_specs(self):
+        cfg = self.cfg
+        pd = jnp.dtype(cfg.param_dtype)
+        sd = jax.ShapeDtypeStruct
+
+        def attn_s(n):
+            return {k: sd(s, pd) for k, s in L.attn_specs(cfg, n).items()}
+
+        def mlp_s(n):
+            return {k: sd(s, pd) for k, s in L.mlp_specs(cfg, n).items()}
+
+        ne, nd = cfg.n_enc_layers, cfg.n_layers
+        return {
+            "embed": sd((cfg.padded_vocab, cfg.d_model), pd),
+            "enc_blocks": {"attn": attn_s(ne), "ffn": mlp_s(ne),
+                           "ln1": sd((ne, cfg.d_model), pd),
+                           "ln2": sd((ne, cfg.d_model), pd)},
+            "dec_blocks": {"self_attn": attn_s(nd), "cross_attn": attn_s(nd),
+                           "ffn": mlp_s(nd),
+                           "ln1": sd((nd, cfg.d_model), pd),
+                           "ln2": sd((nd, cfg.d_model), pd),
+                           "ln3": sd((nd, cfg.d_model), pd)},
+            "enc_norm": sd((cfg.d_model,), pd),
+            "final_norm": sd((cfg.d_model,), pd),
+        }
+
+    def param_shardings(self):
+        cfg = self.cfg
+        a, m = L.attn_shardings(cfg), L.mlp_shardings(cfg)
+        ln = P(None, None)
+        return {
+            "embed": P("model", None),
+            "enc_blocks": {"attn": a, "ffn": m, "ln1": ln, "ln2": ln},
+            "dec_blocks": {"self_attn": a, "cross_attn": a, "ffn": m,
+                           "ln1": ln, "ln2": ln, "ln3": ln},
+            "enc_norm": P(None),
+            "final_norm": P(None),
+        }
+
+    # ---- cache ----
+    def init_cache(self, B, S, F=None):
+        return self._cache(B, S, F or S // self.cfg.audio_downsample,
+                           lambda s, d: jnp.zeros(s, d))
+
+    def cache_specs(self, B, S, F=None):
+        return self._cache(B, S, F or max(64, S // self.cfg.audio_downsample),
+                           jax.ShapeDtypeStruct)
+
+    def _cache(self, B, S, F, make):
+        cfg = self.cfg
+        nd = cfg.n_layers
+        kv = (nd, B, S, cfg.n_kv_heads, cfg.head_dim)
+        ckv = (nd, B, F, cfg.n_kv_heads, cfg.head_dim)
+        return {"self": {"k": make(kv, self.dtype), "v": make(kv, self.dtype)},
+                "cross": {"k": make(ckv, self.dtype),
+                          "v": make(ckv, self.dtype)}}
+
+    def cache_shardings(self):
+        sp = P(None, ("pod", "data"), "model", None, None)
+        return {"self": {"k": sp, "v": sp}, "cross": {"k": sp, "v": sp}}
+
+    # ---- inputs ----
+    def input_specs(self, shape: ShapeConfig):
+        B, it = shape.global_batch, jnp.int32
+        F = self.frames_len(shape)
+        fr = jax.ShapeDtypeStruct((B, F, self.cfg.d_model), jnp.float32)
+        if shape.kind == "train":
+            return {"frames": fr,
+                    "tokens": jax.ShapeDtypeStruct((B, shape.seq_len), it),
+                    "labels": jax.ShapeDtypeStruct((B, shape.seq_len), it)}
+        if shape.kind == "prefill":
+            return {"frames": fr,
+                    "tokens": jax.ShapeDtypeStruct((B, shape.seq_len), it)}
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), it)}
+
+    def input_shardings(self, shape: ShapeConfig):
+        sp = {"tokens": batch_spec(None)}
+        if shape.kind != "decode":
+            sp["frames"] = batch_spec(None, None)
+        if shape.kind == "train":
+            sp["labels"] = batch_spec(None)
+        return sp
+
+    def make_batch(self, rng, shape: ShapeConfig):
+        specs = self.input_specs(shape)
+        keys = jax.random.split(rng, len(specs))
+        out = {}
+        for k0, (name, s) in zip(keys, sorted(specs.items())):
+            if s.dtype == jnp.int32:
+                out[name] = jax.random.randint(k0, s.shape, 0,
+                                               self.cfg.vocab_size, s.dtype)
+            else:
+                out[name] = jax.random.normal(k0, s.shape, s.dtype)
+        return out
+
+    # ---- compute ----
+    def _remat(self, f):
+        if self.run is None or self.run.remat == "none":
+            return f
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    def encode(self, params, frames, remat=False):
+        cfg = self.cfg
+        x = frames.astype(self.dtype)
+        x = constrain(x, seq_spec(None))
+        B, F, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(F)[None], (B, F))
+
+        def body(x, blk):
+            h = L.rms_norm(x, blk["ln1"], cfg.rms_eps)
+            h, _ = L.attn_apply(blk["attn"], h, cfg, positions=positions,
+                                causal=False, q_chunk=self.q_chunk,
+                                kv_chunk=self.kv_chunk)
+            x = x + h
+            h = L.rms_norm(x, blk["ln2"], cfg.rms_eps)
+            return x + L.mlp_apply(blk["ffn"], h), None
+
+        fn = self._remat(body) if remat else body
+        x, _ = jax.lax.scan(fn, x, params["enc_blocks"])
+        return L.rms_norm(x, params["enc_norm"], cfg.rms_eps)
+
+    def _decoder(self, params, x, mem, *, positions, caches=None,
+                 cache_len=None, remat=False):
+        """mem: encoder output (B, F, D) for train/prefill; None for decode
+        (cross K/V comes from the cache)."""
+        cfg = self.cfg
+        decode = mem is None
+
+        def body(x, sl):
+            blk, cache = sl
+            h = L.rms_norm(x, blk["ln1"], cfg.rms_eps)
+            c_self = cache["self"] if cache is not None else None
+            h, nc_self = L.attn_apply(blk["self_attn"], h, cfg,
+                                      positions=positions, causal=True,
+                                      cache=c_self, cache_len=cache_len,
+                                      q_chunk=self.q_chunk,
+                                      kv_chunk=self.kv_chunk)
+            x = x + h
+            h = L.rms_norm(x, blk["ln2"], cfg.rms_eps)
+            if decode:
+                # cross-attention against cached K/V
+                ca = blk["cross_attn"]
+                B = x.shape[0]
+                q = (h @ ca["wq"].astype(h.dtype)).reshape(
+                    B, 1, cfg.n_heads, cfg.head_dim)
+                F = cache["cross"]["k"].shape[1]
+                o = L.decode_attention(q, cache["cross"]["k"].astype(h.dtype),
+                                       cache["cross"]["v"].astype(h.dtype),
+                                       jnp.int32(F - 1))
+                h = o.reshape(B, 1, -1) @ ca["wo"].astype(h.dtype)
+                nc_cross = cache["cross"]
+            else:
+                h = L.cross_attn_apply(blk["cross_attn"], h, mem, cfg,
+                                       q_chunk=self.q_chunk,
+                                       kv_chunk=self.kv_chunk)
+                if cache is not None:
+                    ca = blk["cross_attn"]
+                    B, F, _ = mem.shape
+                    ck = (mem @ ca["wk"].astype(mem.dtype)).reshape(
+                        B, F, cfg.n_kv_heads, cfg.head_dim)
+                    cv = (mem @ ca["wv"].astype(mem.dtype)).reshape(
+                        B, F, cfg.n_kv_heads, cfg.head_dim)
+                    nc_cross = {"k": ck.astype(cache["cross"]["k"].dtype),
+                                "v": cv.astype(cache["cross"]["v"].dtype)}
+                else:
+                    nc_cross = None
+            x = x + h
+            h = L.rms_norm(x, blk["ln3"], cfg.rms_eps)
+            x = x + L.mlp_apply(blk["ffn"], h)
+            nc = ({"self": nc_self, "cross": nc_cross}
+                  if cache is not None else None)
+            return x, nc
+
+        fn = self._remat(body) if remat else body
+        x, new_caches = jax.lax.scan(fn, x, (params["dec_blocks"], caches))
+        return L.rms_norm(x, params["final_norm"], cfg.rms_eps), new_caches
+
+    def forward(self, params, batch):
+        mem = self.encode(params, batch["frames"], remat=True)
+        x = L.embed_lookup(params["embed"], batch["tokens"], self.cfg,
+                           self.dtype)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x, _ = self._decoder(params, x, mem, positions=positions, remat=True)
+        return x
+
+    def loss(self, params, batch):
+        x = self.forward(params, batch)
+        return L.xent_loss_chunked(x, params["embed"], batch["labels"],
+                                   self.cfg)
+
+    def prefill(self, params, batch, cache_len=None):
+        mem = self.encode(params, batch["frames"])
+        x = L.embed_lookup(params["embed"], batch["tokens"], self.cfg,
+                           self.dtype)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        caches = self.init_cache(B, cache_len or S, mem.shape[1])
+        x, caches = self._decoder(params, x, mem, positions=positions,
+                                  caches=caches)
+        logits = L.lm_logits(x[:, -1:, :], params["embed"], self.cfg)
+        return logits, caches
+
+    def decode_step(self, params, caches, cache_len, tokens):
+        x = L.embed_lookup(params["embed"], tokens, self.cfg, self.dtype)
+        B = x.shape[0]
+        positions = jnp.broadcast_to(cache_len[None, None], (B, 1))
+        x, new_caches = self._decoder(params, x, None, positions=positions,
+                                      caches=caches, cache_len=cache_len)
+        logits = L.lm_logits(x, params["embed"], self.cfg)
+        return logits, new_caches

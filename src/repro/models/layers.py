@@ -1,0 +1,410 @@
+"""Shared pure-JAX building blocks: norms, RoPE, flash-style chunked
+attention (train/prefill), flash-decode attention, SwiGLU MLP, embeddings and
+a chunked vocab-parallel cross-entropy.
+
+No flax — parameters are plain pytrees of jnp arrays; every block is a pair
+(init_fn, apply_fn) operating on explicit param dicts so layers can be
+stacked along a leading L axis and driven by ``lax.scan``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.shardctx import (constrain, batch_spec, seq_spec,
+                                   BATCH_AXES)
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, H, Dh); positions: (..., S) int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      window: Optional[int] = None,
+                      logit_softcap: Optional[float] = None,
+                      q_chunk: int = 2048, kv_chunk: int = 1024,
+                      q_offset: int = 0):
+    """Online-softmax attention; never materialises the (Sq, Sk) matrix.
+
+    q: (B, Sq, H, Dh);  k, v: (B, Sk, KV, Dh)  with H % KV == 0 (GQA).
+    Returns (B, Sq, H, Dh).  ``q_offset`` is the absolute position of q[0]
+    relative to k[0] (prefill: 0; not used for decode — see
+    :func:`decode_attention`).
+    """
+    B, Sq, H, Dh = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    assert nq * q_chunk == Sq and nk * kv_chunk == Sk, (Sq, Sk, q_chunk, kv_chunk)
+
+    scale = 1.0 / math.sqrt(Dh)
+    # repeat KV up to H so the head dim stays shardable over "model" even
+    # when KV < mesh axis (GQA); per-device the repeat touches only the
+    # local head shard
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    k = constrain(k, batch_spec(None, "model", None))
+    v = constrain(v, batch_spec(None, "model", None))
+    qr = q.reshape(B, nq, q_chunk, H, Dh)
+    kr = k.reshape(B, nk, kv_chunk, H, Dh)
+    vr = v.reshape(B, nk, kv_chunk, H, Dh)
+
+    # NOTE (§Perf hillclimb, refuted): a triangle pair-list scan that skips
+    # fully-masked (q, kv) chunk pairs cut HLO FLOPs 45% on 32k prefill but
+    # XLA SPMD turned the accumulator dynamic-slices into per-step
+    # all-gathers (>100x collective bytes) — net regression; reverted. The
+    # right home for causal block-skipping is a Pallas flash kernel with a
+    # static grid (future work).
+    def q_step(_, qi):
+        qc, qidx = qi  # (B, q_chunk, H, Dh), scalar chunk index
+        q_pos = q_offset + qidx * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kc, vc, kidx = ki
+            k_pos = kidx * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqhd,bshd->bhqs", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            s = softcap(s, logit_softcap)
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            s = jnp.where(mask, s, NEG_INF)
+            s = constrain(s, batch_spec("model", None, None))
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhqs,bshd->bhqd", p.astype(q.dtype), vc,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kr.transpose(1, 0, 2, 3, 4), vr.transpose(1, 0, 2, 3, 4),
+             jnp.arange(nk)))
+        l = jnp.maximum(l, 1e-20)
+        o = (acc / l[..., None]).astype(q.dtype)  # (B, H, q_chunk, Dh)
+        return None, o.transpose(0, 2, 1, 3)      # (B, q_chunk, H, Dh)
+
+    _, o = jax.lax.scan(q_step, None,
+                        (qr.transpose(1, 0, 2, 3, 4), jnp.arange(nq)))
+    # o: (nq, B, q_chunk, H, Dh) -> (B, Sq, H, Dh)
+    o = o.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, Dh)
+    return o
+
+
+def ring_slot_positions(t, alloc: int):
+    """Absolute position held by each ring-cache slot after the token at
+    position ``t`` has been written (slot j holds the latest position p <= t
+    with p % alloc == j; negative => never written)."""
+    j = jnp.arange(alloc)
+    return t - jnp.mod(t - j, alloc)
+
+
+def decode_attention(q, k_cache, v_cache, t, *,
+                     window: Optional[int] = None,
+                     logit_softcap: Optional[float] = None):
+    """Single-token attention over a (possibly sequence-sharded) KV cache.
+
+    q: (B, 1, H, Dh); k_cache/v_cache: (B, S_alloc, KV, Dh) ring caches;
+    ``t``: scalar int32 absolute position of the current token (already
+    written into the cache).  The softmax over the cache axis is written with
+    global ops so XLA's SPMD partitioner inserts the flash-decode style
+    max/sum combines when that axis is sharded over "model".
+    """
+    B, _, H, Dh = q.shape
+    _, S, KV, _ = k_cache.shape
+    G = H // KV
+    scale = 1.0 / math.sqrt(Dh)
+    qr = q.reshape(B, KV, G, Dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = softcap(s, logit_softcap)
+    pos = ring_slot_positions(t, S)
+    mask = (pos >= 0) & (pos <= t)
+    if window is not None:
+        mask &= pos > (t - window)
+    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, Dh).astype(q.dtype)
+
+
+def ring_write_decode(cache, kv, t):
+    """Write one token (B, 1, KV, Dh) into a ring cache at slot t % alloc."""
+    alloc = cache.shape[1]
+    return jax.lax.dynamic_update_slice(
+        cache, kv.astype(cache.dtype), (0, jnp.mod(t, alloc), 0, 0))
+
+
+def ring_write_prefill(cache, kv):
+    """Write a full prefill (B, S, KV, Dh) into a ring cache of alloc W.
+
+    If S <= W this is a plain front write (slot j == position j).  Otherwise
+    only the last W positions are kept, placed so position p sits in slot
+    p % W (consistent with :func:`ring_slot_positions`).
+    """
+    B, S, KV, Dh = kv.shape
+    W = cache.shape[1]
+    if S <= W:
+        return jax.lax.dynamic_update_slice(cache, kv.astype(cache.dtype),
+                                            (0, 0, 0, 0))
+    j = jnp.arange(W)
+    src = (S - W) + jnp.mod(j - (S - W), W)  # position stored in slot j
+    return jnp.take(kv, src, axis=1).astype(cache.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (init + apply, train/prefill/decode)
+# ---------------------------------------------------------------------------
+
+
+def attn_init(rng, cfg, n_layers: int):
+    D, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k = jax.random.split(rng, 4)
+    s = lambda *sh: jnp.asarray(1.0 / math.sqrt(sh[-2]), jnp.float32)
+    def init(key, *sh):
+        return (jax.random.normal(key, sh, jnp.float32)
+                * (1.0 / math.sqrt(sh[-2])))
+    p = {
+        "wq": init(k[0], n_layers, D, H * Dh),
+        "wk": init(k[1], n_layers, D, KV * Dh),
+        "wv": init(k[2], n_layers, D, KV * Dh),
+        "wo": init(k[3], n_layers, H * Dh, D),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((n_layers, Dh), jnp.float32)
+        p["k_norm"] = jnp.zeros((n_layers, Dh), jnp.float32)
+    return p
+
+
+def attn_specs(cfg, n_layers: int):
+    D, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    shapes = {
+        "wq": (n_layers, D, H * Dh), "wk": (n_layers, D, KV * Dh),
+        "wv": (n_layers, D, KV * Dh), "wo": (n_layers, H * Dh, D),
+    }
+    if cfg.qk_norm:
+        shapes["q_norm"] = (n_layers, Dh)
+        shapes["k_norm"] = (n_layers, Dh)
+    return shapes
+
+
+def attn_shardings(cfg):
+    # column-parallel in, row-parallel out; FSDP over "data" on the other dim
+    sp = {
+        "wq": P(None, "data", "model"), "wk": P(None, "data", "model"),
+        "wv": P(None, "data", "model"), "wo": P(None, "model", "data"),
+    }
+    if cfg.qk_norm:
+        sp["q_norm"] = P(None, None)
+        sp["k_norm"] = P(None, None)
+    return sp
+
+
+def attn_apply(p, x, cfg, *, positions, causal=True, window=None,
+               cache=None, cache_len=None, q_chunk=2048, kv_chunk=1024):
+    """x: (B, S, D). cache: dict(k,v) of (B, Smax, KV, Dh) or None.
+    Returns (y, new_cache)."""
+    B, S, D = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, H, Dh)
+    k = (x @ p["wk"].astype(dt)).reshape(B, S, KV, Dh)
+    v = (x @ p["wv"].astype(dt)).reshape(B, S, KV, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.rms_eps)
+        k = rms_norm(k, p["k_norm"], cfg.rms_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, batch_spec(None, "model", None))
+    # unrepeated K/V are replicated over "model" explicitly (KV heads rarely
+    # divide the axis); the GQA repeat inside chunked_attention then slices
+    # locally instead of triggering involuntary full rematerialisation
+    k = constrain(k, batch_spec(None, None, None))
+    v = constrain(v, batch_spec(None, None, None))
+
+    new_cache = None
+    if cache is not None and cache_len is not None and S == 1:
+        # decode: append (ring write) then attend over the cache
+        kc = ring_write_decode(cache["k"], k, cache_len)
+        vc = ring_write_decode(cache["v"], v, cache_len)
+        new_cache = {"k": kc, "v": vc}
+        o = decode_attention(q, kc.astype(dt), vc.astype(dt), cache_len,
+                             window=window, logit_softcap=cfg.attn_logit_softcap)
+    else:
+        o = chunked_attention(q, k, v, causal=causal, window=window,
+                              logit_softcap=cfg.attn_logit_softcap,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk)
+        if cache is not None:
+            # prefill: write the (tail of the) sequence into the ring cache
+            new_cache = {"k": ring_write_prefill(cache["k"], k),
+                         "v": ring_write_prefill(cache["v"], v)}
+    # a2a the attention output back to sequence-sharded BEFORE the out
+    # projection: the contraction then has no model-sharded dim, so XLA
+    # gathers the (small) weight instead of all-reducing the (large)
+    # residual activation (hillclimb #1, see EXPERIMENTS.md §Perf)
+    o = constrain(o, seq_spec(None, None))
+    y = o.reshape(B, S, H * Dh) @ p["wo"].astype(dt)
+    return constrain(y, seq_spec(None)), new_cache
+
+
+def cross_attn_apply(p, x, mem, cfg, *, q_chunk=2048, kv_chunk=1024):
+    """Encoder-decoder cross attention. mem: (B, Sm, D)."""
+    B, S, D = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, H, Dh)
+    k = (mem @ p["wk"].astype(dt)).reshape(B, mem.shape[1], KV, Dh)
+    v = (mem @ p["wv"].astype(dt)).reshape(B, mem.shape[1], KV, Dh)
+    o = chunked_attention(q, k, v, causal=False, q_chunk=q_chunk,
+                          kv_chunk=kv_chunk)
+    y = o.reshape(B, S, H * Dh) @ p["wo"].astype(dt)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(rng, cfg, n_layers: int):
+    D, F = cfg.d_model, cfg.d_ff
+    k = jax.random.split(rng, 3)
+    def init(key, *sh):
+        return jax.random.normal(key, sh, jnp.float32) / math.sqrt(sh[-2])
+    return {"w_gate": init(k[0], n_layers, D, F),
+            "w_up": init(k[1], n_layers, D, F),
+            "w_down": init(k[2], n_layers, F, D)}
+
+
+def mlp_specs(cfg, n_layers: int):
+    D, F = cfg.d_model, cfg.d_ff
+    return {"w_gate": (n_layers, D, F), "w_up": (n_layers, D, F),
+            "w_down": (n_layers, F, D)}
+
+
+def mlp_shardings(cfg):
+    return {"w_gate": P(None, "data", "model"),
+            "w_up": P(None, "data", "model"),
+            "w_down": P(None, "model", "data")}
+
+
+def mlp_apply(p, x):
+    dt = x.dtype
+    h = jax.nn.silu(x @ p["w_gate"].astype(dt)) * (x @ p["w_up"].astype(dt))
+    h = constrain(h, seq_spec(None))
+    y = h @ p["w_down"].astype(dt)
+    return constrain(y, seq_spec(None))
+
+
+# ---------------------------------------------------------------------------
+# Embedding + chunked vocab-parallel cross-entropy
+# ---------------------------------------------------------------------------
+
+
+def embed_init(rng, cfg):
+    return jax.random.normal(rng, (cfg.padded_vocab, cfg.d_model),
+                             jnp.float32) * 0.02
+
+
+def embed_lookup(emb, tokens, cfg, dtype):
+    x = jnp.take(emb, tokens, axis=0).astype(dtype)
+    if cfg.emb_scale_by_dim:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+    return constrain(x, seq_spec(None))
+
+
+def lm_logits(x, emb, cfg):
+    dt = x.dtype
+    logits = jnp.einsum("bsd,vd->bsv", x, emb.astype(dt))
+    logits = softcap(logits, cfg.final_logit_softcap)
+    return constrain(logits, batch_spec(None, "model"))
+
+
+def xent_loss_chunked(x, emb, labels, cfg, *, seq_chunk: int = 512,
+                      mask=None):
+    """Cross-entropy over a huge vocab without materialising full logits.
+
+    x: (B, S, D) final hidden states; labels: (B, S) int32.  Scans over
+    sequence chunks; within a chunk the logits are vocab-sharded over
+    "model" and the log-sum-exp reduction crosses shards via XLA SPMD.
+    """
+    B, S, D = x.shape
+    seq_chunk = min(seq_chunk, S)
+    n = S // seq_chunk
+    assert n * seq_chunk == S
+    xr = x.reshape(B, n, seq_chunk, D).transpose(1, 0, 2, 3)
+    lr = labels.reshape(B, n, seq_chunk).transpose(1, 0, 2)
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    mr = mask.reshape(B, n, seq_chunk).transpose(1, 0, 2)
+
+    def chunk(carry, inp):
+        tot, cnt = carry
+        xc, lc, mc = inp
+        logits = lm_logits(xc, emb, cfg).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return (tot + jnp.sum(nll), cnt + jnp.sum(mc)), None
+
+    (tot, cnt), _ = jax.lax.scan(chunk, (jnp.float32(0.0), jnp.float32(0.0)),
+                                 (xr, lr, mr))
+    return tot / jnp.maximum(cnt, 1.0)

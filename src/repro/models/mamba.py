@@ -1,0 +1,277 @@
+"""Mamba-1 selective-state-space LM (falcon-mamba-7b architecture).
+
+The selective scan is computed with a chunked associative scan: the sequence
+is processed in chunks of ``scan_chunk``; within a chunk the recurrence
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t
+is evaluated by ``jax.lax.associative_scan`` (log-depth, TPU friendly), and
+only the (B, D_inner, N) state is carried between chunks, so the
+(B, S, D_inner, N) discretised tensor is never materialised for the full
+sequence.  Channels (D_inner) are sharded over the "model" axis.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models.shardctx import constrain, batch_spec, seq_spec
+
+SCAN_CHUNK = 256
+
+
+def _ssm_layer_shapes(cfg):
+    D, Di, N, R, W = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                      cfg.ssm_dt_rank, cfg.ssm_conv)
+    return {
+        "in_proj": (D, 2 * Di),
+        "conv_w": (W, Di), "conv_b": (Di,),
+        "x_proj": (Di, R + 2 * N),
+        "dt_proj": (R, Di), "dt_bias": (Di,),
+        "A_log": (Di, N), "D": (Di,),
+        "out_proj": (Di, D),
+        "norm": (D,),
+    }
+
+
+def _ssm_layer_shardings():
+    return {
+        "in_proj": P(None, "data", "model"),
+        "conv_w": P(None, None, "model"), "conv_b": P(None, "model"),
+        "x_proj": P(None, "model", None),
+        "dt_proj": P(None, None, "model"), "dt_bias": P(None, "model"),
+        "A_log": P(None, "model", None), "D": P(None, "model"),
+        "out_proj": P(None, "model", "data"),
+        "norm": P(None, None),
+    }
+
+
+def causal_depthwise_conv(x, w, b, carry: Optional[jax.Array] = None):
+    """x: (B, S, C); w: (W, C); b: (C,). Left-padded causal depthwise conv.
+    ``carry``: (B, W-1, C) previous context (decode); returns (y, new_carry).
+    """
+    B, S, C = x.shape
+    W = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((B, W - 1, C), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)  # (B, S+W-1, C)
+    y = jnp.zeros((B, S, C), x.dtype)
+    for i in range(W):
+        y = y + xp[:, i:i + S, :] * w[i].astype(x.dtype)
+    y = y + b.astype(x.dtype)
+    new_carry = xp[:, -(W - 1):, :] if W > 1 else carry
+    return y, new_carry
+
+
+def selective_scan_chunked(u, dt, A, Bc, Cc, h0, *, chunk=SCAN_CHUNK):
+    """u, dt: (B, S, Di); A: (Di, N); Bc, Cc: (B, S, N); h0: (B, Di, N).
+    Returns (y: (B, S, Di), hT)."""
+    B, S, Di = u.shape
+    N = A.shape[-1]
+    chunk = min(chunk, S)
+    nc = S // chunk
+    assert nc * chunk == S
+
+    def chunk_step(h, inp):
+        uc, dtc, bc, cc = inp  # (B, Q, Di), (B, Q, Di), (B, Q, N), (B, Q, N)
+        dA = jnp.exp(dtc[..., None] * A)                       # (B,Q,Di,N)
+        dBu = (dtc * uc)[..., None] * bc[:, :, None, :]        # (B,Q,Di,N)
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, b1 * a2 + b2
+
+        a_cum, b_cum = jax.lax.associative_scan(combine, (dA, dBu), axis=1)
+        hs = a_cum * h[:, None] + b_cum                        # (B,Q,Di,N)
+        y = jnp.einsum("bqdn,bqn->bqd", hs, cc)
+        return hs[:, -1], y
+
+    ur = u.reshape(B, nc, chunk, Di).transpose(1, 0, 2, 3)
+    dtr = dt.reshape(B, nc, chunk, Di).transpose(1, 0, 2, 3)
+    br = Bc.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+    cr = Cc.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+    hT, ys = jax.lax.scan(chunk_step, h0.astype(jnp.float32),
+                          (ur.astype(jnp.float32), dtr.astype(jnp.float32),
+                           br.astype(jnp.float32), cr.astype(jnp.float32)))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, Di)
+    return y, hT
+
+
+def mamba_mix(p, x, cfg, cache=None):
+    """One mamba mixer. x: (B, S, D). cache: {"conv": (B,W-1,Di),
+    "h": (B,Di,N)} or None. Returns (y, new_cache)."""
+    B, S, D = x.shape
+    Di, N, R = cfg.d_inner, cfg.ssm_state, cfg.ssm_dt_rank
+    dt_ = x.dtype
+    xz = x @ p["in_proj"].astype(dt_)                     # (B,S,2Di)
+    xz = constrain(xz, batch_spec(None, "model"))
+    u, z = jnp.split(xz, 2, axis=-1)
+    conv_carry = cache["conv"] if cache is not None else None
+    u, new_conv = causal_depthwise_conv(u, p["conv_w"].astype(dt_),
+                                        p["conv_b"], conv_carry)
+    u = jax.nn.silu(u)
+    proj = u @ p["x_proj"].astype(dt_)                    # (B,S,R+2N)
+    dtr, Bc, Cc = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dtr @ p["dt_proj"].astype(dt_)
+                         + p["dt_bias"].astype(dt_))      # (B,S,Di)
+    dt = constrain(dt, batch_spec(None, "model"))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # (Di,N)
+    h0 = (cache["h"] if cache is not None
+          else jnp.zeros((B, Di, N), jnp.float32))
+    y, hT = selective_scan_chunked(u, dt, A, Bc, Cc, h0)
+    y = (y + u.astype(jnp.float32) * p["D"].astype(jnp.float32)).astype(dt_)
+    y = y * jax.nn.silu(z)
+    # sequence-shard before out_proj: gather the (Di, D) weight, not the
+    # (B, S, D) residual (hillclimb #1)
+    y = constrain(y, seq_spec(None))
+    out = y @ p["out_proj"].astype(dt_)
+    out = constrain(out, seq_spec(None))
+    new_cache = ({"conv": new_conv, "h": hT}
+                 if cache is not None else None)
+    return out, new_cache
+
+
+class MambaLM:
+    """Attention-free mamba1 LM. Implements the same Model API as
+    DenseTransformer."""
+
+    def __init__(self, cfg: ModelConfig, run: Optional[RunConfig] = None):
+        self.cfg = cfg
+        self.run = run
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.n_groups = cfg.n_layers
+        self.group_kinds = ("mamba",)
+
+    def init(self, rng):
+        cfg, n = self.cfg, self.n_groups
+        shapes = _ssm_layer_shapes(cfg)
+        keys = jax.random.split(rng, len(shapes) + 1)
+        blk = {}
+        for k0, (name, sh) in zip(keys, sorted(shapes.items())):
+            full = (n,) + sh
+            if name == "A_log":
+                a = jnp.broadcast_to(
+                    jnp.log(jnp.arange(1, cfg.ssm_state + 1, dtype=jnp.float32)),
+                    full)
+                blk[name] = a
+            elif name in ("conv_b", "dt_bias", "D", "norm"):
+                blk[name] = jnp.zeros(full, jnp.float32) if name != "D" \
+                    else jnp.ones(full, jnp.float32)
+            else:
+                blk[name] = (jax.random.normal(k0, full, jnp.float32)
+                             / math.sqrt(sh[0] if len(sh) > 1 else 1.0))
+        return {"embed": L.embed_init(keys[-1], cfg),
+                "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+                "blocks": {"slot0": blk}}
+
+    def param_specs(self):
+        cfg, n = self.cfg, self.n_groups
+        pd = jnp.dtype(cfg.param_dtype)
+        blk = {name: jax.ShapeDtypeStruct((n,) + sh, pd)
+               for name, sh in _ssm_layer_shapes(cfg).items()}
+        return {"embed": jax.ShapeDtypeStruct((cfg.padded_vocab, cfg.d_model), pd),
+                "final_norm": jax.ShapeDtypeStruct((cfg.d_model,), pd),
+                "blocks": {"slot0": blk}}
+
+    def param_shardings(self):
+        return {"embed": P("model", None), "final_norm": P(None),
+                "blocks": {"slot0": _ssm_layer_shardings()}}
+
+    # ---- cache ----
+    def init_cache(self, B, S):
+        cfg, n = self.cfg, self.n_groups
+        return {"slot0": {
+            "conv": jnp.zeros((n, B, cfg.ssm_conv - 1, cfg.d_inner), self.dtype),
+            "h": jnp.zeros((n, B, cfg.d_inner, cfg.ssm_state), jnp.float32)}}
+
+    def cache_specs(self, B, S):
+        cfg, n = self.cfg, self.n_groups
+        return {"slot0": {
+            "conv": jax.ShapeDtypeStruct(
+                (n, B, cfg.ssm_conv - 1, cfg.d_inner), self.dtype),
+            "h": jax.ShapeDtypeStruct(
+                (n, B, cfg.d_inner, cfg.ssm_state), jnp.float32)}}
+
+    def cache_shardings(self):
+        return {"slot0": {"conv": P(None, ("pod", "data"), None, "model"),
+                          "h": P(None, ("pod", "data"), "model", None)}}
+
+    # ---- inputs (same protocol as DenseTransformer) ----
+    def text_len(self, shape):
+        return shape.seq_len
+
+    def input_specs(self, shape: ShapeConfig):
+        B, it = shape.global_batch, jnp.int32
+        if shape.kind == "train":
+            return {"tokens": jax.ShapeDtypeStruct((B, shape.seq_len), it),
+                    "labels": jax.ShapeDtypeStruct((B, shape.seq_len), it)}
+        if shape.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((B, shape.seq_len), it)}
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), it)}
+
+    def input_shardings(self, shape: ShapeConfig):
+        sp = {"tokens": batch_spec(None)}
+        if shape.kind == "train":
+            sp["labels"] = batch_spec(None)
+        return sp
+
+    def make_batch(self, rng, shape: ShapeConfig):
+        specs = self.input_specs(shape)
+        keys = jax.random.split(rng, len(specs))
+        return {name: jax.random.randint(k0, s.shape, 0, self.cfg.vocab_size,
+                                         s.dtype)
+                for k0, (name, s) in zip(keys, sorted(specs.items()))}
+
+    # ---- compute ----
+    def _remat(self, f):
+        if self.run is None or self.run.remat == "none":
+            return f
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    def _backbone(self, params, x, caches=None, remat=False):
+        cfg = self.cfg
+
+        def body(x, sl):
+            blk, cache = sl
+            h = L.rms_norm(x, blk["norm"], cfg.rms_eps)
+            y, nc = mamba_mix(blk, h, cfg,
+                              cache["slot0"] if cache is not None else None)
+            return x + y, ({"slot0": nc} if cache is not None else None)
+
+        fn = self._remat(body) if remat else body
+        x, new_caches = jax.lax.scan(fn, x,
+                                     (params["blocks"]["slot0"], caches))
+        x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+        return x, new_caches
+
+    def forward(self, params, batch):
+        x = L.embed_lookup(params["embed"], batch["tokens"], self.cfg,
+                           self.dtype)
+        x, _ = self._backbone(params, x, remat=True)
+        return x
+
+    def loss(self, params, batch):
+        x = self.forward(params, batch)
+        return L.xent_loss_chunked(x, params["embed"], batch["labels"],
+                                   self.cfg)
+
+    def prefill(self, params, batch, cache_len=None):
+        x = L.embed_lookup(params["embed"], batch["tokens"], self.cfg,
+                           self.dtype)
+        caches = self.init_cache(x.shape[0],
+                                 cache_len or batch["tokens"].shape[1])
+        x, caches = self._backbone(params, x, caches=caches)
+        logits = L.lm_logits(x[:, -1:, :], params["embed"], self.cfg)
+        return logits, caches
+
+    def decode_step(self, params, caches, cache_len, tokens):
+        x = L.embed_lookup(params["embed"], tokens, self.cfg, self.dtype)
+        x, new_caches = self._backbone(params, x, caches=caches)
+        logits = L.lm_logits(x, params["embed"], self.cfg)
+        return logits, new_caches

@@ -1,0 +1,32 @@
+"""Architecture registry: ``--arch <id>`` -> (ModelConfig, Model class)."""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.transformer import DenseTransformer, MoETransformer
+from repro.models.mamba import MambaLM
+from repro.models.rglru import GriffinLM
+from repro.models.encdec import EncDecTransformer
+
+_FAMILY_CLS = {
+    "dense": DenseTransformer,
+    "moe": MoETransformer,
+    "ssm": MambaLM,
+    "hybrid": GriffinLM,
+    "encdec": EncDecTransformer,
+}
+
+
+def build_model(cfg: ModelConfig, run: Optional[RunConfig] = None):
+    return _FAMILY_CLS[cfg.family](cfg, run)
+
+
+def get_config(arch: str) -> ModelConfig:
+    from repro import configs
+    return configs.ARCHS[arch]
+
+
+def list_archs():
+    from repro import configs
+    return sorted(configs.ARCHS)

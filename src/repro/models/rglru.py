@@ -1,0 +1,353 @@
+"""Griffin-style hybrid LM (recurrentgemma-2b): RG-LRU recurrent blocks with
+local sliding-window attention in a (rec, rec, attn) repeating pattern.
+
+RG-LRU recurrence (per channel):
+    a_t = exp(-c * softplus(Lambda) * sigmoid(W_a u_t + b_a))
+    i_t = sigmoid(W_i u_t + b_i)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+evaluated with the same chunked associative scan as mamba; the carried state
+is only (B, D_rnn).  Channels are sharded over the "model" axis.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models.mamba import causal_depthwise_conv
+from repro.models.shardctx import constrain, batch_spec, seq_spec
+
+RGLRU_C = 8.0
+SCAN_CHUNK = 256
+
+
+def rglru_scan(u, a, h0, *, chunk=SCAN_CHUNK):
+    """u, a: (B, S, Dr) input and decay; h0: (B, Dr). Returns (y, hT)."""
+    B, S, Dr = u.shape
+    chunk = min(chunk, S)
+    nc = S // chunk
+    assert nc * chunk == S
+
+    def chunk_step(h, inp):
+        uc, ac = inp
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, b1 * a2 + b2
+
+        a_cum, b_cum = jax.lax.associative_scan(combine, (ac, uc), axis=1)
+        hs = a_cum * h[:, None] + b_cum
+        return hs[:, -1], hs
+
+    ur = u.reshape(B, nc, chunk, Dr).transpose(1, 0, 2, 3)
+    ar = a.reshape(B, nc, chunk, Dr).transpose(1, 0, 2, 3)
+    hT, ys = jax.lax.scan(chunk_step, h0.astype(jnp.float32),
+                          (ur.astype(jnp.float32), ar.astype(jnp.float32)))
+    return ys.transpose(1, 0, 2, 3).reshape(B, S, Dr), hT
+
+
+def _rec_shapes(cfg):
+    D, Dr, W = cfg.d_model, cfg.lru_width, cfg.conv1d_width
+    return {
+        "w_x": (D, Dr), "w_y": (D, Dr),
+        "conv_w": (W, Dr), "conv_b": (Dr,),
+        "w_a": (Dr, Dr), "b_a": (Dr,),
+        "w_i": (Dr, Dr), "b_i": (Dr,),
+        "lam": (Dr,),
+        "w_out": (Dr, D),
+    }
+
+
+def _rec_shardings():
+    return {
+        "w_x": P(None, "data", "model"), "w_y": P(None, "data", "model"),
+        "conv_w": P(None, None, "model"), "conv_b": P(None, "model"),
+        "w_a": P(None, None, "model"), "b_a": P(None, "model"),
+        "w_i": P(None, None, "model"), "b_i": P(None, "model"),
+        "lam": P(None, "model"),
+        "w_out": P(None, "model", "data"),
+    }
+
+
+def rec_mix(p, x, cfg, cache=None):
+    """RG-LRU temporal mixer. x: (B, S, D) -> (y, new_cache)."""
+    B, S, D = x.shape
+    Dr = cfg.lru_width
+    dt = x.dtype
+    u = x @ p["w_x"].astype(dt)               # (B,S,Dr)
+    gate = x @ p["w_y"].astype(dt)
+    u = constrain(u, batch_spec(None, "model"))
+    conv_carry = cache["conv"] if cache is not None else None
+    u, new_conv = causal_depthwise_conv(u, p["conv_w"].astype(dt),
+                                        p["conv_b"], conv_carry)
+    r = jax.nn.sigmoid(u @ p["w_a"].astype(dt) + p["b_a"].astype(dt))
+    i = jax.nn.sigmoid(u @ p["w_i"].astype(dt) + p["b_i"].astype(dt))
+    log_a = (-RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32))
+             * r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated_in = (jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+                * (i * u).astype(jnp.float32))
+    h0 = (cache["h"] if cache is not None else jnp.zeros((B, Dr), jnp.float32))
+    y, hT = rglru_scan(gated_in, a, h0)
+    y = y.astype(dt) * jax.nn.gelu(gate)
+    y = constrain(y, seq_spec(None))
+    out = y @ p["w_out"].astype(dt)
+    new_cache = ({"conv": new_conv, "h": hT} if cache is not None else None)
+    return constrain(out, seq_spec(None)), new_cache
+
+
+class GriffinLM:
+    """recurrentgemma-style hybrid: groups of (rec, rec, local-attn) plus a
+    (rec, rec) tail when n_layers % 3 != 0. Model API compatible."""
+
+    def __init__(self, cfg: ModelConfig, run: Optional[RunConfig] = None):
+        self.cfg = cfg
+        self.run = run
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.n_groups = cfg.n_layers // 3
+        self.tail_rec = cfg.n_layers - 3 * self.n_groups  # leftover rec layers
+        self.group_kinds = ("rec", "rec", "attn")
+        self.q_chunk = run.q_chunk if run else 2048
+        self.kv_chunk = run.kv_chunk if run else 1024
+
+    # ---- params ----
+    def _rec_block_init(self, rng, n):
+        shapes = _rec_shapes(self.cfg)
+        keys = jax.random.split(rng, len(shapes))
+        out = {}
+        for k0, (name, sh) in zip(keys, sorted(shapes.items())):
+            full = (n,) + sh
+            if name == "lam":
+                out[name] = jnp.broadcast_to(
+                    jnp.linspace(0.1, 1.5, sh[0], dtype=jnp.float32), full)
+            elif name.startswith("b_") or name == "conv_b":
+                out[name] = jnp.zeros(full, jnp.float32)
+            else:
+                out[name] = (jax.random.normal(k0, full, jnp.float32)
+                             / math.sqrt(sh[0]))
+        return out
+
+    def _block_init(self, rng, kind, n):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(rng, 3)
+        blk = {"ln1": jnp.zeros((n, cfg.d_model), jnp.float32),
+               "ln2": jnp.zeros((n, cfg.d_model), jnp.float32),
+               "ffn": L.mlp_init(k2, cfg, n)}
+        if kind == "rec":
+            blk["mix"] = self._rec_block_init(k1, n)
+        else:
+            blk["mix"] = L.attn_init(k1, cfg, n)
+        return blk
+
+    def init(self, rng):
+        cfg = self.cfg
+        keys = jax.random.split(rng, len(self.group_kinds) + self.tail_rec + 1)
+        blocks = {f"slot{i}": self._block_init(keys[i], kind, self.n_groups)
+                  for i, kind in enumerate(self.group_kinds)}
+        tail = {f"slot{i}": self._block_init(
+                    keys[len(self.group_kinds) + i], "rec", 1)
+                for i in range(self.tail_rec)}
+        return {"embed": L.embed_init(keys[-1], cfg),
+                "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+                "blocks": blocks, "tail": tail}
+
+    def _block_specs(self, kind, n):
+        cfg = self.cfg
+        pd = jnp.dtype(cfg.param_dtype)
+        blk = {"ln1": jax.ShapeDtypeStruct((n, cfg.d_model), pd),
+               "ln2": jax.ShapeDtypeStruct((n, cfg.d_model), pd),
+               "ffn": {k: jax.ShapeDtypeStruct(s, pd)
+                       for k, s in L.mlp_specs(cfg, n).items()}}
+        if kind == "rec":
+            blk["mix"] = {k: jax.ShapeDtypeStruct((n,) + s, pd)
+                          for k, s in _rec_shapes(cfg).items()}
+        else:
+            blk["mix"] = {k: jax.ShapeDtypeStruct(s, pd)
+                          for k, s in L.attn_specs(cfg, n).items()}
+        return blk
+
+    def param_specs(self):
+        cfg = self.cfg
+        pd = jnp.dtype(cfg.param_dtype)
+        blocks = {f"slot{i}": self._block_specs(kind, self.n_groups)
+                  for i, kind in enumerate(self.group_kinds)}
+        tail = {f"slot{i}": self._block_specs("rec", 1)
+                for i in range(self.tail_rec)}
+        return {"embed": jax.ShapeDtypeStruct((cfg.padded_vocab, cfg.d_model), pd),
+                "final_norm": jax.ShapeDtypeStruct((cfg.d_model,), pd),
+                "blocks": blocks, "tail": tail}
+
+    def _block_shardings(self, kind):
+        blk = {"ln1": P(None, None), "ln2": P(None, None),
+               "ffn": L.mlp_shardings(self.cfg)}
+        blk["mix"] = (_rec_shardings() if kind == "rec"
+                      else L.attn_shardings(self.cfg))
+        return blk
+
+    def param_shardings(self):
+        blocks = {f"slot{i}": self._block_shardings(kind)
+                  for i, kind in enumerate(self.group_kinds)}
+        tail = {f"slot{i}": self._block_shardings("rec")
+                for i in range(self.tail_rec)}
+        return {"embed": P("model", None), "final_norm": P(None),
+                "blocks": blocks, "tail": tail}
+
+    # ---- cache ----
+    def _rec_cache(self, B, n, make):
+        cfg = self.cfg
+        return {"conv": make((n, B, cfg.conv1d_width - 1, cfg.lru_width),
+                             self.dtype),
+                "h": make((n, B, cfg.lru_width), jnp.float32)}
+
+    def _attn_cache(self, B, S, n, make):
+        cfg = self.cfg
+        W = min(S, cfg.sliding_window or S)
+        return {"k": make((n, B, W, cfg.n_kv_heads, cfg.head_dim), self.dtype),
+                "v": make((n, B, W, cfg.n_kv_heads, cfg.head_dim), self.dtype)}
+
+    def _cache_make(self, B, S, make):
+        out = {}
+        for i, kind in enumerate(self.group_kinds):
+            out[f"slot{i}"] = (self._rec_cache(B, self.n_groups, make)
+                               if kind == "rec"
+                               else self._attn_cache(B, S, self.n_groups, make))
+        for i in range(self.tail_rec):
+            out[f"tail{i}"] = self._rec_cache(B, 1, make)
+        return out
+
+    def init_cache(self, B, S):
+        return self._cache_make(B, S, lambda s, d: jnp.zeros(s, d))
+
+    def cache_specs(self, B, S):
+        return self._cache_make(B, S, jax.ShapeDtypeStruct)
+
+    def cache_shardings(self):
+        rec = {"conv": P(None, ("pod", "data"), None, "model"),
+               "h": P(None, ("pod", "data"), "model")}
+        attn = {"k": P(None, ("pod", "data"), None, None, None),
+                "v": P(None, ("pod", "data"), None, None, None)}
+        out = {}
+        for i, kind in enumerate(self.group_kinds):
+            out[f"slot{i}"] = rec if kind == "rec" else attn
+        for i in range(self.tail_rec):
+            out[f"tail{i}"] = rec
+        return out
+
+    # ---- inputs ----
+    def input_specs(self, shape: ShapeConfig):
+        B, it = shape.global_batch, jnp.int32
+        if shape.kind == "train":
+            return {"tokens": jax.ShapeDtypeStruct((B, shape.seq_len), it),
+                    "labels": jax.ShapeDtypeStruct((B, shape.seq_len), it)}
+        if shape.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((B, shape.seq_len), it)}
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), it)}
+
+    def input_shardings(self, shape: ShapeConfig):
+        sp = {"tokens": batch_spec(None)}
+        if shape.kind == "train":
+            sp["labels"] = batch_spec(None)
+        return sp
+
+    def make_batch(self, rng, shape: ShapeConfig):
+        specs = self.input_specs(shape)
+        keys = jax.random.split(rng, len(specs))
+        return {name: jax.random.randint(k0, s.shape, 0, self.cfg.vocab_size,
+                                         s.dtype)
+                for k0, (name, s) in zip(keys, sorted(specs.items()))}
+
+    # ---- compute ----
+    def _apply_block(self, kind, blk, x, *, positions, cache, cache_len):
+        cfg = self.cfg
+        h = L.rms_norm(x, blk["ln1"], cfg.rms_eps)
+        if kind == "rec":
+            y, nc = rec_mix(blk["mix"], h, cfg, cache)
+        else:
+            y, nc = L.attn_apply(blk["mix"], h, cfg, positions=positions,
+                                 causal=True, window=cfg.sliding_window,
+                                 cache=cache, cache_len=cache_len,
+                                 q_chunk=self.q_chunk, kv_chunk=self.kv_chunk)
+        x = x + y
+        h = L.rms_norm(x, blk["ln2"], cfg.rms_eps)
+        return x + L.mlp_apply(blk["ffn"], h), nc
+
+    def _remat(self, f):
+        if self.run is None or self.run.remat == "none":
+            return f
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    def _backbone(self, params, x, *, positions, caches=None, cache_len=None,
+                  remat=False):
+        kinds = self.group_kinds
+
+        def body(x, sl):
+            blocks, cache = sl
+            ncs = {}
+            for i, kind in enumerate(kinds):
+                c = cache[f"slot{i}"] if cache is not None else None
+                x, nc = self._apply_block(kind, blocks[f"slot{i}"], x,
+                                          positions=positions, cache=c,
+                                          cache_len=cache_len)
+                ncs[f"slot{i}"] = nc
+            return x, (ncs if cache is not None else None)
+
+        fn = self._remat(body) if remat else body
+        group_caches = (None if caches is None else
+                        {k: v for k, v in caches.items()
+                         if k.startswith("slot")})
+        x, new_caches = jax.lax.scan(fn, x, (params["blocks"], group_caches))
+        # unrolled tail (rec, rec)
+        new_tail = {}
+        for i in range(self.tail_rec):
+            blk = jax.tree.map(lambda a: a[0], params["tail"][f"slot{i}"])
+            c = (jax.tree.map(lambda a: a[0], caches[f"tail{i}"])
+                 if caches is not None else None)
+            x, nc = self._apply_block("rec", blk, x, positions=positions,
+                                      cache=c, cache_len=cache_len)
+            if caches is not None:
+                new_tail[f"tail{i}"] = jax.tree.map(lambda a: a[None], nc)
+        x = L.rms_norm(x, params["final_norm"], self.cfg.rms_eps)
+        if caches is not None:
+            new_caches = dict(new_caches)
+            new_caches.update(new_tail)
+        return x, new_caches
+
+    def forward(self, params, batch):
+        x = L.embed_lookup(params["embed"], batch["tokens"], self.cfg,
+                           self.dtype)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x, _ = self._backbone(params, x, positions=positions, remat=True)
+        return x
+
+    def loss(self, params, batch):
+        x = self.forward(params, batch)
+        return L.xent_loss_chunked(x, params["embed"], batch["labels"],
+                                   self.cfg)
+
+    def prefill(self, params, batch, cache_len=None):
+        x = L.embed_lookup(params["embed"], batch["tokens"], self.cfg,
+                           self.dtype)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        caches = self.init_cache(B, cache_len or S)
+        x, caches = self._backbone(params, x, positions=positions,
+                                   caches=caches)
+        logits = L.lm_logits(x[:, -1:, :], params["embed"], self.cfg)
+        return logits, caches
+
+    def decode_step(self, params, caches, cache_len, tokens):
+        x = L.embed_lookup(params["embed"], tokens, self.cfg, self.dtype)
+        B = x.shape[0]
+        positions = jnp.broadcast_to(cache_len[None, None], (B, 1))
+        x, new_caches = self._backbone(params, x, positions=positions,
+                                       caches=caches, cache_len=cache_len)
+        logits = L.lm_logits(x, params["embed"], self.cfg)
+        return logits, new_caches

@@ -1,0 +1,297 @@
+"""Decoder-only transformer LM (dense + gemma2-style local/global + VLM
+frontend stub) built on repro.models.layers.
+
+Layer stacking: layers are grouped into repeating *groups* so that scan can
+drive heterogeneous patterns with static per-slot flavours:
+  - "global"        -> group = (global,)           x L
+  - "local_global"  -> group = (local, global)     x L/2   (gemma2)
+Params for each slot are stacked along a leading n_groups axis and the whole
+stack is driven by one ``lax.scan`` (small HLO, remat-friendly).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models.shardctx import constrain, batch_spec
+
+
+def _norm_shapes(cfg, n, post):
+    d = {"ln1": (n, cfg.d_model), "ln2": (n, cfg.d_model)}
+    if post:
+        d["ln1_post"] = (n, cfg.d_model)
+        d["ln2_post"] = (n, cfg.d_model)
+    return d
+
+
+class DenseTransformer:
+    """Dense decoder-only LM. Also the base for the MoE variant."""
+
+    def __init__(self, cfg: ModelConfig, run: Optional[RunConfig] = None):
+        self.cfg = cfg
+        self.run = run
+        self.dtype = jnp.dtype(cfg.dtype)
+        if cfg.layer_pattern == "local_global":
+            assert cfg.n_layers % 2 == 0
+            self.group_kinds = ("local", "global")
+            self.n_groups = cfg.n_layers // 2
+        else:
+            self.group_kinds = ("global",)
+            self.n_groups = cfg.n_layers
+        self.q_chunk = run.q_chunk if run else 2048
+        self.kv_chunk = run.kv_chunk if run else 1024
+
+    # ---------------- params ----------------
+    def _ffn_init(self, rng, n):
+        return L.mlp_init(rng, self.cfg, n)
+
+    def _ffn_specs(self, n):
+        return L.mlp_specs(self.cfg, n)
+
+    def _ffn_shardings(self):
+        return L.mlp_shardings(self.cfg)
+
+    def _ffn_apply(self, p, x):
+        return L.mlp_apply(p, x)
+
+    def init(self, rng):
+        cfg, n = self.cfg, self.n_groups
+        keys = jax.random.split(rng, 2 * len(self.group_kinds) + 1)
+        blocks = {}
+        for i, kind in enumerate(self.group_kinds):
+            blk = {
+                "attn": L.attn_init(keys[2 * i], cfg, n),
+                "ffn": self._ffn_init(keys[2 * i + 1], n),
+            }
+            for k, sh in _norm_shapes(cfg, n, cfg.post_norms).items():
+                blk[k] = jnp.zeros(sh, jnp.float32)
+            blocks[f"slot{i}"] = blk
+        params = {
+            "embed": L.embed_init(keys[-1], cfg),
+            "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+            "blocks": blocks,
+        }
+        return params
+
+    def param_specs(self):
+        cfg, n = self.cfg, self.n_groups
+        pd = jnp.dtype(cfg.param_dtype)
+        blocks = {}
+        for i, kind in enumerate(self.group_kinds):
+            blk = {"attn": {k: jax.ShapeDtypeStruct(s, pd)
+                            for k, s in L.attn_specs(cfg, n).items()},
+                   "ffn": {k: jax.ShapeDtypeStruct(s, pd)
+                           for k, s in self._ffn_specs(n).items()}}
+            for k, sh in _norm_shapes(cfg, n, cfg.post_norms).items():
+                blk[k] = jax.ShapeDtypeStruct(sh, pd)
+            blocks[f"slot{i}"] = blk
+        return {
+            "embed": jax.ShapeDtypeStruct((cfg.padded_vocab, cfg.d_model), pd),
+            "final_norm": jax.ShapeDtypeStruct((cfg.d_model,), pd),
+            "blocks": blocks,
+        }
+
+    def param_shardings(self):
+        cfg = self.cfg
+        blocks = {}
+        for i, kind in enumerate(self.group_kinds):
+            blk = {"attn": L.attn_shardings(cfg),
+                   "ffn": self._ffn_shardings()}
+            for k in _norm_shapes(cfg, 1, cfg.post_norms):
+                blk[k] = P(None, None)
+            blocks[f"slot{i}"] = blk
+        return {
+            "embed": P("model", None),
+            "final_norm": P(None),
+            "blocks": blocks,
+        }
+
+    # ---------------- cache ----------------
+    def _slot_cache_shape(self, kind, B, S):
+        cfg = self.cfg
+        if kind == "local" and cfg.sliding_window:
+            S = min(S, cfg.sliding_window)
+        return (self.n_groups, B, S, cfg.n_kv_heads, cfg.head_dim)
+
+    def init_cache(self, B, S):
+        return {f"slot{i}": {"k": jnp.zeros(self._slot_cache_shape(k, B, S),
+                                            self.dtype),
+                             "v": jnp.zeros(self._slot_cache_shape(k, B, S),
+                                            self.dtype)}
+                for i, k in enumerate(self.group_kinds)}
+
+    def cache_specs(self, B, S):
+        return {f"slot{i}": {"k": jax.ShapeDtypeStruct(
+                                 self._slot_cache_shape(k, B, S), self.dtype),
+                             "v": jax.ShapeDtypeStruct(
+                                 self._slot_cache_shape(k, B, S), self.dtype)}
+                for i, k in enumerate(self.group_kinds)}
+
+    def cache_shardings(self):
+        # sequence dim sharded over "model" (flash-decode combine), batch over
+        # ("pod","data")
+        sp = P(None, ("pod", "data"), "model", None, None)
+        return {f"slot{i}": {"k": sp, "v": sp}
+                for i in range(len(self.group_kinds))}
+
+    # ---------------- inputs ----------------
+    def text_len(self, shape: ShapeConfig) -> int:
+        if self.cfg.frontend == "vision_stub" and shape.kind != "decode":
+            return shape.seq_len - self.cfg.n_patches
+        return shape.seq_len
+
+    def input_specs(self, shape: ShapeConfig):
+        B = shape.global_batch
+        it = jnp.int32
+        if shape.kind == "train":
+            S = self.text_len(shape)
+            batch = {"tokens": jax.ShapeDtypeStruct((B, S), it),
+                     "labels": jax.ShapeDtypeStruct((B, shape.seq_len), it)}
+        elif shape.kind == "prefill":
+            S = self.text_len(shape)
+            batch = {"tokens": jax.ShapeDtypeStruct((B, S), it)}
+        else:  # decode: one token
+            batch = {"tokens": jax.ShapeDtypeStruct((B, 1), it)}
+        if self.cfg.frontend == "vision_stub" and shape.kind != "decode":
+            batch["patch_embs"] = jax.ShapeDtypeStruct(
+                (B, self.cfg.n_patches, self.cfg.d_model), jnp.float32)
+        return batch
+
+    def input_shardings(self, shape: ShapeConfig):
+        sp = {"tokens": batch_spec(None)}
+        if shape.kind == "train":
+            sp["labels"] = batch_spec(None)
+        if self.cfg.frontend == "vision_stub" and shape.kind != "decode":
+            sp["patch_embs"] = batch_spec(None, None)
+        return sp
+
+    def make_batch(self, rng, shape: ShapeConfig):
+        """Concrete random batch (for smoke tests / examples)."""
+        specs = self.input_specs(shape)
+        keys = jax.random.split(rng, len(specs))
+        out = {}
+        for k0, (name, s) in zip(keys, sorted(specs.items())):
+            if s.dtype == jnp.int32:
+                out[name] = jax.random.randint(k0, s.shape, 0,
+                                               self.cfg.vocab_size, s.dtype)
+            else:
+                out[name] = jax.random.normal(k0, s.shape, s.dtype)
+        return out
+
+    # ---------------- forward ----------------
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        x = L.embed_lookup(params["embed"], batch["tokens"], cfg, self.dtype)
+        if cfg.frontend == "vision_stub" and "patch_embs" in batch:
+            pe = batch["patch_embs"].astype(self.dtype)
+            x = jnp.concatenate([pe, x], axis=1)  # image tokens first
+        return x
+
+    def _apply_slot(self, kind, p, x, *, positions, cache=None,
+                    cache_len=None, decode=False):
+        cfg = self.cfg
+        window = cfg.sliding_window if kind == "local" else None
+        h = L.rms_norm(x, p["ln1"], cfg.rms_eps)
+        h, new_cache = L.attn_apply(
+            p["attn"], h, cfg, positions=positions, causal=True,
+            window=window, cache=cache, cache_len=cache_len,
+            q_chunk=self.q_chunk, kv_chunk=self.kv_chunk)
+        if cfg.post_norms:
+            h = L.rms_norm(h, p["ln1_post"], cfg.rms_eps)
+        x = x + h
+        h = L.rms_norm(x, p["ln2"], cfg.rms_eps)
+        h = self._ffn_apply(p["ffn"], h)
+        if cfg.post_norms:
+            h = L.rms_norm(h, p["ln2_post"], cfg.rms_eps)
+        return x + h, new_cache
+
+    def _remat(self, f):
+        if self.run is None or self.run.remat == "none":
+            return f
+        policy = (jax.checkpoint_policies.nothing_saveable
+                  if self.run.remat == "full"
+                  else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        return jax.checkpoint(f, policy=policy)
+
+    def _backbone(self, params, x, *, positions, caches=None, cache_len=None,
+                  decode=False, remat=False):
+        kinds = self.group_kinds
+
+        def body(x, sl):
+            blocks, cache = sl
+            new_caches = {}
+            for i, kind in enumerate(kinds):
+                c = cache[f"slot{i}"] if cache is not None else None
+                x, nc = self._apply_slot(kind, blocks[f"slot{i}"], x,
+                                         positions=positions, cache=c,
+                                         cache_len=cache_len, decode=decode)
+                new_caches[f"slot{i}"] = nc
+            return x, (new_caches if cache is not None else None)
+
+        fn = self._remat(body) if remat else body
+        xs = (params["blocks"], caches)
+        x, new_caches = jax.lax.scan(fn, x, xs)
+        x = L.rms_norm(x, params["final_norm"], self.cfg.rms_eps)
+        return x, new_caches
+
+    # -- public compute endpoints ------------------------------------------
+    def forward(self, params, batch):
+        x = self._embed_inputs(params, batch)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x, _ = self._backbone(params, x, positions=positions, remat=True)
+        return x
+
+    def loss(self, params, batch):
+        x = self.forward(params, batch)
+        labels = batch["labels"]
+        return L.xent_loss_chunked(x, params["embed"], labels, self.cfg)
+
+    def prefill(self, params, batch, cache_len=None):
+        x = self._embed_inputs(params, batch)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        caches = self.init_cache(B, cache_len or S)
+        x, caches = self._backbone(params, x, positions=positions,
+                                   caches=caches, remat=False)
+        logits = L.lm_logits(x[:, -1:, :], params["embed"], self.cfg)
+        return logits, caches
+
+    def decode_step(self, params, caches, cache_len, tokens):
+        """tokens: (B, 1); cache_len: scalar count of valid positions."""
+        cfg = self.cfg
+        x = L.embed_lookup(params["embed"], tokens, cfg, self.dtype)
+        B = x.shape[0]
+        positions = jnp.broadcast_to(cache_len[None, None], (B, 1))
+        x, new_caches = self._backbone(params, x, positions=positions,
+                                       caches=caches, cache_len=cache_len,
+                                       decode=True, remat=False)
+        logits = L.lm_logits(x, params["embed"], cfg)
+        return logits, new_caches
+
+
+class MoETransformer(DenseTransformer):
+    """Dense transformer with the FFN replaced by a capacity-dispatch MoE."""
+
+    def _ffn_init(self, rng, n):
+        from repro.models import moe
+        return moe.moe_init(rng, self.cfg, n)
+
+    def _ffn_specs(self, n):
+        from repro.models import moe
+        return moe.moe_specs(self.cfg, n)
+
+    def _ffn_shardings(self):
+        from repro.models import moe
+        return moe.moe_shardings(self.cfg)
+
+    def _ffn_apply(self, p, x):
+        from repro.models import moe
+        return moe.moe_apply(p, x, self.cfg)

@@ -1,0 +1,64 @@
+"""AdamW + gradient clipping + LR schedules in pure JAX (no optax)."""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_opt_state(params):
+    return {"m": jax.tree.map(jnp.zeros_like, params),
+            "v": jax.tree.map(jnp.zeros_like, params)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(x.astype(jnp.float32) ** 2)
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+def adamw_update(params, grads, opt_state, step, *, lr, beta1=0.9,
+                 beta2=0.95, eps=1e-8, weight_decay=0.1):
+    """One AdamW step. ``lr`` may be a traced scalar. Returns
+    (new_params, new_opt_state)."""
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - beta1 ** t
+    bc2 = 1.0 - beta2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        p32 = p.astype(jnp.float32)
+        m_new = beta1 * m + (1 - beta1) * g32
+        v_new = beta2 * v + (1 - beta2) * g32 * g32
+        mh = m_new / bc1
+        vh = v_new / bc2
+        p_new = p32 - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p32)
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v}
+
+
+def cosine_schedule(step, *, base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / max(warmup, 1), 1.0)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(math.pi * prog))
+    return base_lr * warm * cos

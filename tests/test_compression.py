@@ -1,0 +1,110 @@
+"""Unit + property tests for the compression operators (paper eq. 6-7)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as C
+
+
+LEVELS = [C.Level("FULL", 1.0, 16), C.Level("INT8", 1.0, 8),
+          C.Level("TOPK25", 0.25, 8), C.Level("TOPK10", 0.10, 8),
+          C.Level("TOPK1", 0.01, 8), C.Level("SKIP", 0.0, 0)]
+
+
+def _rand(n, seed=0):
+    return jnp.asarray(np.random.RandomState(seed).randn(n).astype(np.float32))
+
+
+class TestTopK:
+    def test_topk_keeps_largest(self):
+        blocks = _rand(2048).reshape(2, 1024)
+        q, idx, scale = C.topk_compress(blocks, 16)
+        dense = C.topk_decompress(q, idx, scale)
+        for r in range(2):
+            mag = np.abs(np.asarray(blocks[r]))
+            kept = np.nonzero(np.asarray(dense[r]))[0]
+            thresh = np.sort(mag)[-16]
+            assert np.all(mag[kept] >= thresh * 0.5)
+
+    def test_topk_roundtrip_error_bounded(self):
+        blocks = _rand(4096).reshape(4, 1024)
+        q, idx, scale = C.topk_compress(blocks, 128)
+        dense = C.topk_decompress(q, idx, scale)
+        # kept values quantised to int8: relative error <= scale/2 per entry
+        mask = np.asarray(dense) != 0
+        err = np.abs(np.asarray(dense) - np.asarray(blocks))[mask]
+        assert err.max() <= np.asarray(scale).max() * 0.51
+
+    def test_int8_roundtrip(self):
+        blocks = _rand(2048, 3).reshape(2, 1024) * 10
+        q, scale = C.int8_compress(blocks)
+        back = C.int8_decompress(q, scale)
+        np.testing.assert_allclose(np.asarray(back), np.asarray(blocks),
+                                   atol=float(scale.max()) * 0.51)
+
+    @pytest.mark.parametrize("level", LEVELS, ids=lambda l: l.name)
+    def test_roundtrip_shapes(self, level):
+        flat = _rand(3000, 7)  # non-multiple of block
+        out = C.roundtrip(flat, level)
+        assert out.shape == flat.shape
+        assert out.dtype == flat.dtype
+        if level.is_skip:
+            assert float(jnp.abs(out).max()) == 0.0
+        if level.is_full:
+            np.testing.assert_allclose(np.asarray(out), np.asarray(flat),
+                                       rtol=1e-2, atol=1e-2)
+
+
+class TestWireBytes:
+    def test_monotone_ladder(self):
+        n, P = 1_000_000, 2
+        byts = [l.wire_bytes(n, P) for l in LEVELS]
+        assert byts[-1] == 0            # SKIP free
+        assert byts[0] > byts[2] > byts[3] > byts[4]  # FULL > topk ladder
+
+    def test_single_pod_free(self):
+        assert C.Level("FULL", 1.0, 16).wire_bytes(10 ** 6, 1) == 0
+
+    @given(st.integers(min_value=1, max_value=10 ** 7),
+           st.sampled_from([0.25, 0.10, 0.01]))
+    @settings(max_examples=30, deadline=None)
+    def test_topk_cheaper_than_full(self, n, ratio):
+        full = C.Level("FULL", 1.0, 16).wire_bytes(n, 2)
+        topk = C.Level("T", ratio, 8).wire_bytes(n, 2)
+        if n >= C.BLOCK:  # tiny tensors have per-block overhead
+            assert topk < full
+
+
+class TestErrorFeedbackProperty:
+    @given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_residual_plus_transmitted_is_exact(self, seed):
+        """decompress(compress(ef)) + residual == ef, for every level."""
+        flat = _rand(2048, seed % 1000)
+        for level in LEVELS:
+            sent = C.roundtrip(flat, level)
+            resid = flat - sent
+            np.testing.assert_allclose(np.asarray(sent + resid),
+                                       np.asarray(flat), rtol=1e-5,
+                                       atol=1e-5)
+
+    def test_error_feedback_transmits_everything_eventually(self):
+        """With EF, the cumulative transmitted signal approaches the
+        cumulative gradient (Stich et al. 2018 memory property)."""
+        level = C.Level("TOPK10", 0.10, 8)
+        g = _rand(1024, 42)
+        e = jnp.zeros_like(g)
+        sent_total = jnp.zeros_like(g)
+        rels = []
+        for t in range(150):
+            ef = g + e
+            sent = C.roundtrip(ef, level)
+            e = ef - sent
+            sent_total = sent_total + sent
+            avg_sent = sent_total / (t + 1)
+            rels.append(float(jnp.linalg.norm(avg_sent - g)
+                              / jnp.linalg.norm(g)))
+        assert rels[-1] < 0.05, rels[-1]
+        assert rels[-1] < rels[10]  # steadily improving

@@ -1,0 +1,70 @@
+"""Attention-based importance estimator tests (paper eqs. 3-4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import importance as imp
+
+
+def _state(G=8, hidden=16, seed=0):
+    return imp.init_state(jax.random.PRNGKey(seed), G, hidden)
+
+
+def _struct(G=8):
+    metas = [{"depth": i / (G - 1), "size": 10 ** (3 + i % 4),
+              "kind": ["embed", "attn", "mlp", "other"][i % 4]}
+             for i in range(G)]
+    return imp.structural_features(metas)
+
+
+class TestImportance:
+    def test_scores_in_unit_interval(self):
+        st = _state()
+        sf = _struct()
+        st = imp.update_stats(st, jnp.ones(8), jnp.ones(8), jnp.ones(8))
+        s = imp.scores(st.params, imp.temporal_features(st), sf, alpha=0.5)
+        assert s.shape == (8,)
+        assert float(s.min()) >= 0.0 and float(s.max()) <= 1.0
+
+    def test_alpha_mixes_branches(self):
+        """eq (3): alpha=1 -> pure temporal, alpha=0 -> pure structural."""
+        st = _state()
+        sf = _struct()
+        st = imp.update_stats(st, jnp.arange(8.0), jnp.ones(8),
+                              jnp.arange(8.0))
+        tf = imp.temporal_features(st)
+        s_t = imp.scores(st.params, tf, sf, alpha=1.0)
+        s_s = imp.scores(st.params, tf, sf, alpha=0.0)
+        s_m = imp.scores(st.params, tf, sf, alpha=0.5)
+        np.testing.assert_allclose(np.asarray(s_m),
+                                   0.5 * np.asarray(s_t)
+                                   + 0.5 * np.asarray(s_s), rtol=1e-5)
+
+    def test_online_training_reduces_mse(self):
+        """The estimator learns a fixed target pattern (the paper's
+        gradient-snapshot supervision)."""
+        G = 8
+        st = _state(G)
+        sf = _struct(G)
+        target = jnp.asarray(np.linspace(0.1, 0.9, G), jnp.float32)
+        first = None
+        rng = np.random.RandomState(0)
+        for t in range(300):
+            ma = target * 2 + 0.05 * rng.rand(G)
+            st = imp.update_stats(st, jnp.asarray(ma, jnp.float32),
+                                  jnp.asarray(ma ** 2, jnp.float32),
+                                  jnp.asarray(ma * 3, jnp.float32))
+            st, mse = imp.train_step(st, sf, target, alpha=0.5, lr=3e-3)
+            if first is None:
+                first = float(mse)
+        assert float(mse) < first * 0.5, (first, float(mse))
+
+    def test_stats_ema(self):
+        st = _state()
+        st1 = imp.update_stats(st, jnp.ones(8), jnp.zeros(8), jnp.ones(8),
+                               decay=0.5)
+        np.testing.assert_allclose(np.asarray(st1.feat_ema[:, 0]), 0.5)
+        st2 = imp.update_stats(st1, jnp.ones(8), jnp.zeros(8), jnp.ones(8),
+                               decay=0.5)
+        np.testing.assert_allclose(np.asarray(st2.feat_ema[:, 0]), 0.75)
+        assert int(st2.step) == 2

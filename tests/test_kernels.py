@@ -1,0 +1,126 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True on CPU) vs the ref.py
+pure-jnp oracles, over shapes and input distributions (assignment
+requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.topk_compress import ef_topk_select, LANES, ROWS
+from repro.kernels.quantize import quantize_int8_fused, dequantize_int8
+
+SHAPES = [(8, 1024), (16, 1024), (64, 1024)]
+DISTS = ["normal", "uniform", "heavy", "sparse"]
+
+
+def _data(shape, dist, seed=0):
+    r = np.random.RandomState(seed)
+    if dist == "normal":
+        x = r.randn(*shape)
+    elif dist == "uniform":
+        x = r.uniform(-3, 3, shape)
+    elif dist == "heavy":
+        x = r.standard_cauchy(shape)
+    else:
+        x = r.randn(*shape) * (r.rand(*shape) > 0.9)
+    return jnp.asarray(x.astype(np.float32))
+
+
+class TestTopKKernel:
+    @pytest.mark.parametrize("shape", SHAPES, ids=str)
+    @pytest.mark.parametrize("dist", DISTS)
+    def test_matches_oracle(self, shape, dist):
+        g = _data(shape, dist, 1)
+        e = _data(shape, dist, 2)
+        for k in (8, 104, 256):
+            sel, res = ef_topk_select(g, e, gamma=0.9, k=k, interpret=True)
+            sel_r, res_r = ref.ef_topk_select_ref(g, e, gamma=0.9, k=k)
+            # fma-order differences can flip selection at exact threshold
+            # ties: allow <=0.01% flipped entries, everything else close
+            sel_np, sel_rn = np.asarray(sel), np.asarray(sel_r)
+            close = np.isclose(sel_np, sel_rn, rtol=1e-5, atol=1e-5)
+            assert (~close).mean() <= 1e-4, (~close).sum()
+            res_np, res_rn = np.asarray(res), np.asarray(res_r)
+            closer = np.isclose(res_np, res_rn, rtol=1e-5, atol=1e-5)
+            assert (~closer).mean() <= 1e-4
+            # the EF invariant must hold EXACTLY elementwise on both paths
+            np.testing.assert_allclose(
+                np.asarray(sel + res), np.asarray(g + 0.9 * e),
+                rtol=1e-5, atol=1e-5)
+
+    def test_selection_count_near_k(self):
+        g = _data((8, 1024), "normal", 3)
+        e = jnp.zeros_like(g)
+        k = 104
+        sel, _ = ef_topk_select(g, e, gamma=1.0, k=k, interpret=True)
+        counts = np.asarray((sel != 0).sum(axis=1))
+        assert np.all(np.abs(counts - k) <= 8), counts  # bisection tolerance
+
+    def test_selected_entries_dominate(self):
+        """Every selected |value| >= every dropped |value| - epsilon."""
+        g = _data((8, 1024), "heavy", 4)
+        e = jnp.zeros_like(g)
+        sel, res = ef_topk_select(g, e, gamma=1.0, k=64, interpret=True)
+        sel_np, res_np = np.asarray(sel), np.asarray(res)
+        for r in range(8):
+            kept = np.abs(sel_np[r][sel_np[r] != 0])
+            dropped = np.abs(res_np[r][sel_np[r] == 0])
+            if len(kept) and len(dropped):
+                assert kept.min() >= dropped.max() - 1e-5
+
+    def test_ef_invariant(self):
+        g = _data((16, 1024), "normal", 5)
+        e = _data((16, 1024), "normal", 6)
+        sel, res = ef_topk_select(g, e, gamma=0.5, k=100, interpret=True)
+        np.testing.assert_allclose(np.asarray(sel + res),
+                                   np.asarray(g + 0.5 * e), rtol=1e-5,
+                                   atol=1e-5)
+
+
+class TestQuantizeKernel:
+    @pytest.mark.parametrize("shape", SHAPES, ids=str)
+    @pytest.mark.parametrize("dist", DISTS)
+    def test_matches_oracle(self, shape, dist):
+        x = _data(shape, dist, 7)
+        q, s, r = quantize_int8_fused(x, interpret=True)
+        q_r, s_r, r_r = ref.quantize_int8_ref(x)
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(q_r))
+        np.testing.assert_allclose(np.asarray(s), np.asarray(s_r),
+                                   rtol=1e-6)
+        # residual tolerance scales with the block absmax (heavy-tailed
+        # inputs reach 1e3+; fma ordering differs interpret vs XLA)
+        tol = float(np.asarray(s_r).max()) * 1e-3 + 1e-6
+        np.testing.assert_allclose(np.asarray(r), np.asarray(r_r),
+                                   rtol=1e-4, atol=tol)
+
+    def test_dequant_roundtrip(self):
+        x = _data((8, 1024), "uniform", 8)
+        q, s, r = quantize_int8_fused(x, interpret=True)
+        back = dequantize_int8(q, s, interpret=True)
+        np.testing.assert_allclose(np.asarray(back + r), np.asarray(x),
+                                   rtol=1e-5, atol=1e-5)
+        # quantisation error bounded by scale/2
+        assert np.all(np.abs(np.asarray(r)) <= np.asarray(s) * 0.5 + 1e-6)
+
+
+class TestOpsWrappers:
+    @given(st.integers(min_value=1, max_value=40000))
+    @settings(max_examples=15, deadline=None)
+    def test_flat_padding_roundtrip(self, n):
+        r = np.random.RandomState(n)
+        g = jnp.asarray(r.randn(n).astype(np.float32))
+        e = jnp.zeros_like(g)
+        sel, res = ops.ef_topk(g, e, gamma=1.0, k=64)
+        assert sel.shape == (n,) and res.shape == (n,)
+        np.testing.assert_allclose(np.asarray(sel + res), np.asarray(g),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_quantize_flat(self):
+        g = jnp.asarray(np.random.RandomState(0).randn(5000)
+                        .astype(np.float32))
+        q, s, r, n = ops.quantize_int8(g)
+        back = ops.dequant_int8(q, s, n)
+        np.testing.assert_allclose(np.asarray(back), np.asarray(g),
+                                   atol=float(np.asarray(s).max()) * 0.51)

