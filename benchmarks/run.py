@@ -90,21 +90,20 @@ def bench_table1(steps=60):
 
 
 def bench_train_step():
-    from repro.configs import SMOKE_ARCHS
-    from repro.configs.base import RunConfig, ShapeConfig
-    from repro.core.trainer import Trainer
-    from repro.models.registry import build_model
-    shape = ShapeConfig("b", 128, 4, "train")
+    import tempfile
+    from repro.launch.session import TrainSession
     for arch in ("paper-350m", "qwen3-8b", "dbrx-132b", "falcon-mamba-7b",
                  "recurrentgemma-2b"):
-        cfg = SMOKE_ARCHS[arch]
-        run = RunConfig(model=cfg, shape=shape, total_steps=100)
-        model = build_model(cfg, run)
-        tr = Trainer(model, run, mesh=None, strategy="acesync")
-        state = tr.init_state(jax.random.PRNGKey(0))
-        batch = model.make_batch(jax.random.PRNGKey(1), shape)
+        # empty per-run ckpt dir: always a fresh init, never a restore
+        sess = TrainSession.from_config(arch, strategy="acesync",
+                                        seq_len=128, batch=4, steps=100,
+                                        ckpt_dir=tempfile.mkdtemp())
+        tr = sess.trainer
+        state = sess.init()
+        shape = sess.run_config.shape
+        batch = sess.model.make_batch(jax.random.PRNGKey(1), shape)
         plan = tr.default_plan()
-        fn = tr.step_fn(plan, "grad_sync")
+        fn = tr.step_fn(plan, tr.strategy.representative_kind)
 
         def step(s):
             s2, m = fn(s, batch)
@@ -113,6 +112,23 @@ def bench_train_step():
         tok = shape.global_batch * shape.seq_len
         row(f"train_step_smoke_{arch}", us,
             f"{tok/(us/1e6):.0f}tok_s")
+
+
+def bench_strategy_loop(steps=12):
+    """One short hosted loop per registered strategy via the TrainSession
+    facade — proves every registry entry trains end-to-end and prices its
+    pod-tier traffic."""
+    from repro.strategies import list_strategies
+    from repro.launch.session import TrainSession
+    for name in list_strategies():
+        sess = TrainSession.from_config(
+            "paper-350m", strategy=name, seq_len=64, batch=4, steps=steps,
+            ckpt_every=0, ckpt_dir="/tmp/repro_bench_ckpt_" + name)
+        t0 = time.perf_counter()
+        sess.run(steps, log_every=0)
+        us = (time.perf_counter() - t0) * 1e6 / steps
+        row(f"strategy_loop_{name}", us,
+            f"loss={sess.losses[-1]:.3f};comm={sess.comm_bytes/1e6:.2f}MB")
 
 
 def bench_decode_step():
@@ -162,6 +178,7 @@ def main() -> None:
     bench_compression()
     bench_kernels()
     bench_train_step()
+    bench_strategy_loop()
     bench_decode_step()
     bench_roofline_summary()
     bench_table1(steps=int(os.environ.get("TABLE1_STEPS", "60")))

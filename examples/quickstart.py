@@ -1,34 +1,26 @@
-"""Quickstart: build a reduced model, train 40 ACE-Sync steps on CPU, serve
-a few tokens. Run:  PYTHONPATH=src python examples/quickstart.py"""
+"""Quickstart: build a reduced model, train 40 ACE-Sync steps on CPU via
+the TrainSession facade. Run:  PYTHONPATH=src python examples/quickstart.py"""
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-import jax
 
-from repro.configs import SMOKE_ARCHS
-from repro.configs.base import RunConfig, ShapeConfig
-from repro.core.trainer import Trainer
-from repro.data.pipeline import TokenPipeline
-from repro.models.registry import build_model
+from repro.launch.session import TrainSession
 
-cfg = SMOKE_ARCHS["qwen3-8b"]          # reduced qwen3 family config
-shape = ShapeConfig("quick", 128, 4, "train")
-run = RunConfig(model=cfg, shape=shape, total_steps=40, warmup_steps=4,
-                lr=2e-3)
-model = build_model(cfg, run)
+sess = TrainSession.from_config(
+    "qwen3-8b",                        # reduced qwen3 family config
+    strategy="acesync", seq_len=128, batch=4, steps=40,
+    warmup_steps=4, lr=2e-3, ckpt_every=0,
+    ckpt_dir="/tmp/repro_quickstart")
+print("strategy:", sess.strategy.name)
 
-trainer = Trainer(model, run, strategy="acesync")
-state = trainer.init_state(jax.random.PRNGKey(0))
-pipe = TokenPipeline(model, shape, seed=0)
+sess.run(log_every=10)
 
-plan = trainer.default_plan(bandwidth_mbps=40.0)   # eq (5) budget
+# the plan the control loop actually executed (telemetry + importance ->
+# eq-(5) budget -> knapsack)
+trainer = sess.trainer
+plan = sess.loop.plan
 print("compression plan:",
       {g.name.split("/")[-1]: plan.level_of(i).name
        for i, g in enumerate(trainer.metas)})
-step = trainer.step_fn(plan, "grad_sync")
-for i in range(run.total_steps):
-    state, metrics = step(state, next(pipe))
-    if i % 10 == 0:
-        print(f"step {i:3d}  loss {float(metrics['loss']):.4f}  "
-              f"imp_mse {float(metrics['imp_mse']):.5f}")
+print(f"loss {sess.losses[0]:.4f} -> {sess.losses[-1]:.4f}")
 print("wire bytes/sync:", trainer.scheduler.plan_wire_bytes(plan),
       "vs fullsync:", trainer.scheduler.fullsync_wire_bytes())

@@ -3,36 +3,29 @@ CPU) for a few hundred steps with the full ACE-Sync control loop —
 telemetry, clustering, knapsack plans, divergence-adapted H, checkpoints.
 
 Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+      [--strategy acesync|fullsync|topk|fedavg|localsgd|bandwidth_tiered]
 """
 import argparse
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-import jax
 
-from repro.configs import SMOKE_ARCHS
-from repro.configs.base import ACESyncConfig, RunConfig, ShapeConfig
-from repro.data.pipeline import TokenPipeline
-from repro.launch.train import TrainLoop
-from repro.models.registry import build_model
+from repro.configs.base import ACESyncConfig
+from repro.launch.session import TrainSession
+from repro.strategies import list_strategies
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--steps", type=int, default=300)
-ap.add_argument("--strategy", default="acesync")
+ap.add_argument("--strategy", default="acesync", choices=list_strategies())
 ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
 args = ap.parse_args()
 
-cfg = SMOKE_ARCHS["paper-350m"]
-shape = ShapeConfig("e2e", 256, 8, "train")
-run = RunConfig(model=cfg, shape=shape, total_steps=args.steps,
-                warmup_steps=20, lr=2e-3, ckpt_every=100,
-                ckpt_dir=args.ckpt_dir,
-                acesync=ACESyncConfig(replan_every=50))
-model = build_model(cfg, run)
-loop = TrainLoop(model, run, strategy=args.strategy, n_edge_devices=64)
-pipe = TokenPipeline(model, shape, seed=0)
-state = loop.restore_or_init(jax.random.PRNGKey(0), pipe)
-state = loop.run_steps(state, pipe, args.steps, log_every=20)
-loop.ckpt.wait()
-losses = [h["loss"] for h in loop.history if "loss" in h]
-print(f"loss {losses[0]:.4f} -> {losses[-1]:.4f} over {len(losses)} steps")
+sess = TrainSession.from_config(
+    "paper-350m", strategy=args.strategy, steps=args.steps,
+    n_edge_devices=64, warmup_steps=20, lr=2e-3, ckpt_every=100,
+    ckpt_dir=args.ckpt_dir, acesync=ACESyncConfig(replan_every=50))
+sess.run(log_every=20)
+sess.finish()
+losses = sess.losses
+print(f"loss {losses[0]:.4f} -> {losses[-1]:.4f} over {len(losses)} steps "
+      f"(comm {sess.comm_bytes / 1e6:.2f}MB)")
 assert losses[-1] < losses[0]

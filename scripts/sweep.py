@@ -14,6 +14,7 @@ os.makedirs(OUT, exist_ok=True)
 sys.path.insert(0, os.path.join(ROOT, "src"))
 
 from repro.configs import cells  # noqa: E402
+from repro.strategies import list_strategies  # noqa: E402
 
 
 def done_ok(mesh, arch, shape, strategy):
@@ -63,9 +64,12 @@ def main():
         todo.append((arch, shape, True, "acesync"))
     for arch, shape in cells():
         todo.append((arch, shape, False, "acesync"))
-    # strategy comparison (HLO-level Table 1 evidence)
+    # strategy comparison (HLO-level Table 1 evidence): every registered
+    # strategy on the paper arch, the paper's four on qwen3-8b
+    for s in list_strategies():
+        if s != "acesync":
+            todo.append(("paper-350m", "train_4k", True, s))
     for s in ("fullsync", "topk", "fedavg"):
-        todo.append(("paper-350m", "train_4k", True, s))
         todo.append(("qwen3-8b", "train_4k", True, s))
     todo.append(("paper-350m", "train_4k", True, "acesync"))
     todo.append(("paper-350m", "train_4k", False, "acesync"))

@@ -1,0 +1,46 @@
+"""Version-compatibility shims over the moving jax API surface.
+
+The repo targets the modern ``jax.shard_map(..., axis_names=, check_vma=)``
+entry point; older installs (jax < 0.5) only ship
+``jax.experimental.shard_map.shard_map(..., auto=, check_rep=)`` and have
+no ``jax.sharding.AxisType``.  Everything feature-detects — no version
+string parsing.
+"""
+from __future__ import annotations
+
+import jax
+
+#: modern jax supports partial-manual shard_map (auto axes) under which
+#: lax.scan / remat lower fine; the old experimental shard_map hits XLA
+#: CHECK failures (hlo_sharding_util manual-subgroup) for scan bodies in
+#: mixed manual/auto regions — there we fall back to fully-manual regions
+#: with replicated compute over the would-be-auto axes.
+PARTIAL_MANUAL = hasattr(jax, "shard_map")
+
+
+def manual_axes_for(mesh, requested):
+    """The axis set to mark manual: ``requested`` on modern jax, every
+    mesh axis on old jax (see PARTIAL_MANUAL)."""
+    return set(requested) if PARTIAL_MANUAL else set(mesh.axis_names)
+
+
+def shard_map(fn, mesh, *, in_specs, out_specs, manual_axes,
+              infer_mesh: bool = False):
+    """Partial-manual shard_map over ``manual_axes`` of ``mesh``.
+
+    ``infer_mesh``: the call site sits inside an enclosing manual region
+    and (on modern jax) should pick up the context mesh instead of binding
+    ``mesh`` explicitly.  Old jax cannot infer — there the physical mesh is
+    always passed and the already-manual axes land in ``auto``.
+    """
+    manual = set(manual_axes)
+    if hasattr(jax, "shard_map"):
+        kw = dict(in_specs=in_specs, out_specs=out_specs,
+                  axis_names=manual, check_vma=False)
+        if not infer_mesh:
+            kw["mesh"] = mesh
+        return jax.shard_map(fn, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset(mesh.axis_names) - manual
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False, auto=auto)

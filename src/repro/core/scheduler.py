@@ -112,6 +112,19 @@ class Scheduler:
         return SyncPlan(tuple(choice), tuple(self.levels),
                         self._omega(omega), self.sync_interval)
 
+    def plan_from_levels(self, level_idx: Sequence[int],
+                         omega: Optional[Sequence[float]] = None,
+                         sync_interval: Optional[int] = None) -> SyncPlan:
+        """Build a plan from explicit per-group level indices — the public
+        seam for strategies that pick levels without the knapsack."""
+        if len(level_idx) != len(self.sizes):
+            raise ValueError(f"expected {len(self.sizes)} level indices, "
+                             f"got {len(level_idx)}")
+        return SyncPlan(tuple(int(i) for i in level_idx), tuple(self.levels),
+                        self._omega(omega),
+                        self.sync_interval if sync_interval is None
+                        else sync_interval)
+
     def adapt_interval(self, divergence: float, div_ref: float) -> int:
         """Paper eq (9) control: grow H when divergence is small, shrink
         when it exceeds the threshold band."""

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import compression as C
 from repro.core.scheduler import SyncPlan
 from repro.models.shardctx import norm_spec
@@ -220,18 +221,21 @@ def sync_tree(tree, errors, plan: SyncPlan, *, mesh, shardings,
         level = plan.level_of(i)
         fn = functools.partial(_leaf_sync_local, level=level, gamma=gamma,
                                n_pods=n_pods, block=block)
-        if mesh is not None:
+        if mesh is not None and (compat.PARTIAL_MANUAL or not inside_manual):
             aspec = norm_spec(spec if spec is not None else P(), mesh)
             # drop the pod axis from specs (manual outside already)
             aspec = P(*[None if ax == POD_AXIS else ax for ax in aspec])
-            kw = dict(in_specs=(aspec, aspec, P(None), P()),
-                      out_specs=(aspec, aspec),
-                      axis_names=set(_auto_axes(mesh)), check_vma=False)
-            if not inside_manual:
-                kw["mesh"] = mesh  # no surrounding shard_map: pass explicitly
-            inner = jax.shard_map(fn, **kw)
+            inner = compat.shard_map(
+                fn, mesh, in_specs=(aspec, aspec, P(None), P()),
+                out_specs=(aspec, aspec),
+                manual_axes=set(_auto_axes(mesh)),
+                # surrounding per-pod shard_map (if any) provides the mesh
+                infer_mesh=inside_manual)
             agg, new_e = inner(g, e, omega, omega_own)
         else:
+            # no mesh, or old-jax fully-manual region (leaves replicated
+            # over data/model there): device-local math, pod collectives
+            # still bound by the enclosing manual region
             agg, new_e = fn(g, e, omega, omega_own)
         agg_out.append(agg)
         err_out.append(new_e)

@@ -12,8 +12,12 @@ Step kinds
               anchor (ACE-Sync local-update mode / FedAvg with EF).
   param_avg   plain omega-weighted parameter averaging (FedAvg baseline).
 
-Strategies (paper Table 1): fullsync, topk, fedavg, acesync — all expressed
-as (plan, step-kind schedule) pairs over the same machinery.
+Strategies are first-class :class:`repro.strategies.SyncStrategy` objects
+(paper Table 1's fullsync/topk/fedavg/acesync plus any registered
+extension) — each one a (plan, step-kind schedule) policy over the same
+machinery.  The trainer only executes step kinds; every strategy decision
+(anchor state, plan construction, scheduling, H control) lives on the
+strategy object resolved from the registry.
 
 State layout: every leaf carries a leading pod-replica dim (n_pods, ...)
 sharded P("pod", ...), which is what lets pods hold *divergent* values
@@ -22,12 +26,13 @@ between syncs while remaining one SPMD program.
 from __future__ import annotations
 
 import functools
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import RunConfig
 from repro.core import acesync
 from repro.core import sync as S
@@ -35,6 +40,7 @@ from repro.core import divergence as D
 from repro.core.scheduler import Scheduler, SyncPlan
 from repro.models.shardctx import use_shard_ctx, norm_spec, sharding_for
 from repro.optim import adamw
+from repro.strategies import SyncStrategy, resolve_strategy
 
 POD = S.POD_AXIS
 
@@ -53,11 +59,12 @@ def _pod_prefix(spec: P, rank: int) -> P:
 
 class Trainer:
     def __init__(self, model, run: RunConfig, mesh: Optional[Mesh] = None,
-                 strategy: str = "acesync"):
+                 strategy: Union[str, SyncStrategy] = "acesync"):
         self.model = model
         self.run = run
         self.mesh = mesh
-        self.strategy = strategy
+        self.strategy = resolve_strategy(strategy)
+        self.strategy_name = self.strategy.name
         self.n_pods = _n_pods(mesh)
         self.param_specs = model.param_specs()
         self.param_shardings = model.param_shardings()
@@ -70,9 +77,6 @@ class Trainer:
     # ------------------------------------------------------------------
     # state
     # ------------------------------------------------------------------
-    def _needs_anchor(self) -> bool:
-        return self.strategy in ("acesync", "fedavg")
-
     def init_state(self, rng):
         params = self.model.init(rng)
         opt = adamw.init_opt_state(params)
@@ -80,8 +84,7 @@ class Trainer:
                                  self.run.acesync)
         state = {"params": params, "m": opt["m"], "v": opt["v"],
                  "step": jnp.zeros((), jnp.int32), "ace": ace}
-        if self._needs_anchor():
-            state["anchor"] = jax.tree.map(jnp.copy, params)
+        state.update(self.strategy.extra_state(params))
         # add the pod-replica leading dim
         return jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (self.n_pods,) + x.shape),
@@ -93,8 +96,7 @@ class Trainer:
         ace = acesync.state_specs(params, self.run.acesync)
         state = {"params": params, "m": params, "v": params,
                  "step": jax.ShapeDtypeStruct((), jnp.int32), "ace": ace}
-        if self._needs_anchor():
-            state["anchor"] = params
+        state.update(self.strategy.extra_state_specs(params))
         return jax.tree.map(
             lambda s: jax.ShapeDtypeStruct((self.n_pods,) + s.shape, s.dtype),
             state)
@@ -125,8 +127,9 @@ class Trainer:
               "ace": jax.tree.map(other, specs["ace"])}
         # error buffers follow the param sharding
         sh["ace"] = sh["ace"]._replace(errors=params_sh)
-        if self._needs_anchor():
-            sh["anchor"] = params_sh
+        # strategy extra state (e.g. the anchor) is param-like by contract
+        for key in self.strategy.extra_state_specs(self.param_specs):
+            sh[key] = params_sh
         return sh
 
     def batch_shardings(self, shape):
@@ -257,17 +260,19 @@ class Trainer:
         else:
             state_specs = self.state_specs()
             state_in = jax.tree.map(lambda l: P(POD), state_specs)
+            # modern jax: manual over "pod" only, data/model auto under XLA
+            # SPMD; old jax: fully manual, data/model-replicated compute
+            manual = compat.manual_axes_for(mesh, {POD})
 
             def wrapped(state, batch):
-                with use_shard_ctx(mesh, exclude=(POD,)):
+                with use_shard_ctx(mesh, exclude=tuple(manual)):
                     return body(state, batch)
 
-            smapped = jax.shard_map(
-                wrapped,
-                mesh=mesh,
+            smapped = compat.shard_map(
+                wrapped, mesh,
                 in_specs=(state_in, P(POD)),
                 out_specs=(state_in, P()),
-                axis_names={POD}, check_vma=False)
+                manual_axes=manual)
             fn = jax.jit(smapped, donate_argnums=(0,))
         self._step_cache[key] = fn
         return fn
@@ -275,12 +280,8 @@ class Trainer:
     # convenience plans per strategy ------------------------------------
     def default_plan(self, importance=None, bandwidth_mbps: float = 50.0,
                      omega=None) -> SyncPlan:
-        if self.strategy == "fullsync":
-            return self.scheduler.full_plan(omega)
-        if self.strategy == "topk":
-            return self.scheduler.uniform_topk_plan(0.1, omega)
-        if self.strategy == "fedavg":
-            return self.scheduler.full_plan(omega)
-        imp = (importance if importance is not None
-               else [1.0] * len(self.metas))
-        return self.scheduler.plan(imp, bandwidth_mbps, omega)
+        """Strategy-owned plan from a synthetic one-device telemetry
+        snapshot (the host loop passes real telemetry instead)."""
+        return self.strategy.make_plan(
+            self.scheduler, importance=importance,
+            telemetry=[{"bandwidth_mbps": bandwidth_mbps}], omega=omega)

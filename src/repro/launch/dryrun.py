@@ -21,6 +21,7 @@ from repro.launch import mesh as mesh_lib
 from repro.models.registry import build_model
 from repro.models.flops import model_flops
 from repro.models.shardctx import use_shard_ctx, sharding_for, norm_spec
+from repro.strategies import list_strategies
 
 
 def _with_sharding(specs, shardings_tree, mesh):
@@ -43,14 +44,14 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     if shape.kind == "train":
         trainer = Trainer(model, run, mesh=mesh, strategy=strategy)
         plan = trainer.default_plan(bandwidth_mbps=50.0)
-        fn = trainer.step_fn(plan, "grad_sync")
+        fn = trainer.step_fn(plan, trainer.strategy.representative_kind)
         state = _with_sharding(trainer.state_specs(),
                                trainer.state_shardings(), mesh)
         batch = _with_sharding(model.input_specs(shape),
                                trainer.batch_shardings(shape), mesh)
         lowered = fn.lower(state, batch)
         extra = {"plan": [plan.levels[i].name for i in plan.level_idx],
-                 "strategy": strategy}
+                 "strategy": trainer.strategy_name}
     else:
         # serving: bf16 params, no pod-replica dim
         isP = lambda x: isinstance(x, jax.sharding.PartitionSpec)  # noqa
@@ -171,7 +172,7 @@ def main():
     ap.add_argument("--shape", default=None)
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--strategy", default="acesync",
-                    choices=["acesync", "fullsync", "topk", "fedavg"])
+                    choices=list_strategies())
     ap.add_argument("--out", default="benchmarks/results")
     ap.add_argument("--remat", default=None)
     ap.add_argument("--q-chunk", type=int, default=None)

@@ -15,7 +15,7 @@ from __future__ import annotations
 import argparse
 import json
 import time
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import numpy as np
@@ -31,26 +31,35 @@ from repro.data.telemetry import make_profiles, snapshot, bandwidth_at
 from repro.models.registry import build_model
 from repro.runtime.fault_tolerance import (HeartbeatMonitor,
                                            StragglerDetector)
+from repro.strategies import SYNC_KINDS, SyncStrategy, list_strategies, \
+    resolve_strategy
 
 
 class TrainLoop:
     """Host control loop around the jitted per-pod steps."""
 
     def __init__(self, model, run: RunConfig, mesh=None,
-                 strategy: str = "acesync", n_edge_devices: int = 8,
-                 seed: int = 0):
+                 strategy: Union[str, SyncStrategy] = "acesync",
+                 n_edge_devices: int = 8, seed: int = 0):
         self.model = model
         self.run = run
         self.mesh = mesh
-        self.strategy = strategy
         self.trainer = Trainer(model, run, mesh=mesh, strategy=strategy)
+        self.strategy = self.trainer.strategy
         self.ckpt = Checkpointer(run.ckpt_dir)
         self.profiles = make_profiles(n_edge_devices, seed)
         self.monitor = HeartbeatMonitor(max(self.trainer.n_pods, 1))
         self.straggler = StragglerDetector()
         self.history = []
+        self.comm_bytes = 0.0
         self._plan = None
         self._steps_since_sync = 0
+
+    @property
+    def plan(self):
+        """The SyncPlan currently being executed (None before the first
+        refresh)."""
+        return self._plan
 
     # ---- policy refresh (host side, every replan_every steps) ----------
     def refresh_plan(self, state, step: int):
@@ -69,36 +78,28 @@ class TrainLoop:
         tot = sum(omega)
         omega = tuple(w / tot for w in omega)
 
-        if self.strategy == "acesync":
+        imp = None
+        if self.strategy.uses_importance:
             imp = np.asarray(jax.device_get(acesync.current_scores(
                 jax.tree.map(lambda x: x[0], state["ace"]),
                 cfg))).tolist()
-            bw = float(np.mean([t["bandwidth_mbps"] for t in telem]))
-            self._plan = self.trainer.scheduler.plan(imp, bw, omega)
-        elif self.strategy == "topk":
-            self._plan = self.trainer.scheduler.uniform_topk_plan(0.1, omega)
-        else:
-            self._plan = self.trainer.scheduler.full_plan(omega)
+        self._plan = self.strategy.make_plan(
+            self.trainer.scheduler, importance=imp, telemetry=telem,
+            omega=omega)
         return self._plan
 
     def adapt_interval(self, state):
-        """Divergence-driven H control (eq 9); acesync/fedavg only."""
-        if self.strategy not in ("acesync", "fedavg"):
-            return 1
+        """Sync-interval control (eq 9); a fixed H for static strategies."""
         ace = jax.tree.map(lambda x: x[0], state["ace"])
         div = float(jax.device_get(ace.div_ema))
-        # reference scale: parameter-norm estimate would need a projection
-        # pass; use the EMA trend itself (relative control)
-        return self.trainer.scheduler.adapt_interval(div, max(div, 1e-8)
-                                                     * 10.0)
+        return self.strategy.adapt(self.trainer.scheduler, div)
 
     # ---- main loop ------------------------------------------------------
     def run_steps(self, state, pipeline, n_steps: int,
                   log_every: int = 10):
         run = self.run
         cfg = run.acesync
-        H = (cfg.sync_interval_init
-             if self.strategy in ("acesync", "fedavg") else 1)
+        H = self.strategy.initial_interval(cfg)
         if self._plan is None:
             self.refresh_plan(state, 0)
         for i in range(n_steps):
@@ -109,24 +110,18 @@ class TrainLoop:
                 H = self.adapt_interval(state)
             batch = next(pipeline)
             t0 = time.time()
-            if H <= 1:
-                fn = self.trainer.step_fn(self._plan, "grad_sync")
-                state, metrics = fn(state, batch)
+            kinds = self.strategy.step_schedule(self._steps_since_sync, H)
+            metrics = {}
+            for kind in kinds:
+                fn = self.trainer.step_fn(self._plan, kind)
+                state, m = fn(state, batch)
+                metrics.update(m)
+                self.comm_bytes += self.strategy.wire_bytes(
+                    self.trainer.scheduler, self._plan, kind)
+            if SYNC_KINDS & set(kinds):
+                self._steps_since_sync = 0
             else:
-                kind = ("local" if (self._steps_since_sync + 1) % H
-                        else ("delta_sync" if self.strategy == "acesync"
-                              else "param_avg"))
-                if kind == "local":
-                    fn = self.trainer.step_fn(self._plan, "local")
-                    state, metrics = fn(state, batch)
-                    self._steps_since_sync += 1
-                else:
-                    fn = self.trainer.step_fn(self._plan, "local")
-                    state, metrics = fn(state, batch)
-                    fn2 = self.trainer.step_fn(self._plan, kind)
-                    state, m2 = fn2(state, batch)
-                    metrics.update(m2)
-                    self._steps_since_sync = 0
+                self._steps_since_sync += 1
             dt = time.time() - t0
             for pod in range(self.trainer.n_pods):
                 self.monitor.beat(pod, dt)
@@ -159,31 +154,30 @@ class TrainLoop:
 
 
 def main():
+    from repro.launch.session import TrainSession
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="paper-350m")
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced config (CPU-runnable)")
     ap.add_argument("--strategy", default="acesync",
-                    choices=["acesync", "fullsync", "topk", "fedavg"])
+                    choices=list_strategies())
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--seq-len", type=int, default=256)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     args = ap.parse_args()
 
-    cfg = (SMOKE_ARCHS if args.smoke else ARCHS)[args.arch]
-    shape = ShapeConfig("cli", args.seq_len, args.batch, "train")
-    run = RunConfig(model=cfg, shape=shape, total_steps=args.steps,
-                    ckpt_dir=args.ckpt_dir, warmup_steps=10)
-    model = build_model(cfg, run)
-    loop = TrainLoop(model, run, mesh=None, strategy=args.strategy)
-    pipeline = TokenPipeline(model, shape, seed=0)
-    state = loop.restore_or_init(jax.random.PRNGKey(run.seed), pipeline)
-    state = loop.run_steps(state, pipeline, args.steps)
-    loop.ckpt.wait()
-    losses = [h["loss"] for h in loop.history if "loss" in h]
+    sess = TrainSession.from_config(
+        args.arch, strategy=args.strategy, smoke=args.smoke,
+        seq_len=args.seq_len, batch=args.batch, steps=args.steps,
+        warmup_steps=10, ckpt_dir=args.ckpt_dir)
+    sess.run(args.steps)
+    sess.finish()
+    losses = sess.losses
     print(json.dumps({"first_loss": losses[0], "last_loss": losses[-1],
-                      "steps": len(losses)}))
+                      "steps": len(losses),
+                      "comm_bytes": sess.comm_bytes}))
 
 
 if __name__ == "__main__":

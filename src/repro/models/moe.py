@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.models.shardctx import constrain, batch_spec, token_spec
 
 
@@ -132,6 +133,10 @@ def moe_apply(p, x, cfg):
 
     excl = current_exclude()
     names = set(mesh.axis_names) - set(excl)
+    if not names:
+        # fully-manual enclosing region (old-jax compat): tokens/weights
+        # are device-local replicas — run the single-device math
+        return local(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
     ep_axis = "model" if ("model" in names and E % mesh.shape["model"] == 0) \
         else None
     fsdp_axis = "data" if "data" in names else None
@@ -153,14 +158,14 @@ def moe_apply(p, x, cfg):
     out_spec = x_spec
 
     fn = functools.partial(local, ep_axis=ep_axis, fsdp_axis=fsdp)
-    kw = dict(in_specs=(x_spec, w_specs["router"], w_specs["w_gate"],
-                        w_specs["w_up"], w_specs["w_down"]),
-              out_specs=out_spec,
-              axis_names=names, check_vma=False)
-    if not excl:
-        kw["mesh"] = mesh
-    return jax.shard_map(fn, **kw)(x, p["router"], p["w_gate"], p["w_up"],
-                                   p["w_down"])
+    smapped = compat.shard_map(
+        fn, mesh,
+        in_specs=(x_spec, w_specs["router"], w_specs["w_gate"],
+                  w_specs["w_up"], w_specs["w_down"]),
+        out_specs=out_spec, manual_axes=names,
+        # enclosing manual region (excl) provides the context mesh
+        infer_mesh=bool(excl))
+    return smapped(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
 
 
 def load_balance_loss(logits_f32, eidx, cfg):

@@ -16,6 +16,8 @@ from typing import Optional, Sequence, Union
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 _state = threading.local()
 
 # canonical axes
@@ -98,9 +100,15 @@ def constrain(x, spec: P):
     mesh = current_mesh()
     if mesh is None:
         return x
+    if set(current_exclude()) >= set(mesh.axis_names):
+        return x  # fully-manual region: nothing left to constrain
     fitted = fit_spec(spec, x.shape, mesh, current_exclude())
     if current_exclude():
-        return jax.lax.with_sharding_constraint(x, fitted)
+        if compat.PARTIAL_MANUAL:
+            return jax.lax.with_sharding_constraint(x, fitted)
+        # old jax: bare specs only resolve under a physical-mesh context
+        with mesh:
+            return jax.lax.with_sharding_constraint(x, fitted)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, fitted))
 
 

@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip, the rest of the module runs
+    from hypothesis_stub import given, settings, st
 
 from repro.kernels import ops, ref
 from repro.kernels.topk_compress import ef_topk_select, LANES, ROWS
