@@ -38,7 +38,6 @@ def row(name, us, derived=""):
 
 def bench_compression():
     from repro.core import compression as C
-    from repro.core.sync import _leaf_sync_local
     n = 1 << 20  # 1M gradient entries
     g = jnp.asarray(np.random.RandomState(0).randn(n).astype(np.float32))
     e = jnp.zeros_like(g)
@@ -47,13 +46,68 @@ def bench_compression():
                              ("TOPK10_INT8", 0.10, 8),
                              ("TOPK1_INT8", 0.01, 8)]:
         level = C.Level(name, keep, bits)
-        fn = jax.jit(lambda g, e, lv=level: _leaf_sync_local(
-            g, e, om, om[0], level=lv, gamma=1.0, n_pods=1, block=1024))
+        fn = jax.jit(lambda g, e, c=level.codec: c.ef_sync(
+            g, e, om, om[0], gamma=1.0, n_pods=1, block=1024,
+            use_pallas=False))
         us = _time(fn, g, e)
         mbps = n * 4 / (us / 1e6) / 1e6
         wire = level.wire_bytes(n, 2)
         row(f"sync_leaf_{name}_1M", us,
             f"{mbps:.0f}MBps;wire={wire/1e3:.0f}KB")
+
+
+def bench_codecs(out_path=None):
+    """Per-codec microbenchmark: analytic wire bytes + wall time per size,
+    written to benchmarks/results/BENCH_codecs.json so the perf trajectory
+    accumulates in CI.  Sizes include the total gradient volume of the
+    paper-350m SMOKE config (the reduced-width variant CI can afford —
+    ~1e5 grads, not the full 350M model)."""
+    from repro.codecs import build_codec, list_codecs
+    from repro.configs import SMOKE_ARCHS
+    from repro.core import sync as S
+    from repro.kernels import ops as kops
+    from repro.models.registry import build_model
+
+    model = build_model(SMOKE_ARCHS["paper-350m"])
+    model_total = int(sum(m.size for m in
+                          S.group_metas(model.param_specs())))
+    sizes = [1 << 18, 1 << 20, model_total]
+    om = jnp.ones((1,), jnp.float32)
+    records = []
+    for name in list_codecs():
+        codec = build_codec(name)
+        for n in sizes:
+            g = jnp.asarray(np.random.RandomState(0)
+                            .randn(n).astype(np.float32))
+            e = jnp.zeros_like(g)
+
+            def run(g, e, c=codec, up=False):
+                return c.ef_sync(g, e, om, om[0], gamma=1.0, n_pods=1,
+                                 block=1024, use_pallas=up)
+
+            us = _time(jax.jit(run), g, e, iters=3, warmup=1)
+            rec = {"codec": name, "n": n, "wall_us": round(us, 1),
+                   "gb_per_s": round(n * 4 / (us / 1e6) / 1e9, 3),
+                   "wire_bytes_2pods": codec.wire_bytes(n, 2),
+                   "is_model_total": n == model_total}
+            if kops.default_use_pallas():
+                # compiled Pallas path (accelerators; interpret is not a
+                # meaningful perf number on CPU)
+                usp = _time(jax.jit(lambda g, e: run(g, e, up=True)),
+                            g, e, iters=3, warmup=1)
+                rec["wall_us_pallas"] = round(usp, 1)
+            records.append(rec)
+            row(f"codec_{name}_{n}", us,
+                f"wire={rec['wire_bytes_2pods']/1e3:.0f}KB")
+    out = out_path or os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "results",
+        "BENCH_codecs.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump({"backend": jax.default_backend(),
+                   "paper_350m_smoke_total_grads": model_total,
+                   "records": records}, f, indent=1)
+    print(f"wrote {out}", flush=True)
 
 
 def bench_kernels():
@@ -175,8 +229,12 @@ def bench_roofline_summary():
 
 def main() -> None:
     print("name,us_per_call,derived")
+    if "--codecs" in sys.argv:
+        bench_codecs()
+        return
     bench_compression()
     bench_kernels()
+    bench_codecs()
     bench_train_step()
     bench_strategy_loop()
     bench_decode_step()

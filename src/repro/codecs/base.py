@@ -1,0 +1,297 @@
+"""First-class compression codecs for the sync wire.
+
+A :class:`Codec` owns everything one rung of the compression ladder used to
+smear across four layers (``core/compression.py``, ``core/sync.py``,
+``core/knapsack.py``, ``Scheduler``):
+
+  * ``encode`` / ``decode``       — the wire format on blocked gradients
+    (the pure-jnp oracle path, bit-exact to the seed operators);
+  * ``ef_encode``                 — the fused device-local hot path:
+    error feedback + compression through the Pallas kernels in
+    ``repro/kernels`` when ``use_pallas`` is on;
+  * ``pod_exchange``              — the codec's aggregation math over the
+    slow "pod" axis.  The default packs the whole payload pytree into ONE
+    flat uint8 buffer and issues ONE ``all_gather``, so a sync round costs
+    one collective per codec no matter how many payload components the
+    wire format carries;
+  * ``wire_bytes``                — analytic per-device on-the-wire bytes
+    for the collective the codec actually issues (all_gather receive
+    volume for gather codecs, ring all-reduce bytes for psum codecs).
+    This is the ONE place comm volume is priced: the scheduler, the
+    knapsack, Table 1 and the dry-run byte assertions all read it, and
+    tests/test_collectives.py pins it to the traced HLO collective bytes.
+
+Codecs register by name with :func:`register_codec` (mirroring
+``repro/strategies``); ``Level`` (core/compression.py) is now a thin view
+that resolves to a registered codec via :func:`codec_for_level`.
+"""
+from __future__ import annotations
+
+import math
+from collections import defaultdict
+from typing import Dict, List, Sequence, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression import BLOCK, pad_to_blocks
+
+#: the bandwidth-constrained mesh axis payloads cross (see core/sync.py).
+POD_AXIS = "pod"
+
+
+# ---------------------------------------------------------------------------
+# payload packing: one uint8 wire buffer per codec
+# ---------------------------------------------------------------------------
+
+
+def pack_payload(payload: Dict[str, jax.Array]
+                 ) -> Tuple[jax.Array, tuple]:
+    """Bitcast + concatenate a payload pytree into one flat uint8 buffer.
+
+    Keys are packed in sorted order so the layout is deterministic; the
+    returned ``meta`` (static) is what :func:`unpack_payload` needs to
+    invert the packing on the receiving side.
+    """
+    parts, meta = [], []
+    for key in sorted(payload):
+        a = payload[key]
+        u8 = jax.lax.bitcast_convert_type(a, jnp.uint8)
+        parts.append(u8.reshape(-1))
+        meta.append((key, tuple(a.shape), jnp.dtype(a.dtype)))
+    if not parts:
+        return jnp.zeros((0,), jnp.uint8), tuple(meta)
+    wire = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+    return wire, tuple(meta)
+
+
+def unpack_payload(wire: jax.Array, meta: tuple) -> Dict[str, jax.Array]:
+    """Inverse of :func:`pack_payload` (static offsets from ``meta``)."""
+    out, off = {}, 0
+    for key, shape, dtype in meta:
+        elems = math.prod(shape) if shape else 1
+        nbytes = elems * dtype.itemsize
+        seg = wire[off:off + nbytes]
+        if dtype.itemsize == 1:
+            arr = jax.lax.bitcast_convert_type(seg.reshape(shape), dtype)
+        else:
+            arr = jax.lax.bitcast_convert_type(
+                seg.reshape(shape + (dtype.itemsize,)), dtype)
+        out[key] = arr
+        off += nbytes
+    return out
+
+
+def pack_bits(bools: jax.Array) -> jax.Array:
+    """(rows, C) boolean -> (rows, C // 8) uint8, bit i = column 8r+i."""
+    rows, c = bools.shape
+    b = bools.reshape(rows, c // 8, 8).astype(jnp.uint8)
+    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
+    return jnp.sum(b * weights, axis=-1).astype(jnp.uint8)
+
+
+def unpack_bits(packed: jax.Array, c: int) -> jax.Array:
+    """Inverse of :func:`pack_bits` -> (rows, c) {0, 1} uint8."""
+    bits = (packed[..., None] >> jnp.arange(8, dtype=jnp.uint8)) & 1
+    return bits.reshape(packed.shape[0], c)
+
+
+def n_blocks(n: int, block: int = BLOCK) -> int:
+    return (n + block - 1) // block
+
+
+# ---------------------------------------------------------------------------
+# the Codec contract
+# ---------------------------------------------------------------------------
+
+
+class Codec:
+    """One wire format: compression math + pod aggregation + accounting."""
+
+    #: registry key; subclasses must override.
+    name: str = ""
+    #: bits per transmitted value (accounting/ladder ordering only).
+    value_bits: int = 16
+    #: fraction of entries transmitted (1.0 = dense).
+    keep_ratio: float = 1.0
+
+    # ---- accounting -----------------------------------------------------
+    def payload_bytes(self, n: int, block: int = BLOCK) -> int:
+        """Per-device payload size actually put on the wire (== the packed
+        uint8 buffer size from :func:`pack_payload`)."""
+        raise NotImplementedError
+
+    def wire_bytes(self, n: int, n_pods: int, block: int = BLOCK) -> int:
+        """Per-device per-sync bytes over the pod axis.  Default: ring
+        all_gather receive volume — each device receives every peer's
+        payload once."""
+        if n_pods <= 1 or n <= 0:
+            return 0
+        return self.payload_bytes(n, block) * (n_pods - 1)
+
+    def value_fraction(self) -> float:
+        """Knapsack value heuristic: fraction of gradient 'information'
+        preserved.  Only needs to ORDER the ladder (see core/knapsack.py)."""
+        return 1.0
+
+    # ---- wire format (oracle path, bit-exact to the seed operators) ----
+    def encode(self, blocks: jax.Array) -> Dict[str, jax.Array]:
+        """(nb, block) f32 -> payload pytree of arrays."""
+        raise NotImplementedError
+
+    def decode(self, payload: Dict[str, jax.Array],
+               block: int = BLOCK) -> jax.Array:
+        """payload -> dense (nb, block) f32 (receiver reconstruction)."""
+        raise NotImplementedError
+
+    # ---- fused device-local hot path -----------------------------------
+    def ef_encode(self, flat: jax.Array, e_flat: jax.Array, *, gamma: float,
+                  block: int = BLOCK, use_pallas: bool = False
+                  ) -> Tuple[Dict[str, jax.Array], jax.Array, jax.Array]:
+        """Error feedback + compress one flat (n,) f32 buffer.
+
+        Returns ``(payload, own, new_e)``: ``own = decode(payload)[:n]`` is
+        exactly what every receiver reconstructs from this device's
+        payload, and ``new_e = (flat + gamma*e_flat) - own`` is the next
+        error-feedback residual.  Subclasses with a Pallas kernel override
+        this to fuse the EF accumulate + compression into one HBM pass
+        when ``use_pallas`` is set (the kernels emit the residual
+        directly).  ``own`` is only consumed on the single-pod path, so
+        multi-pod jit dead-code-eliminates its computation.
+        """
+        n = flat.shape[0]
+        ef = flat + gamma * e_flat
+        payload = self.encode(pad_to_blocks(ef, block))
+        own = self.decode(payload, block).reshape(-1)[:n]
+        return payload, own, ef - own
+
+    # ---- pod aggregation ------------------------------------------------
+    def pod_exchange(self, payload: Dict[str, jax.Array],
+                     omega: jax.Array, *, n: int, block: int = BLOCK,
+                     axis: str = POD_AXIS) -> jax.Array:
+        """Aggregate payloads across the pod axis -> (n,) f32.
+
+        Default: pack the payload into one uint8 buffer, ONE ``all_gather``
+        over ``axis``, then the omega-weighted sum of per-peer decodes
+        (paper eq. 8), accumulated one peer at a time so the dense
+        transient stays at one (n,) buffer instead of (P, n) — with
+        bucketing n can be the whole model, and a stacked decode would
+        multiply peak sync memory by the pod count.  Codecs whose
+        aggregation is not a weighted sum of decodes (FULL's psum, SIGN's
+        majority vote) override this.
+        """
+        wire, meta = pack_payload(payload)
+        gathered = jax.lax.all_gather(wire, axis)       # (P, payload_bytes)
+        n_peers = gathered.shape[0]
+        agg = jnp.zeros((n,), jnp.float32)
+        for p in range(n_peers):
+            dense = self.decode(unpack_payload(gathered[p], meta),
+                                block).reshape(-1)[:n]
+            agg = agg + omega[p] * dense
+        return agg
+
+    # ---- one sync round -------------------------------------------------
+    def ef_sync(self, flat: jax.Array, e_flat: jax.Array, omega: jax.Array,
+                omega_own: jax.Array, *, gamma: float, n_pods: int,
+                block: int = BLOCK, axis: str = POD_AXIS,
+                use_pallas: bool = False
+                ) -> Tuple[jax.Array, jax.Array]:
+        """EF + compress + exchange one flat buffer.  Returns
+        ``(agg, new_e)`` with the invariant ``own + new_e == ef`` (the
+        lossless transmit/residual split error feedback relies on)."""
+        n = flat.shape[0]
+        payload, own, new_e = self.ef_encode(flat, e_flat, gamma=gamma,
+                                             block=block,
+                                             use_pallas=use_pallas)
+        if n_pods > 1:
+            agg = self.pod_exchange(payload, omega, n=n, block=block,
+                                    axis=axis)
+        else:
+            agg = own * omega_own
+        return agg, new_e
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return f"<{type(self).__name__} {self.name!r}>"
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type[Codec]] = {}
+
+
+def register_codec(cls: Type[Codec]) -> Type[Codec]:
+    """Class decorator: make ``cls`` resolvable by its ``name``."""
+    if not cls.name:
+        raise ValueError(f"{cls.__name__} must set a non-empty .name")
+    if _REGISTRY.get(cls.name) not in (None, cls):
+        raise ValueError(f"codec {cls.name!r} already registered by "
+                         f"{_REGISTRY[cls.name].__name__}")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def list_codecs() -> List[str]:
+    """Registered codec names (sorted, stable for CLIs/benchmarks)."""
+    return sorted(_REGISTRY)
+
+
+def get_codec(name: str) -> Type[Codec]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown codec {name!r}; registered: "
+                       f"{list_codecs()}") from None
+
+
+def build_codec(name: str, **kwargs) -> Codec:
+    """Instantiate a registered codec by name."""
+    return get_codec(name)(**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Level -> Codec resolution (core/compression.Level is a thin view)
+# ---------------------------------------------------------------------------
+
+_CODEC_CACHE: Dict[Tuple[float, int], Codec] = {}
+
+
+def codec_for_level(level) -> Codec:
+    """Resolve a ``Level(name, keep_ratio, value_bits)`` view to its codec
+    instance (cached — codecs are stateless)."""
+    key = (float(level.keep_ratio), int(level.value_bits))
+    codec = _CODEC_CACHE.get(key)
+    if codec is None:
+        ratio, bits = key
+        if ratio <= 0.0:
+            codec = build_codec("skip")
+        elif ratio < 1.0:
+            codec = build_codec("topk", ratio=ratio)
+        elif bits >= 16:
+            codec = build_codec("full")
+        elif bits >= 8:
+            codec = build_codec("int8")
+        elif bits >= 4:
+            codec = build_codec("int4")
+        else:
+            codec = build_codec("sign")
+        _CODEC_CACHE[key] = codec
+    return codec
+
+
+# ---------------------------------------------------------------------------
+# plan pricing (bucketed: what the wire actually carries)
+# ---------------------------------------------------------------------------
+
+
+def plan_wire_bytes(plan, sizes: Sequence[int], n_pods: int,
+                    block: int = BLOCK) -> int:
+    """Analytic per-device wire bytes for a plan, priced the way
+    ``core/sync.sync_tree`` actually transmits it: same-level leaves share
+    one concatenated buffer (and its block padding) and one collective."""
+    totals: Dict[int, int] = defaultdict(int)
+    for li, n in zip(plan.level_idx, sizes):
+        totals[li] += int(n)
+    return int(sum(plan.levels[li].codec.wire_bytes(n, n_pods, block)
+                   for li, n in totals.items()))

@@ -192,12 +192,16 @@ class ACESyncConfig:
     importance_hidden: int = 32        # attention estimator width
     importance_lr: float = 1e-3
     n_clusters: int = 4                # device clustering
-    # level ladder: (name, keep_ratio, value_bits) - SKIP transmits nothing
+    # level ladder: (name, keep_ratio, value_bits) - SKIP transmits nothing.
+    # Each rung resolves to a registered repro/codecs wire format by
+    # semantics: dense 8/4/1-bit -> int8 / packed int4 / sign-majority-vote.
     levels: Tuple[Tuple[str, float, int], ...] = (
         ("FULL", 1.0, 16),
         ("INT8", 1.0, 8),
+        ("INT4", 1.0, 4),
         ("TOPK25_INT8", 0.25, 8),
         ("TOPK10_INT8", 0.10, 8),
+        ("SIGN1", 1.0, 1),
         ("TOPK1_INT8", 0.01, 8),
         ("SKIP", 0.0, 0),
     )

@@ -1,21 +1,22 @@
-"""Gradient compression operators (paper eqs. 6-7).
+"""Pure-jnp gradient compression operators (paper eqs. 6-7) and the
+``Level`` ladder view.
 
-All operators work on a device-local flat gradient block (the nested
-shard_map in core/sync.py hands each device its own shard), blocked into
-``block``-sized rows:
+Since the codec refactor the wire formats themselves live in
+``repro/codecs``: each :class:`~repro.codecs.base.Codec` owns its
+encode/decode math, its pod aggregation and its byte accounting, and
+``core/sync.py`` dispatches whole same-level buckets through one codec at
+a time.  What remains here:
 
-  * block-local top-k ("TOPK"): keep the k largest-|g| entries of every
-    block — the TPU-native adaptation of DGC's sampled global top-k; the
-    selection never needs a global sort and the indices fit in uint16.
-  * blockwise int8 quantisation ("INT8"): absmax scale per block
-    (generalises the paper's  Q(g) = sign(g)*||g||*q  to blocks).
+  * the blocked reference operators (``topk_compress`` / ``int8_compress``
+    and inverses) — the bit-exact oracles the seed shipped, now consumed
+    by the codecs and pinned by tests/test_codecs.py;
+  * :class:`Level` — a thin, hashable (name, keep_ratio, value_bits) view
+    of one ladder rung.  Plans and configs keep speaking in Levels (they
+    jit-cache cleanly); ``Level.codec`` resolves to the registered codec
+    and ``Level.wire_bytes`` just delegates to it.
 
 Error feedback (eq. 7): g_ef = g + gamma * e; after compression the residual
 e' = g_ef - decompress(compress(g_ef)) stays in the local buffer.
-
-The pure-jnp implementations here double as the reference oracles for the
-Pallas kernels in repro/kernels (which fuse EF + select + quantise into one
-VMEM pass for the TPU runtime).
 """
 from __future__ import annotations
 
@@ -29,10 +30,10 @@ BLOCK = 1024
 
 
 class Level(NamedTuple):
-    """One rung of the compression ladder."""
+    """One rung of the compression ladder — a thin view over a codec."""
     name: str
     keep_ratio: float       # fraction of entries transmitted (1.0 = all)
-    value_bits: int         # 16 (bf16), 8 (int8), 0 (skip)
+    value_bits: int         # 16 (bf16), 8 (int8), 4, 1 (sign), 0 (skip)
 
     @property
     def is_full(self) -> bool:
@@ -46,26 +47,25 @@ class Level(NamedTuple):
     def is_topk(self) -> bool:
         return 0.0 < self.keep_ratio < 1.0
 
+    @property
+    def codec(self):
+        """The registered :class:`repro.codecs.base.Codec` this rung
+        resolves to (cached; resolution is by semantics, not name)."""
+        from repro.codecs import codec_for_level
+        return codec_for_level(self)
+
     def block_k(self, block: int = BLOCK) -> int:
-        """Static k per block (multiple of 8 lanes, >= 8)."""
-        k = int(round(self.keep_ratio * block))
-        return max(8, ((k + 7) // 8) * 8)
+        """Static k per block — delegated to the topk codec so the lane
+        rounding rule lives in exactly one place (dense rungs fall back to
+        the whole block)."""
+        if self.is_topk:
+            return self.codec.block_k(block)
+        return block
 
     def wire_bytes(self, n: int, n_pods: int, block: int = BLOCK) -> int:
-        """Bytes this level moves over the pod axis per device per sync
-        (all_gather receive volume; psum for FULL counted as ring bytes)."""
-        if self.is_skip or n_pods <= 1:
-            return 0
-        nb = (n + block - 1) // block
-        if self.is_full:
-            # bf16 psum (ring): 2 * (P-1)/P * 2n bytes on the wire
-            return int(2 * (n_pods - 1) / n_pods * 2 * n)
-        if self.keep_ratio >= 1.0:  # INT8 dense
-            per = n + 4 * nb  # int8 payload + f32 scales
-            return per * (n_pods - 1)
-        k = self.block_k(block)
-        per = nb * k * (1 + 2) + 4 * nb  # int8 vals + u16 idx + f32 scales
-        return per * (n_pods - 1)
+        """Bytes this level moves over the pod axis per device per sync —
+        delegated to the codec, the single source of byte accounting."""
+        return self.codec.wire_bytes(n, n_pods, block)
 
 
 def pad_to_blocks(flat: jax.Array, block: int = BLOCK) -> jax.Array:
@@ -124,16 +124,15 @@ def int8_decompress(q, scale):
 
 
 def roundtrip(flat: jax.Array, level: Level, block: int = BLOCK) -> jax.Array:
-    """decompress(compress(flat)) — what the receiver reconstructs."""
+    """decompress(compress(flat)) — what the receiver reconstructs.
+    Dispatches through the level's codec, so every registered wire format
+    (including int4 / sign) round-trips here."""
     n = flat.shape[0]
     if level.is_full:
         return flat.astype(jnp.bfloat16).astype(jnp.float32)
     if level.is_skip:
         return jnp.zeros_like(flat)
+    codec = level.codec
     blocks = pad_to_blocks(flat.astype(jnp.float32), block)
-    if level.is_topk:
-        out = topk_decompress(*topk_compress(blocks, level.block_k(block)),
-                              block)
-    else:
-        out = int8_decompress(*int8_compress(blocks))
+    out = codec.decode(codec.encode(blocks), block)
     return out.reshape(-1)[:n].astype(flat.dtype)

@@ -3,12 +3,15 @@
 Maximise   sum_i I(theta_i) * value(level_i)
 subject to sum_i wire_bytes(level_i, n_i) <= budget_bytes
 
-over the static level ladder.  Because the ladder is monotone (more bytes
--> more preserved value), the classic greedy-by-density algorithm on the
-*incremental* (delta_value / delta_bytes) items is optimal up to one item —
-the standard fractional-knapsack bound — and runs in O(G * L log(G * L)) on
-the host.  Runs every ``replan_every`` steps; the result is a static sync
-plan (one level index per parameter group).
+over the static level ladder.  Value and bytes both come from the level's
+codec (repro/codecs), the single source of comm accounting.  Dominated
+rungs (cheaper-but-better alternatives exist) are pruned so the effective
+ladder is monotone (more bytes -> more preserved value); on a monotone
+ladder the classic greedy-by-density algorithm on the *incremental*
+(delta_value / delta_bytes) items is optimal up to one item — the standard
+fractional-knapsack bound — and runs in O(G * L log(G * L)) on the host.
+Runs every ``replan_every`` steps; the result is a static sync plan (one
+level index per parameter group).
 """
 from __future__ import annotations
 
@@ -21,16 +24,10 @@ from repro.core.compression import Level
 
 
 def level_value(level: Level) -> float:
-    """Fraction of gradient 'information' preserved by a level.
-
-    Top-k keeps roughly the keep_ratio mass-heaviest entries (empirically
-    ~sqrt(ratio) of the l2 mass for heavy-tailed gradients); int8 preserves
-    almost everything. These constants only need to ORDER the ladder."""
-    if level.is_skip:
-        return 0.0
-    base = math.sqrt(level.keep_ratio)
-    quant = 1.0 if level.value_bits >= 16 else 0.97
-    return base * quant
+    """Fraction of gradient 'information' preserved by a level — delegated
+    to the codec (``sqrt(keep_ratio)`` mass heuristic x a per-format
+    quantisation factor).  These constants only need to ORDER the ladder."""
+    return level.codec.value_fraction()
 
 
 def solve(importance: Sequence[float], sizes: Sequence[int],
@@ -43,6 +40,24 @@ def solve(importance: Sequence[float], sizes: Sequence[int],
     # order levels by wire bytes ascending (SKIP first)
     order = sorted(range(len(levels)),
                    key=lambda j: levels[j].wire_bytes(10 ** 6, max(n_pods, 2)))
+    # dominated-rung pruning: the greedy's optimality argument needs a
+    # ladder monotone in (bytes -> value).  With the widened codec ladder
+    # that can fail (e.g. packed INT4 is cheaper AND higher-value than
+    # TOPK25), so drop any rung whose value does not strictly improve on a
+    # cheaper rung — upgrading to it would never be the right move.
+    ladder = []
+    for j in order:
+        if not ladder or level_value(levels[j]) > \
+                level_value(levels[ladder[-1]]) + 1e-12:
+            ladder.append(j)
+    order = ladder
+    # NOTE: the solver prices each group's bytes independently (per-group
+    # block padding).  The executed plan buckets same-level groups into one
+    # buffer (codecs.plan_wire_bytes), which shares padding — so per-group
+    # pricing is a conservative upper bound and the greedy can never
+    # exceed the budget it was given; a joint bucket-aware cost would
+    # depend on the assignment being built and break the incremental
+    # density items.
     choice = [order[0]] * G          # start everything at the cheapest level
     spent = sum(levels[choice[i]].wire_bytes(sizes[i], n_pods)
                 for i in range(G))

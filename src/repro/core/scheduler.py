@@ -21,6 +21,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.codecs import plan_wire_bytes as _bucketed_plan_bytes
 from repro.configs.base import ACESyncConfig
 from repro.core import knapsack
 from repro.core.compression import Level
@@ -144,8 +145,12 @@ class Scheduler:
         return tuple(w / s for w in omega)
 
     def plan_wire_bytes(self, plan: SyncPlan, n_pods: int = None) -> int:
-        return knapsack.plan_bytes(plan.level_idx, self.sizes, self.levels,
-                                   n_pods or self.acct_pods)
+        """Bytes a sync round under ``plan`` actually moves per device:
+        bucketed codec pricing (same-level groups share one buffer/
+        collective in core/sync.py), the same accounting Table 1 and the
+        dry-run byte assertions use."""
+        return _bucketed_plan_bytes(plan, self.sizes,
+                                    n_pods or self.acct_pods)
 
     def fullsync_wire_bytes(self) -> int:
         return self._full_bytes

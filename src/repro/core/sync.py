@@ -7,13 +7,22 @@ compresses exactly its local shard — no resharding — and exchanges payloads
 only with its pod-peers over the (slow, DCN) "pod" axis:
 
     g_ef   = g + gamma * e                          (eq 7, error feedback)
-    payload= compress(g_ef_local)                    (level from the plan)
-    agg    = sum_k omega_k * decompress(payload_k)   (eq 8, all_gather 'pod')
+    payload= codec.ef_encode(g_ef_local)             (codec from the plan)
+    agg    = codec.pod_exchange(payloads, omega)     (eq 8, one collective)
     e'     = g_ef - decompress(own payload)
 
-Levels: FULL (bf16 psum), INT8 (dense int8 + scales all_gather), TOPK_*
-(block-local top-k int8 + uint16 indices + scales all_gather), SKIP (buffer
-locally, transmit nothing).
+Since the codec refactor the per-leaf Python loop is gone: ``sync_tree``
+BUCKETS same-level leaves into one flat buffer per codec, runs the codec's
+fused Pallas path (``repro/kernels``) on the concatenated buffer, and
+issues at most ONE pod collective per distinct codec in the plan — an
+H-step sync costs O(#levels) collectives instead of O(#groups).  Each
+codec packs its whole payload pytree (values + indices + scales) into a
+single uint8 wire buffer before the all_gather, so "one collective" holds
+regardless of how many components the wire format carries.
+
+Wire formats are pluggable :class:`repro.codecs.base.Codec` objects (FULL
+bf16-psum, dense INT8 / packed INT4, block top-k, 1-bit sign with majority
+vote, SKIP); plans refer to them through the thin ``Level`` view.
 
 Without a mesh (unit tests) the same math runs on the single local array
 with n_pods = 1.
@@ -21,6 +30,7 @@ with n_pods = 1.
 from __future__ import annotations
 
 import functools
+import math
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -29,11 +39,11 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.codecs import POD_AXIS, plan_wire_bytes
 from repro.core import compression as C
 from repro.core.scheduler import SyncPlan
+from repro.kernels import ops
 from repro.models.shardctx import norm_spec
-
-POD_AXIS = "pod"
 
 
 # ---------------------------------------------------------------------------
@@ -86,7 +96,7 @@ def group_sizes(param_specs) -> List[int]:
 
 
 # ---------------------------------------------------------------------------
-# per-leaf local compress + pod exchange
+# bucketed local compress + pod exchange (one flat buffer per codec)
 # ---------------------------------------------------------------------------
 
 
@@ -96,82 +106,31 @@ def _pod_info(mesh) -> int:
     return mesh.shape[POD_AXIS]
 
 
-def _local_topk_sync(flat, e_flat, omega, omega_own, *, k, gamma,
-                     n_pods, block):
-    """flat/e_flat: (n,) local. Returns (agg (n,), new_e (n,))."""
-    n = flat.shape[0]
-    ef = flat + gamma * e_flat
-    blocks = C.pad_to_blocks(ef, block)
-    q, idx, scale = C.topk_compress(blocks, k)
-    own = C.topk_decompress(q, idx, scale, block).reshape(-1)[:n]
-    if n_pods > 1:
-        qs = jax.lax.all_gather(q, POD_AXIS)          # (P, nb, k) int8
-        idxs = jax.lax.all_gather(idx, POD_AXIS)
-        scales = jax.lax.all_gather(scale, POD_AXIS)
-        scales = scales * omega[:, None]              # fold omega into scales
-        nb = q.shape[0]
-        qs2 = qs.transpose(1, 0, 2).reshape(nb, -1)
-        idxs2 = idxs.transpose(1, 0, 2).reshape(nb, -1)
-        sc2 = jnp.repeat(scales.transpose(1, 0), k, axis=1)  # (nb, P*k)
-        vals = qs2.astype(jnp.float32) * sc2
-        dense = jnp.zeros((nb, block), jnp.float32)
-        dense = dense.at[jnp.arange(nb)[:, None],
-                         idxs2.astype(jnp.int32)].add(vals)
-        agg = dense.reshape(-1)[:n]
-    else:
-        agg = own * omega_own
-    new_e = ef - own
-    return agg, new_e
+def _bucket_sync_local(gs, es, omega, omega_own, *, codec, gamma, n_pods,
+                       block, use_pallas):
+    """Fully local per-device sync of one same-codec bucket.
 
-
-def _local_int8_sync(flat, e_flat, omega, omega_own, *, gamma, n_pods,
-                     block):
-    n = flat.shape[0]
-    ef = flat + gamma * e_flat
-    blocks = C.pad_to_blocks(ef, block)
-    q, scale = C.int8_compress(blocks)
-    own = C.int8_decompress(q, scale).reshape(-1)[:n]
-    if n_pods > 1:
-        qs = jax.lax.all_gather(q, POD_AXIS)          # (P, nb, B)
-        scales = jax.lax.all_gather(scale, POD_AXIS) * omega[:, None]
-        dense = jnp.einsum("pnb,pn->nb", qs.astype(jnp.float32), scales)
-        agg = dense.reshape(-1)[:n]
-    else:
-        agg = own * omega_own
-    new_e = ef - own
-    return agg, new_e
-
-
-def _leaf_sync_local(g, e, omega, omega_own, *, level: C.Level, gamma,
-                     n_pods, block):
-    """Fully local per-device leaf sync. g/e: local shard arrays."""
-    shape = g.shape
-    flat = g.reshape(-1).astype(jnp.float32)
-    e_flat = e.reshape(-1).astype(jnp.float32)
-    if level.is_skip:
-        new_e = flat + gamma * e_flat
-        return jnp.zeros_like(flat).reshape(shape).astype(g.dtype), \
-            new_e.reshape(shape).astype(e.dtype)
-    if level.is_full:
-        ef = flat + gamma * e_flat
-        wire = ef.astype(jnp.bfloat16).astype(jnp.float32)
-        if n_pods > 1:
-            agg = jax.lax.psum(wire * omega_own, POD_AXIS)
-        else:
-            agg = wire * omega_own
-        new_e = ef - wire
-        return agg.reshape(shape).astype(g.dtype), \
-            new_e.reshape(shape).astype(e.dtype)
-    if level.is_topk:
-        agg, new_e = _local_topk_sync(flat, e_flat, omega, omega_own,
-                                      k=level.block_k(block), gamma=gamma,
-                                      n_pods=n_pods, block=block)
-    else:
-        agg, new_e = _local_int8_sync(flat, e_flat, omega, omega_own,
-                                      gamma=gamma, n_pods=n_pods,
-                                      block=block)
-    return agg.reshape(shape).astype(g.dtype), \
-        new_e.reshape(shape).astype(e.dtype)
+    ``gs`` / ``es``: tuples of local shard arrays that the plan assigned
+    the same level.  They are flattened into ONE concatenated f32 buffer,
+    pushed through the codec's fused EF + compress + exchange round (at
+    most one pod collective), and split back — block boundaries may span
+    leaves, which is fine for blockwise formats because the residual split
+    ``own + new_e == ef`` holds elementwise.
+    """
+    sizes = [math.prod(g.shape) for g in gs]
+    flats = [g.reshape(-1).astype(jnp.float32) for g in gs]
+    e_flats = [e.reshape(-1).astype(jnp.float32) for e in es]
+    flat = flats[0] if len(flats) == 1 else jnp.concatenate(flats)
+    e_flat = e_flats[0] if len(e_flats) == 1 else jnp.concatenate(e_flats)
+    agg, new_e = codec.ef_sync(flat, e_flat, omega, omega_own, gamma=gamma,
+                               n_pods=n_pods, block=block, axis=POD_AXIS,
+                               use_pallas=use_pallas)
+    aggs, news, off = [], [], 0
+    for g, e, n in zip(gs, es, sizes):
+        aggs.append(agg[off:off + n].reshape(g.shape).astype(g.dtype))
+        news.append(new_e[off:off + n].reshape(e.shape).astype(e.dtype))
+        off += n
+    return tuple(aggs), tuple(news)
 
 
 # ---------------------------------------------------------------------------
@@ -185,19 +144,29 @@ def _auto_axes(mesh):
 
 def sync_tree(tree, errors, plan: SyncPlan, *, mesh, shardings,
               gamma: float, block: int = C.BLOCK,
-              inside_manual: bool = None):
+              inside_manual: bool = None, use_pallas: bool = None):
     """Compress + hierarchically aggregate a gradient (or delta) pytree.
 
     Must be called inside the outer per-pod shard_map when the mesh has a
     pod axis.  ``shardings``: pytree of PartitionSpec matching ``tree`` (the
     data/model sharding of each leaf).  Returns (agg_tree, new_errors).
 
+    Same-level leaves are bucketed into one flat buffer per codec, so the
+    whole tree costs at most one pod collective per DISTINCT level in the
+    plan (tests/test_collectives.py counts them in the lowered HLO).
+
     ``inside_manual``: whether we are already inside a shard_map (then the
     nested shard_map must infer the context mesh); default: pod axis
-    present.
+    present.  ``use_pallas``: route the EF + compress inner loop through
+    the fused Pallas kernels; default
+    :func:`repro.kernels.ops.default_use_pallas` (kernels on accelerators,
+    pure-jnp oracles on CPU, ``REPRO_FORCE_INTERPRET=1`` to force the
+    kernel path under the interpreter).
     """
     if inside_manual is None:
         inside_manual = mesh is not None and POD_AXIS in mesh.axis_names
+    if use_pallas is None:
+        use_pallas = ops.default_use_pallas()
     n_pods = _pod_info(mesh)
     omega = jnp.asarray(plan.omega, jnp.float32)
     if n_pods == 1 and len(plan.omega) == 1:
@@ -216,29 +185,45 @@ def sync_tree(tree, errors, plan: SyncPlan, *, mesh, shardings,
     assert len(leaves) == len(plan.level_idx), \
         (len(leaves), len(plan.level_idx))
 
-    agg_out, err_out = [], []
-    for i, (g, e, spec) in enumerate(zip(leaves, e_leaves, s_leaves)):
-        level = plan.level_of(i)
-        fn = functools.partial(_leaf_sync_local, level=level, gamma=gamma,
-                               n_pods=n_pods, block=block)
+    # bucket leaf indices by level: one fused buffer + one collective each
+    buckets: Dict[int, List[int]] = {}
+    for i, li in enumerate(plan.level_idx):
+        buckets.setdefault(li, []).append(i)
+
+    agg_out = [None] * len(leaves)
+    err_out = [None] * len(leaves)
+    for li in sorted(buckets):
+        idxs = buckets[li]
+        codec = plan.levels[li].codec
+        gs = tuple(leaves[i] for i in idxs)
+        es = tuple(e_leaves[i] for i in idxs)
+        fn = functools.partial(_bucket_sync_local, codec=codec, gamma=gamma,
+                               n_pods=n_pods, block=block,
+                               use_pallas=use_pallas)
         if mesh is not None and (compat.PARTIAL_MANUAL or not inside_manual):
-            aspec = norm_spec(spec if spec is not None else P(), mesh)
-            # drop the pod axis from specs (manual outside already)
-            aspec = P(*[None if ax == POD_AXIS else ax for ax in aspec])
+            aspecs = []
+            for i in idxs:
+                spec = s_leaves[i]
+                aspec = norm_spec(spec if spec is not None else P(), mesh)
+                # drop the pod axis from specs (manual outside already)
+                aspecs.append(P(*[None if ax == POD_AXIS else ax
+                                  for ax in aspec]))
+            aspecs = tuple(aspecs)
             inner = compat.shard_map(
-                fn, mesh, in_specs=(aspec, aspec, P(None), P()),
-                out_specs=(aspec, aspec),
+                fn, mesh, in_specs=(aspecs, aspecs, P(None), P()),
+                out_specs=(aspecs, aspecs),
                 manual_axes=set(_auto_axes(mesh)),
                 # surrounding per-pod shard_map (if any) provides the mesh
                 infer_mesh=inside_manual)
-            agg, new_e = inner(g, e, omega, omega_own)
+            aggs, news = inner(gs, es, omega, omega_own)
         else:
             # no mesh, or old-jax fully-manual region (leaves replicated
             # over data/model there): device-local math, pod collectives
             # still bound by the enclosing manual region
-            agg, new_e = fn(g, e, omega, omega_own)
-        agg_out.append(agg)
-        err_out.append(new_e)
+            aggs, news = fn(gs, es, omega, omega_own)
+        for j, i in enumerate(idxs):
+            agg_out[i] = aggs[j]
+            err_out[i] = news[j]
     return (jax.tree_util.tree_unflatten(treedef, agg_out),
             jax.tree_util.tree_unflatten(treedef, err_out))
 
@@ -258,7 +243,9 @@ def grad_group_stats(tree):
 
 
 def wire_bytes_of_plan(plan: SyncPlan, sizes: Sequence[int],
-                       n_pods: int) -> int:
-    """Analytic on-the-wire bytes per device per sync for a plan."""
-    return sum(plan.level_of(i).wire_bytes(n, n_pods)
-               for i, n in enumerate(sizes))
+                       n_pods: int, block: int = C.BLOCK) -> int:
+    """Analytic on-the-wire bytes per device per sync for a plan, priced
+    exactly the way :func:`sync_tree` transmits it (same-level leaves share
+    one bucketed buffer and one collective) — the number Table 1 reports
+    and tests/test_collectives.py pins to the traced HLO."""
+    return plan_wire_bytes(plan, sizes, n_pods, block)

@@ -5,21 +5,67 @@ container, and any unit-test environment) they run the same kernel bodies
 under ``interpret=True``.  ``use_pallas=False`` falls back to the pure-jnp
 oracle — the path the CPU dry-run lowers, keeping kernel code out of the
 roofline HLO while the math stays identical.
+
+Backend dispatch is decided ONCE per process (the sync hot loop calls
+these per bucket per step; re-querying ``jax.default_backend()`` on every
+call was measurable on the host-side trace).  Two cached predicates:
+
+  * :func:`interpret_mode` — should ``pallas_call`` interpret?  True on
+    CPU, False on accelerators; ``REPRO_FORCE_INTERPRET=1`` forces True
+    (CI runs the kernel bodies even on CPU runners), ``=0`` forces False.
+  * :func:`default_use_pallas` — should the sync path route through the
+    kernels at all?  True on accelerators (the fused path is the one
+    ``grad_sync`` / ``delta_sync`` exercise there); False on CPU where the
+    interpreted kernels would only slow the oracle math down — unless
+    ``REPRO_FORCE_INTERPRET=1`` opts CI into the kernel path.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.topk_compress import ef_topk_select, LANES, ROWS
-from repro.kernels.quantize import quantize_int8_fused, dequantize_int8
+from repro.kernels.quantize import (quantize_int8_fused, dequantize_int8,
+                                    ef_int4_fused)
+from repro.kernels.sign import ef_sign_fused
+
+FORCE_INTERPRET_ENV = "REPRO_FORCE_INTERPRET"
 
 
-def _on_cpu() -> bool:
+def _env_force():
+    v = os.environ.get(FORCE_INTERPRET_ENV)
+    if v is None:
+        return None
+    return v.strip().lower() not in ("", "0", "false", "no")
+
+
+@functools.lru_cache(maxsize=None)
+def interpret_mode() -> bool:
+    """Whether pallas_call should run interpreted (cached per process)."""
+    forced = _env_force()
+    if forced is not None:
+        return forced
     return jax.default_backend() == "cpu"
+
+
+@functools.lru_cache(maxsize=None)
+def default_use_pallas() -> bool:
+    """Default ``use_pallas`` for the sync hot path (cached per process):
+    compiled kernels on accelerators, oracle math on CPU.
+    ``REPRO_FORCE_INTERPRET=1`` additionally opts CPU/CI into the
+    (interpreted) kernel path; ``=0`` only disables interpretation and
+    never turns the compiled kernels off on accelerators."""
+    if _env_force():
+        return True
+    return jax.default_backend() != "cpu"
+
+
+def _on_cpu() -> bool:  # kept for external callers; now cached
+    return interpret_mode()
 
 
 def pad_rows(flat: jax.Array):
@@ -40,7 +86,7 @@ def ef_topk(g_flat, e_flat, *, gamma: float, k: int, use_pallas: bool = True):
     e2, _ = pad_rows(e_flat.astype(jnp.float32))
     if use_pallas:
         sel, res = ef_topk_select(g2, e2, gamma=gamma, k=k,
-                                  interpret=_on_cpu())
+                                  interpret=interpret_mode())
     else:
         sel, res = ref.ef_topk_select_ref(g2, e2, gamma=gamma, k=k)
     return sel.reshape(-1)[:n], res.reshape(-1)[:n]
@@ -51,7 +97,7 @@ def quantize_int8(x_flat, *, use_pallas: bool = True):
     n)."""
     x2, n = pad_rows(x_flat.astype(jnp.float32))
     if use_pallas:
-        q, s, r = quantize_int8_fused(x2, interpret=_on_cpu())
+        q, s, r = quantize_int8_fused(x2, interpret=interpret_mode())
     else:
         q, s, r = ref.quantize_int8_ref(x2)
     return q, s, r.reshape(-1)[:n], n
@@ -59,7 +105,35 @@ def quantize_int8(x_flat, *, use_pallas: bool = True):
 
 def dequant_int8(q, scales, n, *, use_pallas: bool = True):
     if use_pallas:
-        out = dequantize_int8(q, scales, interpret=_on_cpu())
+        out = dequantize_int8(q, scales, interpret=interpret_mode())
     else:
         out = ref.dequantize_int8_ref(q, scales)
     return out.reshape(-1)[:n]
+
+
+def ef_int4(g_flat, e_flat, *, gamma: float, use_pallas: bool = True):
+    """Fused error-feedback + packed-int4 quantisation on flat arrays.
+    Returns (packed uint8 (rows, LANES//2), scales (rows, 1) f32,
+    residual (n,), n)."""
+    g2, n = pad_rows(g_flat.astype(jnp.float32))
+    e2, _ = pad_rows(e_flat.astype(jnp.float32))
+    if use_pallas:
+        p, s, r = ef_int4_fused(g2, e2, gamma=gamma,
+                                interpret=interpret_mode())
+    else:
+        p, s, r = ref.ef_int4_ref(g2, e2, gamma=gamma)
+    return p, s, r.reshape(-1)[:n], n
+
+
+def ef_sign(g_flat, e_flat, *, gamma: float, use_pallas: bool = True):
+    """Fused error-feedback + 1-bit sign compression on flat arrays.
+    Returns (sign int8 (rows, LANES), scales (rows, 1) f32, residual (n,),
+    n)."""
+    g2, n = pad_rows(g_flat.astype(jnp.float32))
+    e2, _ = pad_rows(e_flat.astype(jnp.float32))
+    if use_pallas:
+        sg, s, r = ef_sign_fused(g2, e2, gamma=gamma,
+                                 interpret=interpret_mode())
+    else:
+        sg, s, r = ref.ef_sign_ref(g2, e2, gamma=gamma)
+    return sg, s, r.reshape(-1)[:n], n

@@ -1,8 +1,14 @@
-"""Pallas TPU kernel: fused blockwise int8 quantisation + dequant residual.
+"""Pallas TPU kernels: fused blockwise quantisation + dequant residual.
 
-One VMEM pass per (8, 1024) tile: absmax scale per 1024-row-block, int8
-cast, and the quantisation residual (for error feedback) — versus three
-separate HBM passes in the naive formulation.
+One VMEM pass per (8, 1024) tile: absmax scale per 1024-row-block, the
+quantised values, and the quantisation residual (for error feedback) —
+versus three separate HBM passes in the naive formulation.  Two rungs live
+here:
+
+  * int8: absmax/127 scale, one byte per value;
+  * int4: absmax/7 scale, two values packed per byte (low nibble first,
+    offset-binary q+8), fused with the error-feedback accumulate
+    ``ef = g + gamma*e`` so the INT4 sync rung is one HBM pass end-to-end.
 """
 from __future__ import annotations
 
@@ -54,6 +60,70 @@ def quantize_int8_fused(x, *, interpret: bool = False):
         interpret=interpret,
     )(x)
     return q, s, r
+
+
+# ---------------------------------------------------------------------------
+# int4: two nibbles per byte, blockwise absmax scale, fused error feedback
+# ---------------------------------------------------------------------------
+
+
+def _int4_body(x):
+    """Shared math (kernel + oracle). x: (rows, LANES) f32."""
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 7.0
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(x / scale), -7.0, 7.0)
+    return q, scale
+
+
+def pack_nibbles(q):
+    """(rows, C) f32 in [-7, 7] -> (rows, C // 2) uint8 (offset binary
+    q+8; even column in the low nibble)."""
+    u = (q + 8.0).astype(jnp.uint8)
+    u3 = u.reshape(q.shape[0], q.shape[1] // 2, 2)
+    return u3[..., 0] | (u3[..., 1] << 4)
+
+
+def unpack_nibbles(packed):
+    """Inverse of :func:`pack_nibbles` -> (rows, 2 * C') f32."""
+    lo = (packed & 0xF).astype(jnp.float32) - 8.0
+    hi = (packed >> 4).astype(jnp.float32) - 8.0
+    return jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0],
+                                                packed.shape[1] * 2)
+
+
+def _int4_kernel(g_ref, e_ref, p_ref, s_ref, r_ref, *, gamma: float):
+    g = g_ref[...].astype(jnp.float32)
+    e = e_ref[...].astype(jnp.float32)
+    ef = g + gamma * e
+    q, scale = _int4_body(ef)
+    p_ref[...] = pack_nibbles(q)
+    s_ref[...] = scale.astype(jnp.float32)
+    r_ref[...] = (ef - q * scale).astype(r_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "interpret"))
+def ef_int4_fused(g, e, *, gamma: float, interpret: bool = False):
+    """g, e: (n_rows, LANES) f32 -> (packed uint8 (n_rows, LANES//2),
+    scales (n_rows, 1) f32, residual f32) with ef = g + gamma*e fused in."""
+    n_rows, lanes = g.shape
+    assert lanes == LANES and n_rows % ROWS == 0, (g.shape,)
+    grid = (n_rows // ROWS,)
+    spec = pl.BlockSpec((ROWS, LANES), lambda i: (i, 0))
+    pspec = pl.BlockSpec((ROWS, LANES // 2), lambda i: (i, 0))
+    sspec = pl.BlockSpec((ROWS, 1), lambda i: (i, 0))
+    p, s, r = pl.pallas_call(
+        functools.partial(_int4_kernel, gamma=gamma),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[pspec, sspec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_rows, LANES // 2), jnp.uint8),
+            jax.ShapeDtypeStruct((n_rows, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n_rows, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g, e)
+    return p, s, r
 
 
 def _dequant_kernel(q_ref, s_ref, out_ref):

@@ -6,7 +6,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.topk_compress import _select_body, LANES
-from repro.kernels.quantize import _quant_body
+from repro.kernels.quantize import _quant_body, _int4_body, pack_nibbles
+from repro.kernels.sign import _sign_body
 
 
 def ef_topk_select_ref(g, e, *, gamma: float, k: int):
@@ -24,6 +25,18 @@ def quantize_int8_ref(x):
 
 def dequantize_int8_ref(q, scales):
     return q.astype(jnp.float32) * scales
+
+
+def ef_int4_ref(g, e, *, gamma: float):
+    ef = g.astype(jnp.float32) + gamma * e.astype(jnp.float32)
+    q, scale = _int4_body(ef)
+    return pack_nibbles(q), scale, ef - q * scale
+
+
+def ef_sign_ref(g, e, *, gamma: float):
+    ef = g.astype(jnp.float32) + gamma * e.astype(jnp.float32)
+    sign, scale = _sign_body(ef)
+    return sign.astype(jnp.int8), scale, ef - sign * scale
 
 
 def exact_topk_mask(x, k):

@@ -126,39 +126,49 @@ class BandwidthTiered(SyncStrategy):
     """Knapsack-free adaptive compression from live telemetry.
 
     Each replan reads the bandwidth snapshot and picks, per parameter
-    group, either dense INT8 or the top-k rung closest to the eq-(5)
-    affordable fraction: when the link is fat (kept fraction above
-    ``dense_fraction``) everything goes INT8-dense; under a thin link the
-    large groups (>= median size) drop to top-k while small groups — cheap
-    in absolute bytes but disproportionately important (norms, embeddings'
-    biases) — stay dense INT8.  A DynaComm-style tiering rule that needs no
-    importance estimator and no solver.
+    group, a codec BY NAME from the scheduler's ladder: when the link is
+    fat (kept fraction above ``dense_fraction``) everything goes to the
+    ``dense_codec`` (default ``int8``); under a thin link the large groups
+    (>= median size) drop to the ``topk`` rung closest to the eq-(5)
+    affordable fraction while small groups — cheap in absolute bytes but
+    disproportionately important (norms, embeddings' biases) — stay dense.
+    A DynaComm-style tiering rule that needs no importance estimator and
+    no solver.  Because selection is by registered codec name, widening
+    the ladder (int4, sign, ...) is a config change, not a strategy edit:
+    ``BandwidthTiered(dense_codec="int4")`` halves the fat-link bytes.
     """
     name = "bandwidth_tiered"
 
     def __init__(self, dense_fraction: float = 0.45,
-                 floor_ratio: float = 0.01):
+                 floor_ratio: float = 0.01, dense_codec: str = "int8"):
         self.dense_fraction = dense_fraction
         self.floor_ratio = floor_ratio
+        self.dense_codec = dense_codec
+
+    def _ladder_by_codec(self, scheduler: Scheduler):
+        """Map codec name -> level indices of the scheduler's ladder."""
+        by_name = {}
+        for i, l in enumerate(scheduler.levels):
+            by_name.setdefault(l.codec.name, []).append(i)
+        return by_name
 
     def make_plan(self, scheduler: Scheduler, *, importance=None,
                   telemetry=None, omega=None) -> SyncPlan:
         bw = mean_bandwidth(telemetry)
         frac = kept_fraction(scheduler.cfg, bw)
         levels = scheduler.levels
-        int8_cand = [i for i, l in enumerate(levels)
-                     if l.keep_ratio >= 1.0 and 0 < l.value_bits <= 8]
-        int8_i = (int8_cand[0] if int8_cand
-                  else levels.index(scheduler.full_level))
-        topks = [(i, l.keep_ratio) for i, l in enumerate(levels)
-                 if l.is_topk]
+        by_name = self._ladder_by_codec(scheduler)
+        dense_cand = by_name.get(self.dense_codec) or by_name.get("int8")
+        dense_i = (dense_cand[0] if dense_cand
+                   else levels.index(scheduler.full_level))
+        topks = [(i, levels[i].keep_ratio) for i in by_name.get("topk", [])]
         sizes = scheduler.sizes
         median = sorted(sizes)[len(sizes) // 2] if sizes else 0
         target = max(frac, self.floor_ratio)
         choice = []
         for n in sizes:
             if frac >= self.dense_fraction or n < median or not topks:
-                choice.append(int8_i)
+                choice.append(dense_i)
             else:
                 choice.append(min(topks,
                                   key=lambda t: abs(t[1] - target))[0])

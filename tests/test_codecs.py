@@ -1,0 +1,408 @@
+"""Codec subsystem tests: registry round-trip, bit-exact payload parity of
+the four migrated seed rungs, error-feedback recomposition for every
+registered codec (oracle AND Pallas path), packed-wire-size == analytic
+accounting, and Level -> codec resolution."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip, the rest of the module runs
+    from hypothesis_stub import given, settings, st
+
+from repro.codecs import (Codec, build_codec, codec_for_level, get_codec,
+                          list_codecs, pack_bits, pack_payload,
+                          plan_wire_bytes, register_codec, unpack_bits,
+                          unpack_payload)
+from repro.codecs import base as codecs_base
+from repro.core import compression as C
+from repro.core.compression import Level
+from repro.core.scheduler import SyncPlan
+
+BUILTINS = ["full", "int4", "int8", "sign", "skip", "topk"]
+
+
+def _rand(n, seed=0):
+    return jnp.asarray(np.random.RandomState(seed).randn(n)
+                       .astype(np.float32))
+
+
+def _default(name):
+    return build_codec(name)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+class TestRegistry:
+    def test_builtins_registered(self):
+        assert list_codecs() == BUILTINS
+
+    def test_build_and_get(self):
+        for name in list_codecs():
+            c = build_codec(name)
+            assert isinstance(c, Codec)
+            assert c.name == name
+            assert get_codec(name) is type(c)
+
+    def test_unknown_name_raises(self):
+        with pytest.raises(KeyError, match="unknown codec"):
+            get_codec("no-such-codec")
+
+    def test_register_rejects_empty_and_duplicate(self):
+        with pytest.raises(ValueError, match="non-empty"):
+            register_codec(type("Anon", (Codec,), {}))
+        with pytest.raises(ValueError, match="already registered"):
+            register_codec(type("Clash", (Codec,), {"name": "int8"}))
+
+    def test_topk_requires_valid_ratio(self):
+        with pytest.raises(ValueError, match="ratio"):
+            build_codec("topk", ratio=1.5)
+
+
+# ---------------------------------------------------------------------------
+# Level -> codec resolution
+# ---------------------------------------------------------------------------
+
+
+class TestLevelResolution:
+    @pytest.mark.parametrize("level,codec_name", [
+        (Level("FULL", 1.0, 16), "full"),
+        (Level("INT8", 1.0, 8), "int8"),
+        (Level("INT4", 1.0, 4), "int4"),
+        (Level("SIGN1", 1.0, 1), "sign"),
+        (Level("TOPK10_INT8", 0.10, 8), "topk"),
+        (Level("SKIP", 0.0, 0), "skip"),
+    ])
+    def test_semantics(self, level, codec_name):
+        assert level.codec.name == codec_name
+
+    def test_topk_carries_ratio(self):
+        assert Level("T", 0.25, 8).codec.keep_ratio == 0.25
+        assert Level("T", 0.25, 8).codec.block_k(1024) == 256
+
+    def test_resolution_cached(self):
+        assert Level("A", 0.1, 8).codec is Level("B", 0.1, 8).codec
+
+
+# ---------------------------------------------------------------------------
+# bit-exact payload parity vs the seed operators
+# ---------------------------------------------------------------------------
+
+
+def _seed_topk_compress(blocks, k):
+    """The seed's compression.topk_compress, frozen verbatim."""
+    mag = jnp.abs(blocks)
+    _, idx = jax.lax.top_k(mag, k)
+    vals = jnp.take_along_axis(blocks, idx, axis=1)
+    scale = jnp.max(jnp.abs(vals), axis=1) / 127.0
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(vals / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, idx.astype(jnp.uint16), scale.astype(jnp.float32)
+
+
+def _seed_int8_compress(blocks):
+    """The seed's compression.int8_compress, frozen verbatim."""
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+class TestSeedPayloadParity:
+    """The four seed rungs must migrate payload-identically: same bytes on
+    the wire for the same input, bit for bit."""
+
+    @pytest.mark.parametrize("seed", [0, 1, 7])
+    @pytest.mark.parametrize("ratio", [0.25, 0.10, 0.01])
+    def test_topk_bit_exact(self, seed, ratio):
+        blocks = C.pad_to_blocks(_rand(8192, seed))
+        codec = build_codec("topk", ratio=ratio)
+        pay = codec.encode(blocks)
+        q, idx, scale = _seed_topk_compress(blocks, codec.block_k(1024))
+        np.testing.assert_array_equal(np.asarray(pay["q"]), np.asarray(q))
+        np.testing.assert_array_equal(np.asarray(pay["idx"]),
+                                      np.asarray(idx))
+        np.testing.assert_array_equal(np.asarray(pay["scale"]),
+                                      np.asarray(scale))
+
+    @pytest.mark.parametrize("seed", [0, 3])
+    def test_int8_bit_exact(self, seed):
+        blocks = C.pad_to_blocks(_rand(4096, seed) * 10)
+        pay = build_codec("int8").encode(blocks)
+        q, scale = _seed_int8_compress(blocks)
+        np.testing.assert_array_equal(np.asarray(pay["q"]), np.asarray(q))
+        np.testing.assert_array_equal(np.asarray(pay["scale"]),
+                                      np.asarray(scale))
+
+    def test_full_bit_exact(self):
+        blocks = C.pad_to_blocks(_rand(2048, 5))
+        pay = build_codec("full").encode(blocks)
+        np.testing.assert_array_equal(
+            np.asarray(pay["wire"]),
+            np.asarray(blocks.astype(jnp.bfloat16)))
+
+    def test_skip_empty(self):
+        assert build_codec("skip").encode(
+            C.pad_to_blocks(_rand(1024))) == {}
+
+    def test_wire_bytes_parity_with_seed_formulas(self):
+        """FULL (ring psum) and TOPK (all_gather) keep the seed's exact
+        byte formulas; INT8 now prices the block-padded payload that is
+        actually packed on the wire."""
+        n, P, block = 1_000_000, 2, 1024
+        nb = (n + block - 1) // block
+        assert Level("FULL", 1.0, 16).wire_bytes(n, P) == \
+            int(2 * (P - 1) / P * 2 * n)
+        for ratio in (0.25, 0.10, 0.01):
+            lvl = Level("T", ratio, 8)
+            k = lvl.block_k(block)
+            assert lvl.wire_bytes(n, P) == (nb * k * 3 + 4 * nb) * (P - 1)
+        assert Level("INT8", 1.0, 8).wire_bytes(n, P) == \
+            (nb * block + 4 * nb) * (P - 1)
+        # every codec is free when there is nobody to talk to
+        for name in list_codecs():
+            assert _default(name).wire_bytes(n, 1) == 0
+
+
+# ---------------------------------------------------------------------------
+# roundtrip + error-feedback recomposition properties
+# ---------------------------------------------------------------------------
+
+
+def _roundtrip_tol(codec, blocks):
+    """Per-codec bound on |decode(encode(x)) - x| for kept entries."""
+    absmax = float(jnp.max(jnp.abs(blocks)))
+    if codec.name == "full":
+        return absmax * 2 ** -8  # bf16 mantissa
+    if codec.name == "int8":
+        return absmax / 127.0 * 0.51 + 1e-6
+    if codec.name == "int4":
+        return absmax / 7.0 * 0.51 + 1e-6
+    return None  # topk/sign/skip: lossy beyond a pointwise bound
+
+
+class TestRoundTrip:
+    @pytest.mark.parametrize("name", ["full", "int8", "int4"])
+    def test_dense_roundtrip_error_bounded(self, name):
+        codec = _default(name)
+        blocks = C.pad_to_blocks(_rand(4096, 11) * 3)
+        back = codec.decode(codec.encode(blocks), 1024)
+        tol = _roundtrip_tol(codec, blocks)
+        np.testing.assert_allclose(np.asarray(back), np.asarray(blocks),
+                                   atol=tol)
+
+    def test_sign_roundtrip_magnitude(self):
+        codec = _default("sign")
+        blocks = C.pad_to_blocks(_rand(2048, 12))
+        back = codec.decode(codec.encode(blocks), 1024)
+        # every reconstructed entry is +-(block mean magnitude), signs match
+        scale = np.asarray(jnp.mean(jnp.abs(blocks), axis=1))
+        np.testing.assert_allclose(
+            np.abs(np.asarray(back)),
+            np.broadcast_to(scale[:, None], back.shape), rtol=1e-6)
+        assert np.all((np.asarray(back) >= 0) == (np.asarray(blocks) >= 0))
+
+    def test_int4_roundtrip_through_level(self):
+        out = C.roundtrip(_rand(3000, 13), Level("INT4", 1.0, 4))
+        assert out.shape == (3000,)
+        err = np.abs(np.asarray(out) - np.asarray(_rand(3000, 13)))
+        assert err.max() <= float(jnp.abs(_rand(3000, 13)).max()) / 7 * 0.51 \
+            + 1e-6
+
+    @given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_ef_recomposition_every_codec(self, seed):
+        """agg/omega + new_e == g + gamma*e for EVERY registered codec —
+        the lossless transmit/residual split error feedback relies on."""
+        g = _rand(2048 + seed % 7, seed % 1000)
+        e = _rand(g.shape[0], (seed + 1) % 1000) * 0.1
+        om = jnp.ones((1,), jnp.float32)
+        gamma = 0.7
+        ef = np.asarray(g) + gamma * np.asarray(e)
+        for name in list_codecs():
+            agg, new_e = _default(name).ef_sync(
+                g, e, om, om[0], gamma=gamma, n_pods=1, block=1024)
+            np.testing.assert_allclose(np.asarray(agg + new_e), ef,
+                                       rtol=1e-5, atol=1e-5,
+                                       err_msg=name)
+
+    @pytest.mark.parametrize("name", ["topk", "int8", "int4", "sign"])
+    def test_ef_recomposition_pallas_path(self, name):
+        """Same invariant through the fused Pallas kernels (interpret on
+        CPU) — the path grad_sync/delta_sync exercise on accelerators."""
+        g = _rand(5000, 21)
+        e = _rand(5000, 22) * 0.2
+        om = jnp.ones((1,), jnp.float32)
+        agg, new_e = _default(name).ef_sync(
+            g, e, om, om[0], gamma=1.0, n_pods=1, block=1024,
+            use_pallas=True)
+        np.testing.assert_allclose(np.asarray(agg + new_e),
+                                   np.asarray(g + e), rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("name", ["int8", "int4", "sign"])
+    def test_pallas_payload_matches_oracle(self, name):
+        """Dense codecs: fused-kernel payload == oracle payload bit-exact
+        (top-k is excluded: its bisection select tolerates threshold
+        ties, covered by tests/test_kernels.py)."""
+        g = _rand(3000, 31)
+        e = _rand(3000, 32) * 0.3
+        codec = _default(name)
+        pay_o, own_o, _ = codec.ef_encode(g, e, gamma=0.9, block=1024,
+                                          use_pallas=False)
+        pay_p, own_p, _ = codec.ef_encode(g, e, gamma=0.9, block=1024,
+                                          use_pallas=True)
+        assert sorted(pay_o) == sorted(pay_p)
+        for k in pay_o:
+            a, b = np.asarray(pay_o[k]), np.asarray(pay_p[k])
+            if a.dtype == np.float32:
+                # fma-order differences (kernel vs oracle) reach ~1 ulp
+                np.testing.assert_allclose(a, b, rtol=1e-6,
+                                           err_msg=f"{name}/{k}")
+            else:
+                # a 1-ulp scale wiggle may flip a value sitting exactly on
+                # a rounding boundary; allow <=0.1% of entries
+                assert (a != b).mean() <= 1e-3, f"{name}/{k}"
+        np.testing.assert_allclose(np.asarray(own_o), np.asarray(own_p),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# packed wire buffer == analytic accounting
+# ---------------------------------------------------------------------------
+
+
+class TestPackedBytes:
+    @pytest.mark.parametrize("n", [1024, 3000, 8192, 100_000])
+    @pytest.mark.parametrize("name", ["int8", "int4", "sign", "topk"])
+    def test_packed_size_equals_payload_bytes(self, n, name):
+        """What pack_payload puts on the all_gather wire must be exactly
+        what wire_bytes prices (the analytic == traced contract)."""
+        codec = _default(name)
+        payload, _, _ = codec.ef_encode(_rand(n, 3), jnp.zeros((n,)),
+                                        gamma=1.0, block=1024)
+        wire, meta = pack_payload(payload)
+        assert wire.size == codec.payload_bytes(n, 1024)
+        back = unpack_payload(wire, meta)
+        for k in payload:
+            np.testing.assert_array_equal(np.asarray(payload[k]),
+                                          np.asarray(back[k]))
+
+    def test_bit_pack_roundtrip(self):
+        r = np.random.RandomState(0)
+        bools = jnp.asarray(r.rand(4, 1024) > 0.5)
+        packed = pack_bits(bools)
+        assert packed.shape == (4, 128) and packed.dtype == jnp.uint8
+        bits = unpack_bits(packed, 1024)
+        np.testing.assert_array_equal(np.asarray(bits),
+                                      np.asarray(bools).astype(np.uint8))
+
+
+# ---------------------------------------------------------------------------
+# bucketed plan pricing
+# ---------------------------------------------------------------------------
+
+
+class TestPlanPricing:
+    def _plan(self, idx, omega=(0.5, 0.5)):
+        cfg_levels = (Level("FULL", 1.0, 16), Level("INT8", 1.0, 8),
+                      Level("TOPK10", 0.10, 8), Level("SKIP", 0.0, 0))
+        return SyncPlan(tuple(idx), cfg_levels, omega, 1)
+
+    def test_same_level_groups_share_padding(self):
+        """Two same-level groups are priced as ONE concatenated buffer —
+        fewer padded blocks than pricing them separately."""
+        sizes = [1500, 1500]  # separately: 2 blocks each; together: 3
+        plan = self._plan([2, 2])
+        bucketed = plan_wire_bytes(plan, sizes, 2)
+        separate = sum(plan.levels[2].wire_bytes(n, 2) for n in sizes)
+        assert bucketed < separate
+        assert bucketed == plan.levels[2].wire_bytes(3000, 2)
+
+    def test_mixed_plan_sums_buckets(self):
+        sizes = [2048, 1024, 4096, 512]
+        plan = self._plan([0, 1, 2, 3])
+        expect = (plan.levels[0].wire_bytes(2048, 2)
+                  + plan.levels[1].wire_bytes(1024, 2)
+                  + plan.levels[2].wire_bytes(4096, 2))
+        assert plan_wire_bytes(plan, sizes, 2) == expect
+
+    def test_single_pod_free(self):
+        plan = self._plan([0, 1, 2, 3], omega=(1.0,))
+        assert plan_wire_bytes(plan, [1024] * 4, 1) == 0
+
+
+# ---------------------------------------------------------------------------
+# knapsack ladder with the widened rungs
+# ---------------------------------------------------------------------------
+
+
+class TestWidenedLadder:
+    def test_default_ladder_resolves(self):
+        from repro.configs.base import ACESyncConfig
+        from repro.core.scheduler import levels_from_config
+        names = {l.codec.name for l in levels_from_config(ACESyncConfig())}
+        assert names == {"full", "int8", "int4", "sign", "topk", "skip"}
+
+    def test_knapsack_prunes_dominated_rungs(self):
+        """INT4 is cheaper AND higher-value than TOPK25, so a budget that
+        can afford INT4 must never pick TOPK25."""
+        from repro.configs.base import ACESyncConfig
+        from repro.core import knapsack
+        from repro.core.scheduler import levels_from_config
+        levels = levels_from_config(ACESyncConfig())
+        sizes = [10 ** 6] * 4
+        full = sum(levels[0].wire_bytes(n, 2) for n in sizes)
+        for frac in (0.1, 0.3, 0.6, 1.0):
+            choice = knapsack.solve([1.0] * 4, sizes, levels, full * frac, 2)
+            assert not any(levels[c].name == "TOPK25_INT8" for c in choice)
+
+    def test_knapsack_value_monotone_in_budget_widened(self):
+        from repro.configs.base import ACESyncConfig
+        from repro.core import knapsack
+        from repro.core.scheduler import levels_from_config
+        levels = levels_from_config(ACESyncConfig())
+        sizes = [10 ** 6, 5 * 10 ** 5, 10 ** 5]
+        imp = [0.9, 0.5, 0.2]
+        full = sum(levels[0].wire_bytes(n, 2) for n in sizes)
+        prev = -1.0
+        for frac in (0.0, 0.05, 0.15, 0.4, 0.8, 1.0):
+            choice = knapsack.solve(imp, sizes, levels, full * frac, 2)
+            val = sum(knapsack.level_value(levels[c]) * imp[i]
+                      for i, c in enumerate(choice))
+            assert val >= prev - 1e-9
+            prev = val
+
+
+# ---------------------------------------------------------------------------
+# backend dispatch caching (the hoisted _on_cpu satellite)
+# ---------------------------------------------------------------------------
+
+
+class TestDispatchCaching:
+    def test_cached_and_env_override(self, monkeypatch):
+        from repro.kernels import ops
+        ops.interpret_mode.cache_clear()
+        ops.default_use_pallas.cache_clear()
+        try:
+            monkeypatch.setenv(ops.FORCE_INTERPRET_ENV, "1")
+            ops.interpret_mode.cache_clear()
+            ops.default_use_pallas.cache_clear()
+            assert ops.interpret_mode() is True
+            assert ops.default_use_pallas() is True
+            monkeypatch.setenv(ops.FORCE_INTERPRET_ENV, "0")
+            ops.interpret_mode.cache_clear()
+            ops.default_use_pallas.cache_clear()
+            assert ops.interpret_mode() is False
+            assert ops.default_use_pallas() is False
+            # cached: flipping the env without a cache clear is invisible
+            monkeypatch.setenv(ops.FORCE_INTERPRET_ENV, "1")
+            assert ops.interpret_mode() is False
+        finally:
+            monkeypatch.delenv(ops.FORCE_INTERPRET_ENV, raising=False)
+            ops.interpret_mode.cache_clear()
+            ops.default_use_pallas.cache_clear()

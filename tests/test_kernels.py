@@ -12,7 +12,9 @@ except ImportError:  # property tests skip, the rest of the module runs
 
 from repro.kernels import ops, ref
 from repro.kernels.topk_compress import ef_topk_select, LANES, ROWS
-from repro.kernels.quantize import quantize_int8_fused, dequantize_int8
+from repro.kernels.quantize import (quantize_int8_fused, dequantize_int8,
+                                    ef_int4_fused, unpack_nibbles)
+from repro.kernels.sign import ef_sign_fused
 
 SHAPES = [(8, 1024), (16, 1024), (64, 1024)]
 DISTS = ["normal", "uniform", "heavy", "sparse"]
@@ -106,6 +108,65 @@ class TestQuantizeKernel:
                                    rtol=1e-5, atol=1e-5)
         # quantisation error bounded by scale/2
         assert np.all(np.abs(np.asarray(r)) <= np.asarray(s) * 0.5 + 1e-6)
+
+
+class TestInt4Kernel:
+    @pytest.mark.parametrize("shape", SHAPES, ids=str)
+    @pytest.mark.parametrize("dist", DISTS)
+    def test_matches_oracle(self, shape, dist):
+        g = _data(shape, dist, 11)
+        e = _data(shape, dist, 12)
+        p, s, r = ef_int4_fused(g, e, gamma=0.8, interpret=True)
+        p_r, s_r, r_r = ref.ef_int4_ref(g, e, gamma=0.8)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(s_r),
+                                   rtol=1e-6)
+        # a 1-ulp scale wiggle can flip a value on a rounding boundary
+        assert (np.asarray(p) != np.asarray(p_r)).mean() <= 1e-4
+        tol = float(np.asarray(s_r).max()) * 1e-3 + 1e-6
+        np.testing.assert_allclose(np.asarray(r), np.asarray(r_r),
+                                   rtol=1e-4, atol=tol)
+        # EF invariant: dequant(packed) + residual == g + gamma*e
+        dq = unpack_nibbles(p) * s
+        np.testing.assert_allclose(np.asarray(dq + r),
+                                   np.asarray(g + 0.8 * e),
+                                   rtol=1e-4, atol=tol)
+
+    def test_nibble_packing_range(self):
+        g = _data((8, 1024), "heavy", 13)
+        e = jnp.zeros_like(g)
+        p, s, r = ef_int4_fused(g, e, gamma=1.0, interpret=True)
+        q = np.asarray(unpack_nibbles(p))
+        assert q.min() >= -7 and q.max() <= 7
+        # quantisation error bounded by scale/2
+        assert np.all(np.abs(np.asarray(r)) <= np.asarray(s) * 0.5 + 1e-5)
+
+
+class TestSignKernel:
+    @pytest.mark.parametrize("shape", SHAPES, ids=str)
+    @pytest.mark.parametrize("dist", DISTS)
+    def test_matches_oracle(self, shape, dist):
+        g = _data(shape, dist, 14)
+        e = _data(shape, dist, 15)
+        sg, s, r = ef_sign_fused(g, e, gamma=0.6, interpret=True)
+        sg_r, s_r, r_r = ref.ef_sign_ref(g, e, gamma=0.6)
+        np.testing.assert_array_equal(np.asarray(sg), np.asarray(sg_r))
+        np.testing.assert_allclose(np.asarray(s), np.asarray(s_r),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(r), np.asarray(r_r),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_sign_and_scale_semantics(self):
+        g = _data((8, 1024), "normal", 16)
+        e = jnp.zeros_like(g)
+        sg, s, r = ef_sign_fused(g, e, gamma=1.0, interpret=True)
+        assert set(np.unique(np.asarray(sg))) <= {-1, 1}
+        np.testing.assert_allclose(
+            np.asarray(s)[:, 0], np.mean(np.abs(np.asarray(g)), axis=1),
+            rtol=1e-6)
+        # EF invariant holds exactly elementwise
+        np.testing.assert_allclose(
+            np.asarray(sg.astype(jnp.float32) * s + r), np.asarray(g),
+            rtol=1e-5, atol=1e-5)
 
 
 class TestOpsWrappers:
