@@ -153,16 +153,18 @@ def bench_train_step():
                                         seq_len=128, batch=4, steps=100,
                                         ckpt_dir=tempfile.mkdtemp())
         tr = sess.trainer
-        state = sess.init()
         shape = sess.run_config.shape
         batch = sess.model.make_batch(jax.random.PRNGKey(1), shape)
         plan = tr.default_plan()
-        fn = tr.step_fn(plan, tr.strategy.representative_kind)
+        kind = tr.strategy.representative_kind
+        # the train state is donated through the step — chain it instead
+        # of replaying the same (consumed) buffers
+        state_box = [sess.init()]
 
-        def step(s):
-            s2, m = fn(s, batch)
+        def step():
+            state_box[0], m = tr.step(state_box[0], batch, plan, kind)
             return m["loss"]
-        us = _time(step, state, iters=3, warmup=1)
+        us = _time(step, iters=3, warmup=1)
         tok = shape.global_batch * shape.seq_len
         row(f"train_step_smoke_{arch}", us,
             f"{tok/(us/1e6):.0f}tok_s")
@@ -183,6 +185,70 @@ def bench_strategy_loop(steps=12):
         us = (time.perf_counter() - t0) * 1e6 / steps
         row(f"strategy_loop_{name}", us,
             f"loss={sess.losses[-1]:.3f};comm={sess.comm_bytes/1e6:.2f}MB")
+
+
+def bench_steptime(out_path=None, steps=36, warmup=6):
+    """Perf trajectory of the retrace-free replan path: steps/sec for
+    fullsync vs acesync with replanning enabled at two cadences, the
+    replan-to-apply latency of the async device replan, the train-step
+    compile count (steady-state replans must add zero), and the
+    padded-vs-analytic wire-byte overhead of the size-class buckets.
+    Written to benchmarks/results/BENCH_step_time.json (uploaded by CI)."""
+    import tempfile
+    from repro.configs.base import ACESyncConfig
+    from repro.launch.session import TrainSession
+
+    records = []
+    for strategy, cadence in (("fullsync", 0), ("acesync", 6),
+                              ("acesync", 18)):
+        ace = ACESyncConfig(replan_every=cadence if cadence else 10 ** 9,
+                            sync_interval_init=2)
+        sess = TrainSession.from_config(
+            "paper-350m", strategy=strategy, seq_len=64, batch=4,
+            steps=steps + warmup, ckpt_every=0,
+            ckpt_dir=tempfile.mkdtemp(), acesync=ace)
+        sess.run(warmup, log_every=0)            # compile + first replans
+        tr = sess.trainer
+        compiles_before = tr.compile_count()
+        t0 = time.perf_counter()
+        sess.run(steps, log_every=0)
+        dt = time.perf_counter() - t0
+        compiles_after = tr.compile_count()
+        sched = tr.scheduler
+        plan = sess.loop.plan
+        padded = sched.plan_wire_bytes(plan)
+        analytic = sched.plan_wire_bytes(plan, padded=False)
+        lat = sess.loop.replan_latencies
+        rec = {
+            "strategy": strategy,
+            "replan_every": cadence,
+            "steps_per_sec": round(steps / dt, 3),
+            "us_per_step": round(dt / steps * 1e6, 1),
+            "compile_count_warm": compiles_before,
+            "new_compiles_during_timed_steps":
+                compiles_after - compiles_before,
+            "replans_applied": len(lat),
+            "replan_to_apply_latency_steps":
+                (sum(lat) / len(lat) if lat else None),
+            "wire_bytes_padded": padded,
+            "wire_bytes_analytic": analytic,
+            "padding_overhead_frac":
+                round(padded / analytic - 1.0, 4) if analytic else 0.0,
+            "final_loss": round(sess.losses[-1], 4),
+        }
+        records.append(rec)
+        row(f"steptime_{strategy}_replan{cadence}", dt / steps * 1e6,
+            f"{rec['steps_per_sec']}steps_s;"
+            f"recompiles={rec['new_compiles_during_timed_steps']}")
+    out = out_path or os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "results",
+        "BENCH_step_time.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump({"backend": jax.default_backend(),
+                   "timed_steps": steps, "records": records}, f, indent=1)
+    print(f"wrote {out}", flush=True)
+    return records
 
 
 def bench_decode_step():
@@ -232,11 +298,15 @@ def main() -> None:
     if "--codecs" in sys.argv:
         bench_codecs()
         return
+    if "--steptime" in sys.argv:
+        bench_steptime()
+        return
     bench_compression()
     bench_kernels()
     bench_codecs()
     bench_train_step()
     bench_strategy_loop()
+    bench_steptime()
     bench_decode_step()
     bench_roofline_summary()
     bench_table1(steps=int(os.environ.get("TABLE1_STEPS", "60")))

@@ -97,8 +97,7 @@ def run_strategy(strategy: str, steps: int, seed: int = 0,
         kinds = strat.step_schedule(local_since, H)
         metrics = {}
         for kind in kinds:
-            fn = trainer.step_fn(plan, kind)
-            state, m = fn(state, batch)
+            state, m = trainer.step(state, batch, plan, kind)
             metrics.update(m)
             comm_bytes += N_EDGE_AGG * strat.wire_bytes(sched, plan, kind,
                                                         n_pods=2)

@@ -28,7 +28,6 @@ that resolves to a registered codec via :func:`codec_for_level`.
 from __future__ import annotations
 
 import math
-from collections import defaultdict
 from typing import Dict, List, Sequence, Tuple, Type
 
 import jax
@@ -286,12 +285,21 @@ def codec_for_level(level) -> Codec:
 
 
 def plan_wire_bytes(plan, sizes: Sequence[int], n_pods: int,
-                    block: int = BLOCK) -> int:
+                    block: int = BLOCK, use_sig: bool = True) -> int:
     """Analytic per-device wire bytes for a plan, priced the way
-    ``core/sync.sync_tree`` actually transmits it: same-level leaves share
-    one concatenated buffer (and its block padding) and one collective."""
-    totals: Dict[int, int] = defaultdict(int)
-    for li, n in zip(plan.level_idx, sizes):
-        totals[li] += int(n)
-    return int(sum(plan.levels[li].codec.wire_bytes(n, n_pods, block)
-                   for li, n in totals.items()))
+    ``core/sync.sync_tree`` actually transmits it: block-aligned leaves
+    repacked into one per-rung buffer and one collective, per-leaf block
+    padding included.  When the plan carries its padded bucket signature
+    (``SyncPlan.bucket_sig``, attached by the Scheduler for plans the
+    retrace-free exchange pads to size classes), that signature is priced
+    — the exact bytes the executed exchange moves.  ``use_sig=False``
+    forces the unpadded (exact-bucket) total, the analytic floor the
+    padding overhead is measured against."""
+    from repro.core.planexec import bucket_signature, sig_wire_bytes
+    sig = getattr(plan, "bucket_sig", None) if use_sig else None
+    if sig is not None and getattr(plan, "bucket_block", block) != block:
+        sig = None  # signature counted in a different block size: rebuild
+    if sig is None:
+        sig = bucket_signature(plan.level_idx, sizes, len(plan.levels),
+                               block)
+    return sig_wire_bytes(sig, plan.levels, n_pods, block)

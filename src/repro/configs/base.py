@@ -192,6 +192,13 @@ class ACESyncConfig:
     importance_hidden: int = 32        # attention estimator width
     importance_lr: float = 1e-3
     n_clusters: int = 4                # device clustering
+    # padded-size ladder of the retrace-free exchange (core/planexec.py):
+    # adaptive plans round per-rung bucket sizes up to geometric classes so
+    # steady-state replans reuse the compiled step.  Growth 2.0 = power-of-
+    # two classes (fewest recompiles, up to 2x wire padding); 1.125 bounds
+    # padding at 12.5%; 1.0 = exact sizes (every bucket-size change
+    # recompiles).
+    bucket_pad_growth: float = 1.125
     # level ladder: (name, keep_ratio, value_bits) - SKIP transmits nothing.
     # Each rung resolves to a registered repro/codecs wire format by
     # semantics: dense 8/4/1-bit -> int8 / packed int4 / sign-majority-vote.

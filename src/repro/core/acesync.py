@@ -13,7 +13,7 @@ estimator state is a few hundred scalars.
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +21,8 @@ import jax.numpy as jnp
 from repro.configs.base import ACESyncConfig
 from repro.core import importance as imp
 from repro.core import sync as S
-from repro.core.scheduler import SyncPlan
+from repro.core.planexec import ExecPlan
+from repro.core.scheduler import Scheduler, SyncPlan
 
 
 class ACEState(NamedTuple):
@@ -62,8 +63,8 @@ def state_specs(params_specs, cfg: ACESyncConfig,
     return small._replace(errors=errors)
 
 
-def sync_gradients(grads, state: ACEState, plan: SyncPlan, *,
-                   mesh, shardings, cfg: ACESyncConfig
+def sync_gradients(grads, state: ACEState, plan: Union[SyncPlan, ExecPlan],
+                   *, mesh, shardings, cfg: ACESyncConfig
                    ) -> Tuple[dict, ACEState, Dict[str, jax.Array]]:
     """The ACE-Sync round. Returns (aggregated grads, new state, metrics)."""
     # --- per-group stats for the importance estimator ---
@@ -92,7 +93,38 @@ def sync_gradients(grads, state: ACEState, plan: SyncPlan, *,
 
 
 def current_scores(state: ACEState, cfg: ACESyncConfig) -> jax.Array:
-    """Importance scores I(theta_i) (G,) — used by the host-side planner."""
+    """Importance scores I(theta_i) (G,) — jittable; consumed by the
+    device-resident replan (and, lagged, by host-side telemetry)."""
     temp = imp.temporal_features(state.importance)
     return imp.scores(state.importance.params, temp, state.struct_feat,
                       cfg.alpha)
+
+
+def device_replan_fn(scheduler: Scheduler, cfg: ACESyncConfig):
+    """The device-resident control plane: one jitted computation
+    ``(importance_state, struct_feat, budget_bytes) -> int32[G]`` fusing
+    the importance scoring (eqs. 3-4) with the vectorized greedy knapsack,
+    so a replan never pulls ``grad_group_stats`` (or anything else) to the
+    host — the host fetches only the tiny assignment vector,
+    asynchronously.  The inputs are the estimator's few-hundred-scalar
+    state, NOT the full ACEState (whose error buffers are param-sized).
+
+    Cached per (scheduler, cfg) — the solver's static tables depend on the
+    scheduler's (sizes, ladder, acct_pods) and the closure bakes in
+    ``cfg.alpha``."""
+    cache = getattr(scheduler, "_device_replan_fns", None)
+    if cache is None:
+        cache = scheduler._device_replan_fns = {}
+    fn = cache.get(cfg)
+    if fn is None:
+        solver = scheduler.device_solver()
+
+        @jax.jit
+        def fn(imp_state, struct_feat, budget_bytes):
+            temp = imp.temporal_features(imp_state)
+            scores = imp.scores(imp_state.params, temp, struct_feat,
+                                cfg.alpha)
+            return solver(scores, jnp.asarray(budget_bytes, jnp.float32))
+
+        cache[cfg] = fn
+    return fn

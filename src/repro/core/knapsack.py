@@ -9,18 +9,34 @@ rungs (cheaper-but-better alternatives exist) are pruned so the effective
 ladder is monotone (more bytes -> more preserved value); on a monotone
 ladder the classic greedy-by-density algorithm on the *incremental*
 (delta_value / delta_bytes) items is optimal up to one item — the standard
-fractional-knapsack bound — and runs in O(G * L log(G * L)) on the host.
-Runs every ``replan_every`` steps; the result is a static sync plan (one
-level index per parameter group).
+fractional-knapsack bound.
+
+Two solvers share the pruned ladder:
+
+  * :func:`solve` — the host fallback: a single heap/pointer sweep.  Each
+    group keeps one pointer to its next rung; only that upgrade item lives
+    on the heap, so the sweep is O(G * L log G) with no rescans (the old
+    multi-pass loop re-walked the full item list up to ``len(order)``
+    times — O(G * L^2) per replan).
+  * :func:`make_device_solver` — the jittable device solver the
+    retrace-free control plane uses: one density sort over all incremental
+    items, a cumulative-bytes budget mask, and a per-group ladder-order
+    cumprod.  A replan is then a single device computation
+    (importance scores -> plan vector) with no host round-trip.
+
+Runs every ``replan_every`` steps; the result is a per-group level
+assignment (host list or device ``int32[G]`` vector).
 """
 from __future__ import annotations
 
+import heapq
 import math
-from typing import List, Sequence, Tuple
+from typing import Callable, List, Sequence, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.compression import Level
+from repro.core.compression import BLOCK, Level
 
 
 def level_value(level: Level) -> float:
@@ -30,68 +46,180 @@ def level_value(level: Level) -> float:
     return level.codec.value_fraction()
 
 
-def solve(importance: Sequence[float], sizes: Sequence[int],
-          levels: Sequence[Level], budget_bytes: float,
-          n_pods: int) -> List[int]:
-    """-> per-group level index. Greedy incremental knapsack."""
-    G = len(importance)
-    assert len(sizes) == G
-    levels = list(levels)
-    # order levels by wire bytes ascending (SKIP first)
+def per_element_cost(level: Level, n_pods: int, block: int = BLOCK) -> float:
+    """Size-independent wire cost per element: one full block's bytes over
+    the block size.  Used to order the ladder — every codec's wire bytes
+    are (block-)linear in n, so this ranks rungs without picking an
+    arbitrary probe size."""
+    return level.wire_bytes(block, max(n_pods, 2), block) / block
+
+
+def effective_ladder(levels: Sequence[Level], n_pods: int) -> List[int]:
+    """Rung indices ordered by per-element cost ascending (SKIP first),
+    with dominated rungs pruned: the greedy's optimality argument needs a
+    ladder monotone in (bytes -> value).  With the widened codec ladder
+    that can fail (e.g. packed INT4 is cheaper AND higher-value than
+    TOPK25), so drop any rung whose value does not strictly improve on a
+    cheaper rung — upgrading to it would never be the right move."""
     order = sorted(range(len(levels)),
-                   key=lambda j: levels[j].wire_bytes(10 ** 6, max(n_pods, 2)))
-    # dominated-rung pruning: the greedy's optimality argument needs a
-    # ladder monotone in (bytes -> value).  With the widened codec ladder
-    # that can fail (e.g. packed INT4 is cheaper AND higher-value than
-    # TOPK25), so drop any rung whose value does not strictly improve on a
-    # cheaper rung — upgrading to it would never be the right move.
+                   key=lambda j: per_element_cost(levels[j], n_pods))
     ladder = []
     for j in order:
         if not ladder or level_value(levels[j]) > \
                 level_value(levels[ladder[-1]]) + 1e-12:
             ladder.append(j)
-    order = ladder
-    # NOTE: the solver prices each group's bytes independently (per-group
-    # block padding).  The executed plan buckets same-level groups into one
-    # buffer (codecs.plan_wire_bytes), which shares padding — so per-group
-    # pricing is a conservative upper bound and the greedy can never
-    # exceed the budget it was given; a joint bucket-aware cost would
-    # depend on the assignment being built and break the incremental
-    # density items.
+    return ladder
+
+
+def _item_gain(importance: float, size: int, dv: float) -> float:
+    return dv * max(importance, 1e-6) * math.log1p(size)
+
+
+def solve(importance: Sequence[float], sizes: Sequence[int],
+          levels: Sequence[Level], budget_bytes: float,
+          n_pods: int) -> List[int]:
+    """-> per-group level index. Greedy incremental knapsack, one
+    heap/pointer sweep.
+
+    Each group's candidate upgrade is always its NEXT rung on the pruned
+    ladder, so exactly one item per group is live at a time; taking it
+    pushes the group's next rung, and an unaffordable item freezes the
+    group (spent only grows, so it can never become affordable later —
+    the same fixpoint the old multi-pass rescan converged to).
+    """
+    G = len(importance)
+    assert len(sizes) == G
+    levels = list(levels)
+    order = effective_ladder(levels, n_pods)
+    # NOTE: the solver prices each group's bytes independently.  Since the
+    # plan-as-data exchange block-aligns every leaf, per-group pricing is
+    # EXACT for unpadded buckets and a lower bound under size-class
+    # padding (codecs.plan_wire_bytes prices the executed signature) — the
+    # greedy can never exceed the analytic budget it was given.
     choice = [order[0]] * G          # start everything at the cheapest level
     spent = sum(levels[choice[i]].wire_bytes(sizes[i], n_pods)
                 for i in range(G))
 
-    # incremental upgrade items: (density, group, to_level_position)
-    items = []
-    for i in range(G):
-        for pos in range(1, len(order)):
-            j_prev, j = order[pos - 1], order[pos]
-            dv = (level_value(levels[j]) - level_value(levels[j_prev])) \
-                * max(importance[i], 1e-6) * math.log1p(sizes[i])
-            db = (levels[j].wire_bytes(sizes[i], n_pods)
-                  - levels[j_prev].wire_bytes(sizes[i], n_pods))
-            if db <= 0:
-                continue
-            items.append((dv / db, i, pos, db))
-    items.sort(key=lambda t: -t[0])
+    wb = [[levels[j].wire_bytes(sizes[i], n_pods) for j in order]
+          for i in range(G)]
+    val = [level_value(levels[j]) for j in order]
 
-    pos_of = [0] * G
-    # multiple passes: a skipped prerequisite may unlock later upgrades
-    for _ in range(len(order)):
-        progressed = False
-        for dens, i, pos, db in items:
-            if pos != pos_of[i] + 1:
-                continue  # upgrades must be taken in ladder order
-            if spent + db > budget_bytes:
-                continue
-            spent += db
-            pos_of[i] = pos
-            choice[i] = order[pos]
-            progressed = True
-        if not progressed:
-            break
+    heap: List[Tuple[float, int, int, int]] = []
+
+    def push(i: int, pos: int):
+        if pos >= len(order):
+            return
+        db = wb[i][pos] - wb[i][pos - 1]
+        if db <= 0:
+            return  # degenerate rung pair (equal bytes): freeze the group
+        dv = _item_gain(importance[i], sizes[i], val[pos] - val[pos - 1])
+        heapq.heappush(heap, (-dv / db, i, pos, db))
+
+    for i in range(G):
+        push(i, 1)
+    while heap:
+        _, i, pos, db = heapq.heappop(heap)
+        if spent + db > budget_bytes:
+            continue  # group frozen at pos - 1
+        spent += db
+        choice[i] = order[pos]
+        push(i, pos + 1)
     return choice
+
+
+def _group_hull(wb_row: np.ndarray, vals: np.ndarray) -> List[int]:
+    """Upper convex hull of one group's (bytes, value) ladder points.
+
+    Restricting the greedy to hull points makes the incremental densities
+    strictly decreasing along each group's ladder — the property that lets
+    a single global density sort + prefix budget mask respect ladder order
+    without an inner loop.  Importance multiplies the whole value axis of
+    a group, so the hull is importance-invariant and precomputes in numpy.
+    """
+    hull = [0]
+    for p in range(1, len(vals)):
+        if wb_row[p] <= wb_row[hull[-1]] or vals[p] <= vals[hull[-1]]:
+            continue
+        while len(hull) >= 2:
+            a, b = hull[-2], hull[-1]
+            dens_ab = (vals[b] - vals[a]) / (wb_row[b] - wb_row[a])
+            dens_bp = (vals[p] - vals[b]) / (wb_row[p] - wb_row[b])
+            if dens_bp >= dens_ab:      # b lies under the a->p chord
+                hull.pop()
+            else:
+                break
+        hull.append(p)
+    return hull
+
+
+def make_device_solver(sizes: Sequence[int], levels: Sequence[Level],
+                       n_pods: int, block: int = BLOCK
+                       ) -> Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]:
+    """Build the jittable device knapsack for a fixed (sizes, ladder).
+
+    Returns ``fn(importance f32[G], budget_bytes scalar) -> int32[G]``.
+    All static tables — the pruned ladder and each group's convex-hull
+    upgrade items (:func:`_group_hull`) — are numpy-precomputed once; the
+    traced computation is one density sort over the hull items, a
+    cumulative-bytes budget mask (hull densities decrease within a group,
+    so the accepted density-sorted prefix automatically respects ladder
+    order), and a per-group cumprod selecting the hull point reached.
+
+    This is the classic LP-relaxation greedy for the multiple-choice
+    knapsack: rungs off a group's hull are never picked (the host sweep
+    can pass through them), and bytes of items rejected by the prefix mask
+    still count against the budget — both make the device plan
+    conservative, never over budget.
+    """
+    order = effective_ladder(list(levels), n_pods)
+    G, Lp = len(sizes), len(order)
+    if Lp == 1 or G == 0:
+        base_choice = jnp.full((G,), order[0] if order else 0, jnp.int32)
+        return lambda importance, budget_bytes: base_choice
+
+    wb = np.asarray([[levels[j].wire_bytes(int(n), n_pods) for j in order]
+                     for n in sizes], np.float64)          # (G, Lp)
+    base = float(wb[:, 0].sum())
+    vals = np.asarray([level_value(levels[j]) for j in order])
+    hulls = [_group_hull(wb[i], vals) for i in range(G)]
+    Hm = max(len(h) for h in hulls)                        # hull positions
+    # per-group hull item tables, padded with invalid items
+    item_db = np.zeros((G, Hm - 1), np.float64)
+    item_dv = np.zeros((G, Hm - 1), np.float64)
+    valid = np.zeros((G, Hm - 1), bool)
+    rung_at = np.zeros((G, Hm), np.int32)                  # ladder rung per
+    log_sz = np.log1p(np.asarray(sizes, np.float64))       # hull position
+    for i, h in enumerate(hulls):
+        rung_at[i] = order[h[-1]]
+        for k, p in enumerate(h):
+            rung_at[i, k] = order[p]
+        for k in range(1, len(h)):
+            item_db[i, k - 1] = wb[i, h[k]] - wb[i, h[k - 1]]
+            item_dv[i, k - 1] = (vals[h[k]] - vals[h[k - 1]]) * log_sz[i]
+            valid[i, k - 1] = True
+
+    db_j = jnp.asarray(item_db, jnp.float32)
+    dv_j = jnp.asarray(item_dv, jnp.float32)
+    valid_j = jnp.asarray(valid)
+    rung_j = jnp.asarray(rung_at)
+
+    def solve_fn(importance: jnp.ndarray,
+                 budget_bytes: jnp.ndarray) -> jnp.ndarray:
+        imp = jnp.maximum(importance.astype(jnp.float32), 1e-6)[:, None]
+        dens = jnp.where(valid_j, dv_j * imp / jnp.maximum(db_j, 1.0),
+                         -jnp.inf)
+        flat_d = dens.reshape(-1)
+        flat_b = jnp.where(valid_j, db_j, 0.0).reshape(-1)
+        by_density = jnp.argsort(-flat_d)
+        cum = jnp.cumsum(flat_b[by_density])
+        afford = (base + cum <= budget_bytes) \
+            & jnp.isfinite(flat_d[by_density])
+        taken = jnp.zeros(flat_d.shape, bool).at[by_density].set(afford)
+        taken = taken.reshape(G, Hm - 1).astype(jnp.int32)
+        pos = jnp.cumprod(taken, axis=1).sum(axis=1)       # hull point hit
+        return jnp.take_along_axis(rung_j, pos[:, None], axis=1)[:, 0]
+
+    return solve_fn
 
 
 def plan_bytes(choice: Sequence[int], sizes: Sequence[int],

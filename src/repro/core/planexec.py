@@ -1,0 +1,162 @@
+"""Plan-as-data: the executable, retrace-free form of a SyncPlan.
+
+The scheduler's :class:`~repro.core.scheduler.SyncPlan` is a host-side
+policy object (one ladder-rung index per parameter group).  Baking it into
+the jitted train step as a static argument meant every replan risked a
+fresh XLA compile — up to L^G variants for G groups over an L-rung ladder.
+:class:`ExecPlan` is the same plan lowered to *data*:
+
+  * every parameter group is laid out block-aligned in one static flat
+    (NB, block) buffer (``leaf_layout``), computed once per (model, mesh);
+  * per rung, a gather permutation ``perm_r: int32[S_r]`` of block indices
+    repacks the member groups into one contiguous per-rung buffer.  The
+    perms are ordinary device arrays — replans swap them without
+    retracing;
+  * only the tuple of padded per-rung block counts — the **bucket-shape
+    signature** — is static.  Rung sizes are rounded up to a small
+    geometric ladder of size classes (:func:`pad_block_class`, power-of-
+    two classes at the default growth of 2.0), so assignments that shuffle
+    groups between rungs without crossing a class boundary hit the warm
+    jit cache.  The padding is real zeros on the wire and is priced
+    explicitly by ``repro.codecs.plan_wire_bytes``.
+
+The jit cache is therefore keyed on ``(levels, sig, block)`` — a handful
+of variants per run — instead of the full per-group assignment.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression import BLOCK, Level
+
+#: default geometric growth of the padded-size ladder.  2.0 gives pure
+#: power-of-two classes (fewest signatures, up to 2x wire padding); the
+#: default 1.125 bounds the padding overhead at 12.5% while still
+#: absorbing replan-to-replan bucket jitter.  Smaller growth -> less
+#: padding on the wire but more distinct bucket signatures (more
+#: compiles); 1.0 disables padding entirely (exact sizes — right for
+#: strategies whose plan never changes).  Tunable per run via
+#: ``ACESyncConfig.bucket_pad_growth``.
+PAD_GROWTH = 1.125
+
+
+def n_blocks(n: int, block: int = BLOCK) -> int:
+    return (int(n) + block - 1) // block
+
+
+def pad_block_class(nb: int, growth: float = PAD_GROWTH) -> int:
+    """Smallest size class >= ``nb`` blocks on a geometric ladder
+    (1, 2, 4, 8, ... at the default growth of 2).  0 stays 0: an unused
+    rung is absent from the trace entirely."""
+    if nb <= 0:
+        return 0
+    if not growth or growth <= 1.0:
+        return int(nb)
+    c = 1
+    while c < nb:
+        c = max(c + 1, int(math.ceil(c * growth)))
+    return c
+
+
+def bucket_signature(level_idx: Sequence[int], sizes: Sequence[int],
+                     n_levels: int, block: int = BLOCK,
+                     growth: Optional[float] = None) -> Tuple[int, ...]:
+    """Padded per-rung block counts — the static jit-cache key of the
+    exchange.  ``growth=None`` gives exact (unpadded) bucket sizes."""
+    per = [0] * n_levels
+    for li, n in zip(level_idx, sizes):
+        per[int(li)] += n_blocks(n, block)
+    if growth:
+        per = [pad_block_class(nb, growth) for nb in per]
+    return tuple(per)
+
+
+def sig_wire_bytes(sig: Sequence[int], levels: Sequence[Level],
+                   n_pods: int, block: int = BLOCK) -> int:
+    """Per-device wire bytes of an executed exchange with bucket signature
+    ``sig`` — what the collectives actually move, padding included."""
+    return int(sum(levels[r].wire_bytes(S * block, n_pods, block)
+                   for r, S in enumerate(sig) if S))
+
+
+@dataclass(frozen=True)
+class ExecPlan:
+    """A SyncPlan lowered to device data + a static bucket signature.
+
+    Registered as a pytree: ``perms`` and ``omega`` are children (traced,
+    swapped per replan), everything else is aux data (hashed into the jit
+    cache key).  ``total_blocks`` is the NB of the *local* leaf layout the
+    perms index into (one zero pad block lives at index NB)."""
+    levels: Tuple[Level, ...]
+    sig: Tuple[int, ...]              # padded block count per rung
+    block: int
+    total_blocks: int
+    perms: Tuple[jax.Array, ...]      # int32[S_r] per rung with sig[r] > 0
+    omega: jax.Array                  # f32[n_pods] aggregation weights
+
+    def static_key(self) -> tuple:
+        return (self.levels, self.sig, self.block, self.total_blocks)
+
+    def with_omega(self, omega) -> "ExecPlan":
+        return replace(self, omega=jnp.asarray(omega, jnp.float32))
+
+
+jax.tree_util.register_pytree_node(
+    ExecPlan,
+    lambda ep: ((ep.perms, ep.omega),
+                (ep.levels, ep.sig, ep.block, ep.total_blocks)),
+    lambda aux, ch: ExecPlan(levels=aux[0], sig=aux[1], block=aux[2],
+                             total_blocks=aux[3], perms=tuple(ch[0]),
+                             omega=ch[1]),
+)
+
+
+def build_exec_plan(plan, sizes: Sequence[int], *, block: int = BLOCK,
+                    growth: Optional[float] = None,
+                    omega=None) -> ExecPlan:
+    """Lower a :class:`SyncPlan` to an :class:`ExecPlan`.
+
+    ``sizes`` are the per-group element counts of the layout the exchange
+    actually runs on — the LOCAL shard sizes when the sync executes inside
+    a data/model-manual region (see ``core.sync.local_group_sizes``).
+    ``growth``: padded-class ladder for adaptive plans (``None`` = exact
+    sizes, right for plans that never change).  The perms are numpy-built
+    (O(total_blocks), trivial next to a train step) and uploaded once per
+    distinct assignment.
+    """
+    level_idx = tuple(int(i) for i in plan.level_idx)
+    if len(level_idx) != len(sizes):
+        raise ValueError(f"plan has {len(level_idx)} groups, layout has "
+                         f"{len(sizes)}")
+    L = len(plan.levels)
+    nbs = [n_blocks(n, block) for n in sizes]
+    starts = np.concatenate([[0], np.cumsum(nbs)]).astype(np.int64)
+    NB = int(starts[-1])
+    sig = bucket_signature(level_idx, sizes, L, block, growth)
+    member = [[] for _ in range(L)]
+    for i, li in enumerate(level_idx):
+        if nbs[i]:
+            member[li].append(np.arange(starts[i], starts[i] + nbs[i],
+                                        dtype=np.int32))
+    perms = []
+    for r in range(L):
+        S = sig[r]
+        if not S:
+            continue
+        idx = (np.concatenate(member[r]) if member[r]
+               else np.zeros((0,), np.int32))
+        # pad entries gather the zero block at index NB and scatter back
+        # into it — they never touch real data
+        p = np.full((S,), NB, np.int32)
+        p[: idx.shape[0]] = idx
+        perms.append(jnp.asarray(p))
+    om = plan.omega if omega is None else omega
+    return ExecPlan(levels=tuple(plan.levels), sig=sig, block=block,
+                    total_blocks=NB, perms=tuple(perms),
+                    omega=jnp.asarray(om, jnp.float32))

@@ -8,15 +8,21 @@ byte budget and a compression-ratio envelope:
 
 (c is the compression aggressiveness: low bandwidth -> large c -> keep
 fewer bytes; the byte budget is (1 - c) x FullSync volume).  The budget plus the importance scores feed the knapsack
-(core/knapsack.py) to produce the static per-group level plan.  Plans are
-recomputed on the host every ``replan_every`` steps; the jitted train step
-takes the plan as a static argument, so plan changes trigger a (cached)
-re-jit — a bounded number of variants since levels form a small ladder.
+(core/knapsack.py) to produce the per-group level plan.  Plans are
+recomputed every ``replan_every`` steps, but since the plan-as-data
+refactor they are *data*, not static jit arguments: the trainer lowers a
+:class:`SyncPlan` to an :class:`~repro.core.planexec.ExecPlan` whose
+gather perms and omega are ordinary device arrays, and only the padded
+**bucket signature** (``SyncPlan.bucket_sig`` — per-rung block counts
+rounded to size classes) keys the compiled step.  Adaptive strategies get
+their plans built with padded classes so steady-state replans reuse the
+warm jit cache; static strategies get exact sizes (no padding on the
+wire).
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -24,6 +30,7 @@ import numpy as np
 from repro.codecs import plan_wire_bytes as _bucketed_plan_bytes
 from repro.configs.base import ACESyncConfig
 from repro.core import knapsack
+from repro.core import planexec
 from repro.core.compression import Level
 
 
@@ -54,14 +61,26 @@ def byte_budget(cfg: ACESyncConfig, bandwidth_mbps: float,
 
 @dataclass
 class SyncPlan:
-    """Static compression plan: one level index per parameter group."""
+    """Compression plan: one level index per parameter group.
+
+    ``bucket_sig`` is the padded per-rung block-count signature the
+    executed exchange will actually move (attached by the Scheduler);
+    pricing (``codecs.plan_wire_bytes``) uses it so Table 1 and the
+    dry-run byte assertions include the padding.  ``adaptive`` records
+    whether the plan was built with padded size classes (adaptive
+    strategies, replans hit a warm jit cache) or exact sizes (static
+    strategies, no padding on the wire)."""
     level_idx: Tuple[int, ...]            # per group
     levels: Tuple[Level, ...]
     omega: Tuple[float, ...]              # per-pod aggregation weights
     sync_interval: int                    # H
+    bucket_sig: Optional[Tuple[int, ...]] = None
+    bucket_block: Optional[int] = None    # block size bucket_sig counts in
+    adaptive: bool = False
 
     def signature(self) -> tuple:
-        """Hashable key for the jit cache."""
+        """Hashable key of the full assignment (legacy; the compiled step
+        is keyed on the much smaller ``bucket_sig`` instead)."""
         return (self.level_idx, tuple(self.levels), self.sync_interval)
 
     def level_of(self, gi: int) -> Level:
@@ -86,12 +105,29 @@ class Scheduler:
         self._full_bytes = sum(
             self.full_level.wire_bytes(n, self.acct_pods)
             for n in self.sizes)
+        self._device_solver = None
+
+    def _finalize(self, plan: SyncPlan, adaptive: bool) -> SyncPlan:
+        """Attach the bucket signature the executed exchange moves (padded
+        size classes for adaptive plans, exact sizes otherwise)."""
+        plan.adaptive = adaptive
+        plan.bucket_sig = planexec.bucket_signature(
+            plan.level_idx, self.sizes, len(plan.levels),
+            block=self.cfg.topk_block,
+            growth=self.pad_growth if adaptive else None)
+        plan.bucket_block = self.cfg.topk_block
+        return plan
+
+    @property
+    def pad_growth(self) -> float:
+        return getattr(self.cfg, "bucket_pad_growth", planexec.PAD_GROWTH)
 
     def full_plan(self, omega: Optional[Sequence[float]] = None) -> SyncPlan:
         """FullSync baseline plan."""
         fi = self.levels.index(self.full_level)
-        return SyncPlan(tuple([fi] * len(self.sizes)), tuple(self.levels),
-                        self._omega(omega), 1)
+        return self._finalize(
+            SyncPlan(tuple([fi] * len(self.sizes)), tuple(self.levels),
+                     self._omega(omega), 1), adaptive=False)
 
     def uniform_topk_plan(self, ratio: float = 0.1,
                           omega: Optional[Sequence[float]] = None) -> SyncPlan:
@@ -101,8 +137,9 @@ class Scheduler:
         idx = cand[0] if cand else min(
             (i for i, l in enumerate(self.levels) if l.is_topk),
             key=lambda i: abs(self.levels[i].keep_ratio - ratio))
-        return SyncPlan(tuple([idx] * len(self.sizes)), tuple(self.levels),
-                        self._omega(omega), 1)
+        return self._finalize(
+            SyncPlan(tuple([idx] * len(self.sizes)), tuple(self.levels),
+                     self._omega(omega), 1), adaptive=False)
 
     def plan(self, importance: Sequence[float], bandwidth_mbps: float,
              omega: Optional[Sequence[float]] = None) -> SyncPlan:
@@ -110,21 +147,40 @@ class Scheduler:
         budget = byte_budget(self.cfg, bandwidth_mbps, self._full_bytes)
         choice = knapsack.solve(list(importance), self.sizes, self.levels,
                                 budget, self.acct_pods)
-        return SyncPlan(tuple(choice), tuple(self.levels),
-                        self._omega(omega), self.sync_interval)
+        return self._finalize(
+            SyncPlan(tuple(choice), tuple(self.levels),
+                     self._omega(omega), self.sync_interval), adaptive=True)
 
     def plan_from_levels(self, level_idx: Sequence[int],
                          omega: Optional[Sequence[float]] = None,
-                         sync_interval: Optional[int] = None) -> SyncPlan:
+                         sync_interval: Optional[int] = None,
+                         adaptive: bool = False) -> SyncPlan:
         """Build a plan from explicit per-group level indices — the public
-        seam for strategies that pick levels without the knapsack."""
+        seam for strategies that pick levels without the knapsack, and for
+        the device-resident replan path (the fetched ``int32[G]`` vector
+        lands here).  ``adaptive=True`` pads the bucket signature to size
+        classes so successive replans share the compiled step."""
         if len(level_idx) != len(self.sizes):
             raise ValueError(f"expected {len(self.sizes)} level indices, "
                              f"got {len(level_idx)}")
-        return SyncPlan(tuple(int(i) for i in level_idx), tuple(self.levels),
-                        self._omega(omega),
-                        self.sync_interval if sync_interval is None
-                        else sync_interval)
+        return self._finalize(
+            SyncPlan(tuple(int(i) for i in level_idx), tuple(self.levels),
+                     self._omega(omega),
+                     self.sync_interval if sync_interval is None
+                     else sync_interval), adaptive=adaptive)
+
+    def device_solver(self):
+        """The jittable knapsack over this scheduler's (sizes, ladder):
+        ``fn(importance f32[G], budget_bytes) -> int32[G]`` (cached)."""
+        if self._device_solver is None:
+            self._device_solver = knapsack.make_device_solver(
+                self.sizes, self.levels, self.acct_pods,
+                block=self.cfg.topk_block)
+        return self._device_solver
+
+    def budget_for(self, bandwidth_mbps: float) -> float:
+        """Eq-(5) byte budget against this scheduler's full-sync volume."""
+        return byte_budget(self.cfg, bandwidth_mbps, self._full_bytes)
 
     def adapt_interval(self, divergence: float, div_ref: float) -> int:
         """Paper eq (9) control: grow H when divergence is small, shrink
@@ -144,13 +200,18 @@ class Scheduler:
         s = sum(omega)
         return tuple(w / s for w in omega)
 
-    def plan_wire_bytes(self, plan: SyncPlan, n_pods: int = None) -> int:
+    def plan_wire_bytes(self, plan: SyncPlan,
+                        n_pods: Optional[int] = None,
+                        padded: bool = True) -> int:
         """Bytes a sync round under ``plan`` actually moves per device:
-        bucketed codec pricing (same-level groups share one buffer/
-        collective in core/sync.py), the same accounting Table 1 and the
-        dry-run byte assertions use."""
-        return _bucketed_plan_bytes(plan, self.sizes,
-                                    n_pods or self.acct_pods)
+        bucketed codec pricing on the plan's executed bucket signature
+        (same-level groups share one buffer/collective in core/sync.py;
+        size-class padding included for adaptive plans), the same
+        accounting Table 1 and the dry-run byte assertions use.
+        ``padded=False`` prices the unpadded analytic floor."""
+        return _bucketed_plan_bytes(
+            plan, self.sizes, self.acct_pods if n_pods is None else n_pods,
+            self.cfg.topk_block, use_sig=padded)
 
     def fullsync_wire_bytes(self) -> int:
         return self._full_bytes

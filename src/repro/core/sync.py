@@ -11,14 +11,19 @@ only with its pod-peers over the (slow, DCN) "pod" axis:
     agg    = codec.pod_exchange(payloads, omega)     (eq 8, one collective)
     e'     = g_ef - decompress(own payload)
 
-Since the codec refactor the per-leaf Python loop is gone: ``sync_tree``
-BUCKETS same-level leaves into one flat buffer per codec, runs the codec's
-fused Pallas path (``repro/kernels``) on the concatenated buffer, and
-issues at most ONE pod collective per distinct codec in the plan — an
-H-step sync costs O(#levels) collectives instead of O(#groups).  Each
-codec packs its whole payload pytree (values + indices + scales) into a
-single uint8 wire buffer before the all_gather, so "one collective" holds
-regardless of how many components the wire format carries.
+Since the plan-as-data refactor the exchange is **retrace-free**: every
+leaf is laid out block-aligned in ONE static flat (NB, block) buffer, and
+per ladder rung a gather permutation (``repro.core.planexec.ExecPlan`` —
+ordinary device data) repacks the member leaves into one contiguous
+per-rung buffer.  Each rung runs its codec's fused EF + compress +
+exchange round on that buffer (at most ONE pod collective per rung with a
+non-empty bucket), and the aggregate/residual are scattered back through
+the same permutation.  Only the tuple of padded per-rung block counts —
+the bucket-shape signature — is static, so a replan that keeps the
+signature swaps permutations without recompiling
+(tests/test_replan.py pins this; tests/test_collectives.py keeps pinning
+the ≤-one-collective-per-rung and analytic==traced byte contracts, now
+with the per-leaf block padding priced explicitly).
 
 Wire formats are pluggable :class:`repro.codecs.base.Codec` objects (FULL
 bf16-psum, dense INT8 / packed INT4, block top-k, 1-bit sign with majority
@@ -32,7 +37,7 @@ from __future__ import annotations
 import functools
 import math
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +46,7 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.codecs import POD_AXIS, plan_wire_bytes
 from repro.core import compression as C
+from repro.core.planexec import ExecPlan, build_exec_plan, n_blocks
 from repro.core.scheduler import SyncPlan
 from repro.kernels import ops
 from repro.models.shardctx import norm_spec
@@ -96,7 +102,7 @@ def group_sizes(param_specs) -> List[int]:
 
 
 # ---------------------------------------------------------------------------
-# bucketed local compress + pod exchange (one flat buffer per codec)
+# local layout: where each leaf lands in the static flat block buffer
 # ---------------------------------------------------------------------------
 
 
@@ -106,31 +112,106 @@ def _pod_info(mesh) -> int:
     return mesh.shape[POD_AXIS]
 
 
-def _bucket_sync_local(gs, es, omega, omega_own, *, codec, gamma, n_pods,
-                       block, use_pallas):
-    """Fully local per-device sync of one same-codec bucket.
+def _uses_nested(mesh, inside_manual: bool) -> bool:
+    """Whether sync_tree will wrap the exchange in a nested data/model
+    shard_map (leaves become local shards there)."""
+    return mesh is not None and (compat.PARTIAL_MANUAL or not inside_manual)
 
-    ``gs`` / ``es``: tuples of local shard arrays that the plan assigned
-    the same level.  They are flattened into ONE concatenated f32 buffer,
-    pushed through the codec's fused EF + compress + exchange round (at
-    most one pod collective), and split back — block boundaries may span
-    leaves, which is fine for blockwise formats because the residual split
-    ``own + new_e == ef`` holds elementwise.
+
+def _local_shape(shape, spec, mesh) -> Tuple[int, ...]:
+    """Per-device shard shape of a leaf under the nested data/model-manual
+    region (the pod axis is manual outside and does not divide here)."""
+    spec = norm_spec(spec if spec is not None else P(), mesh)
+    out = list(shape)
+    for d, ax in enumerate(spec):
+        if ax is None or d >= len(out):
+            continue
+        for a in ((ax,) if isinstance(ax, str) else tuple(ax)):
+            if a != POD_AXIS:
+                out[d] //= mesh.shape[a]
+    return tuple(out)
+
+
+def local_group_sizes(param_specs, shardings, mesh,
+                      inside_manual: Optional[bool] = None) -> List[int]:
+    """Per-group element counts of the layout the exchange actually runs
+    on: the local shard sizes when a nested data/model shard_map applies,
+    the global sizes otherwise.  This is what ``planexec.build_exec_plan``
+    must be fed so host-built gather perms match the traced layout."""
+    leaves, treedef = jax.tree_util.tree_flatten(param_specs)
+    s_leaves = treedef.flatten_up_to(shardings) if shardings is not None \
+        else [None] * len(leaves)
+    if inside_manual is None:
+        inside_manual = mesh is not None and POD_AXIS in mesh.axis_names
+    if not _uses_nested(mesh, inside_manual):
+        return [int(math.prod(l.shape)) for l in leaves]
+    return [int(math.prod(_local_shape(l.shape, s, mesh)))
+            for l, s in zip(leaves, s_leaves)]
+
+
+# ---------------------------------------------------------------------------
+# static-shape repack + per-rung exchange (the retrace-free hot path)
+# ---------------------------------------------------------------------------
+
+
+def _leaf_blocks(leaves, block: int) -> jax.Array:
+    """Concatenate leaves into the static (NB, block) layout: each leaf
+    flattened, zero-padded to a block multiple, block-aligned.  The layout
+    depends only on (leaf shapes, block) — never on the plan."""
+    parts = [C.pad_to_blocks(l.reshape(-1).astype(jnp.float32), block)
+             for l in leaves]
+    if not parts:
+        return jnp.zeros((0, block), jnp.float32)
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+
+def _repack_sync_local(gs, es, perms, omega, omega_own, *, ep: ExecPlan,
+                       gamma, n_pods, use_pallas):
+    """Fully local per-device sync of the whole tree through the plan's
+    gather/scatter repacking.
+
+    ``gs`` / ``es``: tuples of local shard arrays (grads and EF residuals)
+    in leaf order.  They are packed into the static block layout, each
+    rung's bucket is gathered through its permutation (device data — the
+    only thing a replan changes), pushed through the codec's fused EF +
+    compress + exchange round (at most one pod collective per rung), and
+    scattered back.  Pad blocks gather the zero row at index NB and
+    scatter into it, so they never touch real data.
     """
-    sizes = [math.prod(g.shape) for g in gs]
-    flats = [g.reshape(-1).astype(jnp.float32) for g in gs]
-    e_flats = [e.reshape(-1).astype(jnp.float32) for e in es]
-    flat = flats[0] if len(flats) == 1 else jnp.concatenate(flats)
-    e_flat = e_flats[0] if len(e_flats) == 1 else jnp.concatenate(e_flats)
-    agg, new_e = codec.ef_sync(flat, e_flat, omega, omega_own, gamma=gamma,
-                               n_pods=n_pods, block=block, axis=POD_AXIS,
-                               use_pallas=use_pallas)
-    aggs, news, off = [], [], 0
-    for g, e, n in zip(gs, es, sizes):
-        aggs.append(agg[off:off + n].reshape(g.shape).astype(g.dtype))
-        news.append(new_e[off:off + n].reshape(e.shape).astype(e.dtype))
-        off += n
-    return tuple(aggs), tuple(news)
+    block = ep.block
+    fb = _leaf_blocks(gs, block)
+    eb = _leaf_blocks(es, block)
+    NB = ep.total_blocks
+    assert fb.shape[0] == NB, \
+        f"leaf layout has {fb.shape[0]} blocks, plan was built for {NB}"
+    zrow = jnp.zeros((1, block), jnp.float32)
+    fb = jnp.concatenate([fb, zrow])
+    eb = jnp.concatenate([eb, zrow])
+    agg = jnp.zeros((NB + 1, block), jnp.float32)
+    err = jnp.zeros((NB + 1, block), jnp.float32)
+    pi = 0
+    for r, S in enumerate(ep.sig):
+        if not S:
+            continue
+        perm = perms[pi]
+        pi += 1
+        codec = ep.levels[r].codec
+        b_agg, b_err = codec.ef_sync(
+            fb[perm].reshape(-1), eb[perm].reshape(-1), omega, omega_own,
+            gamma=gamma, n_pods=n_pods, block=block, axis=POD_AXIS,
+            use_pallas=use_pallas)
+        agg = agg.at[perm].set(b_agg.reshape(S, block))
+        err = err.at[perm].set(b_err.reshape(S, block))
+    agg = agg[:NB].reshape(-1)
+    err = err[:NB].reshape(-1)
+    outs, errs, boff = [], [], 0
+    for g, e in zip(gs, es):
+        n = math.prod(g.shape)
+        o = boff * block
+        outs.append(agg[o:o + n].reshape(g.shape).astype(g.dtype))
+        errs.append(err[o:o + n].reshape(e.shape).astype(e.dtype))
+        boff += n_blocks(n, block)
+    return tuple(outs), tuple(errs)
 
 
 # ---------------------------------------------------------------------------
@@ -142,8 +223,8 @@ def _auto_axes(mesh):
     return tuple(a for a in mesh.axis_names if a != POD_AXIS)
 
 
-def sync_tree(tree, errors, plan: SyncPlan, *, mesh, shardings,
-              gamma: float, block: int = C.BLOCK,
+def sync_tree(tree, errors, plan: Union[SyncPlan, ExecPlan], *, mesh,
+              shardings, gamma: float, block: int = C.BLOCK,
               inside_manual: bool = None, use_pallas: bool = None):
     """Compress + hierarchically aggregate a gradient (or delta) pytree.
 
@@ -151,9 +232,13 @@ def sync_tree(tree, errors, plan: SyncPlan, *, mesh, shardings,
     pod axis.  ``shardings``: pytree of PartitionSpec matching ``tree`` (the
     data/model sharding of each leaf).  Returns (agg_tree, new_errors).
 
-    Same-level leaves are bucketed into one flat buffer per codec, so the
-    whole tree costs at most one pod collective per DISTINCT level in the
-    plan (tests/test_collectives.py counts them in the lowered HLO).
+    ``plan`` may be an :class:`~repro.core.planexec.ExecPlan` — the
+    retrace-free form whose gather perms and omega are traced device data
+    (the trainer's hot path) — or a host :class:`SyncPlan`, which is
+    lowered at trace time with exact (unpadded) bucket sizes, perms baked
+    as constants.  Both run the same static-shape exchange: at most one
+    pod collective per rung with a non-empty bucket
+    (tests/test_collectives.py counts them in the lowered HLO).
 
     ``inside_manual``: whether we are already inside a shard_map (then the
     nested shard_map must infer the context mesh); default: pod axis
@@ -168,8 +253,27 @@ def sync_tree(tree, errors, plan: SyncPlan, *, mesh, shardings,
     if use_pallas is None:
         use_pallas = ops.default_use_pallas()
     n_pods = _pod_info(mesh)
-    omega = jnp.asarray(plan.omega, jnp.float32)
-    if n_pods == 1 and len(plan.omega) == 1:
+
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    e_leaves = treedef.flatten_up_to(errors)
+    s_leaves = treedef.flatten_up_to(shardings) if shardings is not None \
+        else [None] * len(leaves)
+    nested = _uses_nested(mesh, inside_manual)
+
+    if isinstance(plan, SyncPlan):
+        assert len(leaves) == len(plan.level_idx), \
+            (len(leaves), len(plan.level_idx))
+        if nested:
+            lsz = [math.prod(_local_shape(l.shape, s, mesh))
+                   for l, s in zip(leaves, s_leaves)]
+        else:
+            lsz = [math.prod(l.shape) for l in leaves]
+        ep = build_exec_plan(plan, lsz, block=block, growth=None)
+    else:
+        ep = plan
+
+    omega = ep.omega
+    if n_pods == 1 and omega.shape[0] == 1:
         omega = jnp.ones((1,), jnp.float32)  # single pod: identity weight
     # own pod's aggregation weight, computed at the per-pod level (axis_index
     # may not re-bind "pod" inside the nested fully-manual shard_map)
@@ -178,74 +282,67 @@ def sync_tree(tree, errors, plan: SyncPlan, *, mesh, shardings,
     else:
         omega_own = omega[0]
 
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    e_leaves = treedef.flatten_up_to(errors)
-    s_leaves = treedef.flatten_up_to(shardings) if shardings is not None \
-        else [None] * len(leaves)
-    assert len(leaves) == len(plan.level_idx), \
-        (len(leaves), len(plan.level_idx))
-
-    # bucket leaf indices by level: one fused buffer + one collective each
-    buckets: Dict[int, List[int]] = {}
-    for i, li in enumerate(plan.level_idx):
-        buckets.setdefault(li, []).append(i)
-
-    agg_out = [None] * len(leaves)
-    err_out = [None] * len(leaves)
-    for li in sorted(buckets):
-        idxs = buckets[li]
-        codec = plan.levels[li].codec
-        gs = tuple(leaves[i] for i in idxs)
-        es = tuple(e_leaves[i] for i in idxs)
-        fn = functools.partial(_bucket_sync_local, codec=codec, gamma=gamma,
-                               n_pods=n_pods, block=block,
-                               use_pallas=use_pallas)
-        if mesh is not None and (compat.PARTIAL_MANUAL or not inside_manual):
-            aspecs = []
-            for i in idxs:
-                spec = s_leaves[i]
-                aspec = norm_spec(spec if spec is not None else P(), mesh)
-                # drop the pod axis from specs (manual outside already)
-                aspecs.append(P(*[None if ax == POD_AXIS else ax
-                                  for ax in aspec]))
-            aspecs = tuple(aspecs)
-            inner = compat.shard_map(
-                fn, mesh, in_specs=(aspecs, aspecs, P(None), P()),
-                out_specs=(aspecs, aspecs),
-                manual_axes=set(_auto_axes(mesh)),
-                # surrounding per-pod shard_map (if any) provides the mesh
-                infer_mesh=inside_manual)
-            aggs, news = inner(gs, es, omega, omega_own)
-        else:
-            # no mesh, or old-jax fully-manual region (leaves replicated
-            # over data/model there): device-local math, pod collectives
-            # still bound by the enclosing manual region
-            aggs, news = fn(gs, es, omega, omega_own)
-        for j, i in enumerate(idxs):
-            agg_out[i] = aggs[j]
-            err_out[i] = news[j]
-    return (jax.tree_util.tree_unflatten(treedef, agg_out),
-            jax.tree_util.tree_unflatten(treedef, err_out))
+    fn = functools.partial(_repack_sync_local, ep=ep, gamma=gamma,
+                           n_pods=n_pods, use_pallas=use_pallas)
+    gs, es = tuple(leaves), tuple(e_leaves)
+    if nested:
+        aspecs = []
+        for s in s_leaves:
+            aspec = norm_spec(s if s is not None else P(), mesh)
+            # drop the pod axis from specs (manual outside already)
+            aspecs.append(P(*[None if ax == POD_AXIS else ax
+                              for ax in aspec]))
+        aspecs = tuple(aspecs)
+        pspecs = tuple(P(None) for _ in ep.perms)
+        inner = compat.shard_map(
+            fn, mesh,
+            in_specs=(aspecs, aspecs, pspecs, P(None), P()),
+            out_specs=(aspecs, aspecs),
+            manual_axes=set(_auto_axes(mesh)),
+            # surrounding per-pod shard_map (if any) provides the mesh
+            infer_mesh=inside_manual)
+        aggs, news = inner(gs, es, ep.perms, omega, omega_own)
+    else:
+        # no mesh, or old-jax fully-manual region (leaves replicated
+        # over data/model there): device-local math, pod collectives
+        # still bound by the enclosing manual region
+        aggs, news = fn(gs, es, ep.perms, omega, omega_own)
+    return (jax.tree_util.tree_unflatten(treedef, list(aggs)),
+            jax.tree_util.tree_unflatten(treedef, list(news)))
 
 
 def grad_group_stats(tree):
     """Per-group scalars feeding the importance estimator: (mean|g|, var,
-    norm) each (G,)."""
+    norm) each (G,).
+
+    One fused pass per leaf: the three reductions (sum|g|, sum g^2, sum g)
+    share a single read of the leaf and XLA fuses them into one HBM
+    traversal; the derived statistics come from the stacked (G, 3) table
+    in one vectorised epilogue.  This runs every grad step — the old
+    per-leaf mean/var/norm chain launched three independent reductions per
+    leaf."""
     leaves = jax.tree_util.tree_leaves(tree)
-    ma, var, nrm = [], [], []
+    rows, ns = [], []
     for g in leaves:
-        g32 = g.astype(jnp.float32)
-        m = jnp.mean(jnp.abs(g32))
-        v = jnp.var(g32)
-        n = jnp.sqrt(jnp.sum(g32 * g32))
-        ma.append(m); var.append(v); nrm.append(n)
-    return (jnp.stack(ma), jnp.stack(var), jnp.stack(nrm))
+        g32 = g.astype(jnp.float32).reshape(-1)
+        rows.append(jnp.stack([jnp.sum(jnp.abs(g32)),
+                               jnp.sum(g32 * g32),
+                               jnp.sum(g32)]))
+        ns.append(max(g32.shape[0], 1))
+    table = jnp.stack(rows)                       # (G, 3), stacked once
+    n = jnp.asarray(ns, jnp.float32)
+    mean_abs = table[:, 0] / n
+    mean = table[:, 2] / n
+    var = jnp.maximum(table[:, 1] / n - mean * mean, 0.0)
+    nrm = jnp.sqrt(table[:, 1])
+    return mean_abs, var, nrm
 
 
 def wire_bytes_of_plan(plan: SyncPlan, sizes: Sequence[int],
                        n_pods: int, block: int = C.BLOCK) -> int:
     """Analytic on-the-wire bytes per device per sync for a plan, priced
-    exactly the way :func:`sync_tree` transmits it (same-level leaves share
-    one bucketed buffer and one collective) — the number Table 1 reports
-    and tests/test_collectives.py pins to the traced HLO."""
+    exactly the way :func:`sync_tree` transmits it (block-aligned leaves
+    repacked into one per-rung buffer and one collective, per-leaf block
+    padding included) — the number Table 1 reports and
+    tests/test_collectives.py pins to the traced HLO."""
     return plan_wire_bytes(plan, sizes, n_pods, block)

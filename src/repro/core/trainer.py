@@ -19,6 +19,15 @@ machinery.  The trainer only executes step kinds; every strategy decision
 (anchor state, plan construction, scheduling, H control) lives on the
 strategy object resolved from the registry.
 
+Plan-as-data: the compiled step takes the plan as an
+:class:`~repro.core.planexec.ExecPlan` pytree argument — gather perms and
+omega are device data, only the padded bucket signature is static — so it
+is compiled once per (model, ladder, signature, kind) and steady-state
+replans swap plan vectors through the warm jit cache with **zero**
+retraces (tests/test_replan.py pins this).  Train state is donated
+through every step (``donate_argnums``), so params / optimizer moments /
+error-feedback buffers update in place instead of being copied each step.
+
 State layout: every leaf carries a leading pod-replica dim (n_pods, ...)
 sharded P("pod", ...), which is what lets pods hold *divergent* values
 between syncs while remaining one SPMD program.
@@ -37,6 +46,7 @@ from repro.configs.base import RunConfig
 from repro.core import acesync
 from repro.core import sync as S
 from repro.core import divergence as D
+from repro.core.planexec import ExecPlan, build_exec_plan
 from repro.core.scheduler import Scheduler, SyncPlan
 from repro.models.shardctx import use_shard_ctx, norm_spec, sharding_for
 from repro.optim import adamw
@@ -58,6 +68,10 @@ def _pod_prefix(spec: P, rank: int) -> P:
 
 
 class Trainer:
+    #: max distinct assignments whose ExecPlan (device perm arrays) stays
+    #: resident; beyond this the oldest is evicted and rebuilt on demand.
+    _EXEC_CACHE_MAX = 8
+
     def __init__(self, model, run: RunConfig, mesh: Optional[Mesh] = None,
                  strategy: Union[str, SyncStrategy] = "acesync"):
         self.model = model
@@ -72,7 +86,12 @@ class Trainer:
         self.scheduler = Scheduler(run.acesync,
                                    [m.size for m in self.metas],
                                    self.n_pods)
-        self._step_cache: Dict = {}
+        # per-group element counts of the layout the exchange runs on
+        # (local shard sizes under the nested data/model-manual region)
+        self.local_sizes = S.local_group_sizes(
+            self.param_specs, self.param_shardings, mesh)
+        self._step_cache: Dict = {}    # (levels, sig, block, kind) -> jit fn
+        self._exec_cache: Dict = {}    # (levels, level_idx, adaptive) -> EP
 
     # ------------------------------------------------------------------
     # state
@@ -172,7 +191,7 @@ class Trainer:
             beta1=run.beta1, beta2=run.beta2, weight_decay=run.weight_decay)
         return new_params, opt
 
-    def _body_grad_sync(self, plan: SyncPlan, state, batch):
+    def _body_grad_sync(self, state, batch, plan: ExecPlan):
         st = self._split_pod(state)
         loss, grads, gnorm = self._grad_step(st["params"], batch)
         agg, new_ace, metrics = acesync.sync_gradients(
@@ -186,7 +205,7 @@ class Trainer:
                        grad_norm=self._pmean(gnorm))
         return self._join_pod(new_st), metrics
 
-    def _body_local(self, plan: SyncPlan, state, batch):
+    def _body_local(self, state, batch, plan: ExecPlan):
         st = self._split_pod(state)
         loss, grads, gnorm = self._grad_step(st["params"], batch)
         new_params, opt = self._optimize(st["params"], grads, st["m"],
@@ -197,7 +216,7 @@ class Trainer:
                    "grad_norm": self._pmean(gnorm)}
         return self._join_pod(new_st), metrics
 
-    def _body_delta_sync(self, plan: SyncPlan, state, batch):
+    def _body_delta_sync(self, state, batch, plan: ExecPlan):
         """Compress/aggregate (theta - anchor); theta <- anchor + agg."""
         st = self._split_pod(state)
         delta = jax.tree.map(lambda p, a: (p - a).astype(p.dtype),
@@ -216,10 +235,10 @@ class Trainer:
         metrics = dict(metrics, divergence=self._pmean(div))
         return self._join_pod(new_st), metrics
 
-    def _body_param_avg(self, plan: SyncPlan, state, batch):
+    def _body_param_avg(self, state, batch, plan: ExecPlan):
         """FedAvg baseline: omega-weighted plain parameter average."""
         st = self._split_pod(state)
-        omega = jnp.asarray(plan.omega, jnp.float32)
+        omega = plan.omega
         div = D.pod_divergence(st["params"], self.mesh)
 
         def avg(p):
@@ -239,43 +258,118 @@ class Trainer:
                "delta_sync": _body_delta_sync, "param_avg": _body_param_avg}
 
     # ------------------------------------------------------------------
-    # compiled step factory
+    # plan-as-data compiled step factory
     # ------------------------------------------------------------------
-    def step_fn(self, plan: SyncPlan, kind: str = "grad_sync") -> Callable:
-        key = (plan.signature(), tuple(plan.omega), kind)
-        if key in self._step_cache:
-            return self._step_cache[key]
-        body = functools.partial(self._BODIES[kind], self, plan)
+    def exec_plan(self, plan: Union[SyncPlan, ExecPlan]) -> ExecPlan:
+        """Lower a host SyncPlan to its executable plan-vector form.
+
+        Cached per distinct assignment (the gather perms are a cheap
+        numpy build + one tiny upload); omega is refreshed on every call —
+        it is device data and never keys the cache.  Adaptive plans use
+        the padded size-class ladder so successive replans keep the same
+        bucket signature and therefore the same compiled step.
+        """
+        if isinstance(plan, ExecPlan):
+            return plan
+        key = (plan.levels, plan.level_idx, plan.adaptive)
+        ep = self._exec_cache.get(key)
+        if ep is None:
+            growth = self.scheduler.pad_growth if plan.adaptive else None
+            ep = build_exec_plan(plan, self.local_sizes,
+                                 block=self.run.acesync.topk_block,
+                                 growth=growth)
+            # bounded: adaptive runs see a fresh assignment nearly every
+            # replan, and each entry holds O(total_blocks) device perms —
+            # evict oldest-first, rebuilding is a cheap numpy pass
+            while len(self._exec_cache) >= self._EXEC_CACHE_MAX:
+                self._exec_cache.pop(next(iter(self._exec_cache)))
+            self._exec_cache[key] = ep
+        return ep.with_omega(plan.omega)
+
+    def jit_step(self, plan: Union[SyncPlan, ExecPlan],
+                 kind: str = "grad_sync") -> Callable:
+        """The compiled step for the plan's bucket signature: a jitted
+        ``fn(state, batch, exec_plan) -> (state, metrics)`` with the train
+        state donated.  One cache entry per (ladder, signature, kind) —
+        replans that keep the signature reuse it with zero retraces."""
+        ep = self.exec_plan(plan)
+        key = (ep.static_key(), kind)
+        fn = self._step_cache.get(key)
+        if fn is not None:
+            return fn
+        body = functools.partial(self._BODIES[kind], self)
         mesh = self.mesh
 
         if mesh is None:
-            fn = jax.jit(body)
+            fn = jax.jit(body, donate_argnums=(0,))
         elif POD not in mesh.axis_names:
             # single-pod mesh: no pod axis to shard_map over; the body's
             # nested data/model shard_maps still apply.
-            def wrapped_sp(state, batch):
+            def wrapped_sp(state, batch, plan_vec):
                 with use_shard_ctx(mesh):
-                    return body(state, batch)
+                    return body(state, batch, plan_vec)
             fn = jax.jit(wrapped_sp, donate_argnums=(0,))
         else:
             state_specs = self.state_specs()
             state_in = jax.tree.map(lambda l: P(POD), state_specs)
+            # plan vectors (gather perms + omega) ride replicated into the
+            # per-pod manual region
+            plan_in = jax.tree.map(lambda _: P(), ep)
             # modern jax: manual over "pod" only, data/model auto under XLA
             # SPMD; old jax: fully manual, data/model-replicated compute
             manual = compat.manual_axes_for(mesh, {POD})
 
-            def wrapped(state, batch):
+            def wrapped(state, batch, plan_vec):
                 with use_shard_ctx(mesh, exclude=tuple(manual)):
-                    return body(state, batch)
+                    return body(state, batch, plan_vec)
 
             smapped = compat.shard_map(
                 wrapped, mesh,
-                in_specs=(state_in, P(POD)),
+                in_specs=(state_in, P(POD), plan_in),
                 out_specs=(state_in, P()),
                 manual_axes=manual)
             fn = jax.jit(smapped, donate_argnums=(0,))
         self._step_cache[key] = fn
         return fn
+
+    def step(self, state, batch, plan: Union[SyncPlan, ExecPlan],
+             kind: str = "grad_sync"):
+        """Execute one step kind under ``plan``.  The plan rides as data;
+        the compiled step is resolved from the signature-keyed cache."""
+        ep = self.exec_plan(plan)
+        return self.jit_step(ep, kind)(state, batch, ep)
+
+    def step_fn(self, plan: Union[SyncPlan, ExecPlan],
+                kind: str = "grad_sync") -> Callable:
+        """A ``fn(state, batch)`` closure over the plan's vectors — the
+        legacy call shape (tests/benchmarks).  NOTE: the train state is
+        donated; callers must rebind ``state`` on every call."""
+        ep = self.exec_plan(plan)
+        fn = self.jit_step(ep, kind)
+        return lambda state, batch: fn(state, batch, ep)
+
+    def plan_arg_specs(self, plan: Union[SyncPlan, ExecPlan]):
+        """ShapeDtypeStruct pytree of the plan argument (dry-run lowering);
+        plan vectors are replicated on the mesh when one is present."""
+        ep = self.exec_plan(plan)
+
+        def spec(a):
+            sh = (NamedSharding(self.mesh, P())
+                  if self.mesh is not None else None)
+            return jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=sh)
+
+        return jax.tree.map(spec, ep)
+
+    def compile_count(self) -> int:
+        """Total traced-and-compiled variants across the step cache — the
+        number tests/test_replan.py pins flat across replans."""
+        total = 0
+        for fn in self._step_cache.values():
+            try:
+                total += fn._cache_size()
+            except Exception:   # pragma: no cover - very old jax
+                total += 1
+        return total
 
     # convenience plans per strategy ------------------------------------
     def default_plan(self, importance=None, bandwidth_mbps: float = 50.0,

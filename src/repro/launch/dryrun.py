@@ -44,13 +44,16 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     if shape.kind == "train":
         trainer = Trainer(model, run, mesh=mesh, strategy=strategy)
         plan = trainer.default_plan(bandwidth_mbps=50.0)
-        fn = trainer.step_fn(plan, trainer.strategy.representative_kind)
+        # plan-as-data: lower the signature-keyed step with the plan
+        # vectors (gather perms + omega) as replicated array arguments
+        fn = trainer.jit_step(plan, trainer.strategy.representative_kind)
         state = _with_sharding(trainer.state_specs(),
                                trainer.state_shardings(), mesh)
         batch = _with_sharding(model.input_specs(shape),
                                trainer.batch_shardings(shape), mesh)
-        lowered = fn.lower(state, batch)
+        lowered = fn.lower(state, batch, trainer.plan_arg_specs(plan))
         extra = {"plan": [plan.levels[i].name for i in plan.level_idx],
+                 "bucket_sig": list(plan.bucket_sig or ()),
                  "strategy": trainer.strategy_name}
     else:
         # serving: bf16 params, no pod-replica dim

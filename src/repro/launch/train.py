@@ -7,6 +7,21 @@ Wires together every subsystem:
   H local steps per pod + 1 ACE-Sync round, checkpoints, heartbeats,
   straggler detection, elastic restart on simulated pod failure.
 
+The loop is **non-blocking**: since the plan-as-data refactor the host
+never stalls the device to replan.
+
+  * The step counter is mirrored on the host (one device fetch at loop
+    start) instead of a blocking ``device_get`` per iteration.
+  * Replanning for device-capable strategies (ACE-Sync) launches ONE
+    device computation (importance scoring + vectorized knapsack, see
+    ``core/acesync.device_replan_fn``) and fetches only the tiny
+    ``int32[G]`` assignment vector asynchronously; the loop keeps stepping
+    on the old plan and swaps once the fetch lands (the replan-to-apply
+    latency is recorded in ``replan_latencies``).
+  * Per-step metrics and the divergence EMA are fetched LAGGED — the
+    record for step t is materialised while step t+1 is already running
+    on device, so the host read overlaps device compute.
+
 Runs on any mesh (including none) with any registered arch; reduced configs
 train end-to-end on CPU (see examples/train_lm.py).
 """
@@ -31,8 +46,27 @@ from repro.data.telemetry import make_profiles, snapshot, bandwidth_at
 from repro.models.registry import build_model
 from repro.runtime.fault_tolerance import (HeartbeatMonitor,
                                            StragglerDetector)
-from repro.strategies import SYNC_KINDS, SyncStrategy, list_strategies, \
-    resolve_strategy
+from repro.strategies import STEP_ADVANCING, SYNC_KINDS, SyncStrategy, \
+    list_strategies, mean_bandwidth, resolve_strategy
+
+
+def _device_ready(x) -> bool:
+    """True when an async host fetch of ``x`` would not block."""
+    ready = getattr(x, "is_ready", None)
+    if ready is None:
+        return True  # old jax: accept a (cheap, already-lagged) sync get
+    try:
+        return bool(ready())
+    except Exception:  # pragma: no cover - defensive
+        return True
+
+
+def _to_host_async(x):
+    try:
+        x.copy_to_host_async()
+    except Exception:  # pragma: no cover - old jax / committed host array
+        pass
+    return x
 
 
 class TrainLoop:
@@ -54,6 +88,10 @@ class TrainLoop:
         self.comm_bytes = 0.0
         self._plan = None
         self._steps_since_sync = 0
+        self._host_step = None          # host mirror of the device counter
+        self._pending_replan = None     # (assign_dev, omega, launched_step)
+        self._div_fetch = None          # lagged divergence EMA fetch
+        self.replan_latencies = []      # steps from replan launch to apply
 
     @property
     def plan(self):
@@ -62,7 +100,8 @@ class TrainLoop:
         return self._plan
 
     # ---- policy refresh (host side, every replan_every steps) ----------
-    def refresh_plan(self, state, step: int):
+    def _policy_inputs(self, step: int):
+        """Telemetry snapshot -> (telemetry, pod omega weights)."""
         cfg = self.run.acesync
         telem = snapshot(self.profiles, step)
         assign = cluster_devices(telem, cfg.n_clusters)
@@ -76,10 +115,31 @@ class TrainLoop:
         for i, w in enumerate(omega_dev):
             omega[i % n_pods] += w
         tot = sum(omega)
-        omega = tuple(w / tot for w in omega)
+        return telem, tuple(w / tot for w in omega)
 
+    def refresh_plan(self, state, step: int):
+        cfg = self.run.acesync
+        telem, omega = self._policy_inputs(step)
+
+        dev_fn = (self.strategy.device_plan_fn(self.trainer.scheduler, cfg)
+                  if state is not None else None)
+        if dev_fn is not None and self._plan is not None:
+            # Non-blocking device replan: one jitted computation produces
+            # the new plan vector; only the tiny int32[G] assignment is
+            # pulled to the host, asynchronously.  The loop keeps stepping
+            # on the current plan until the fetch lands (poll_replan).
+            # Only the estimator's scalar state enters the computation —
+            # never the param-sized error buffers riding in ACEState.
+            budget = self.trainer.scheduler.budget_for(mean_bandwidth(telem))
+            ace = state["ace"]
+            imp0 = jax.tree.map(lambda x: x[0], ace.importance)
+            assign = _to_host_async(
+                dev_fn(imp0, ace.struct_feat[0], budget))
+            self._pending_replan = (assign, omega, self._host_step or step)
+            return self._plan
+        # host path: the first plan, and strategies without a device solver
         imp = None
-        if self.strategy.uses_importance:
+        if self.strategy.uses_importance and state is not None:
             imp = np.asarray(jax.device_get(acesync.current_scores(
                 jax.tree.map(lambda x: x[0], state["ace"]),
                 cfg))).tolist()
@@ -88,23 +148,63 @@ class TrainLoop:
             omega=omega)
         return self._plan
 
+    def poll_replan(self, block: bool = False) -> bool:
+        """Apply a pending device replan if its async fetch has landed.
+        Returns True when the plan was swapped."""
+        if self._pending_replan is None:
+            return False
+        assign, omega, launched = self._pending_replan
+        if not block and not _device_ready(assign):
+            return False
+        idx = np.asarray(jax.device_get(assign)).tolist()
+        self._pending_replan = None
+        self._plan = self.trainer.scheduler.plan_from_levels(
+            idx, omega, adaptive=True)
+        if self._host_step is not None:
+            self.replan_latencies.append(self._host_step - launched)
+        return True
+
     def adapt_interval(self, state):
-        """Sync-interval control (eq 9); a fixed H for static strategies."""
-        ace = jax.tree.map(lambda x: x[0], state["ace"])
-        div = float(jax.device_get(ace.div_ema))
-        return self.strategy.adapt(self.trainer.scheduler, div)
+        """Sync-interval control (eq 9); a fixed H for static strategies.
+        The divergence EMA is fetched lagged (the previous replan's launch
+        satisfies this one) so the controller never blocks on the step in
+        flight."""
+        div_now = state["ace"].div_ema[0]
+        prev = self._div_fetch
+        self._div_fetch = _to_host_async(div_now)
+        if prev is None:
+            # no lagged sample yet: leave H untouched rather than feeding
+            # the controller a fabricated zero divergence
+            return (self.trainer.scheduler.sync_interval
+                    if self.strategy.adapts_interval
+                    else self.strategy.initial_interval(self.run.acesync))
+        return self.strategy.adapt(self.trainer.scheduler,
+                                   float(jax.device_get(prev)))
 
     # ---- main loop ------------------------------------------------------
+    def _flush_metrics(self, inflight, log_every):
+        metrics, rec, idx = inflight
+        rec.update({k: float(jax.device_get(v)) for k, v in metrics.items()})
+        self.history.append(rec)
+        if log_every and idx % log_every == 0:
+            print(f"step {rec['step']:5d} "
+                  f"loss={rec.get('loss', float('nan')):.4f} "
+                  f"H={rec['H']} dt={rec['dt']:.2f}s", flush=True)
+
     def run_steps(self, state, pipeline, n_steps: int,
                   log_every: int = 10):
         run = self.run
         cfg = run.acesync
         H = self.strategy.initial_interval(cfg)
+        # one synchronous fetch to seed the host step mirror
+        self._host_step = int(jax.device_get(
+            jax.tree.leaves(state["step"])[0].reshape(-1)[0]))
         if self._plan is None:
-            self.refresh_plan(state, 0)
+            self.refresh_plan(state, self._host_step)
+        inflight = None
         for i in range(n_steps):
-            step = int(jax.device_get(jax.tree.leaves(state["step"])[0]
-                                      .reshape(-1)[0]))
+            step = self._host_step
+            self.poll_replan()
             if step and step % cfg.replan_every == 0:
                 self.refresh_plan(state, step)
                 H = self.adapt_interval(state)
@@ -113,28 +213,32 @@ class TrainLoop:
             kinds = self.strategy.step_schedule(self._steps_since_sync, H)
             metrics = {}
             for kind in kinds:
-                fn = self.trainer.step_fn(self._plan, kind)
-                state, m = fn(state, batch)
+                state, m = self.trainer.step(state, batch, self._plan, kind)
                 metrics.update(m)
                 self.comm_bytes += self.strategy.wire_bytes(
                     self.trainer.scheduler, self._plan, kind)
+                if kind in STEP_ADVANCING:
+                    self._host_step += 1
             if SYNC_KINDS & set(kinds):
                 self._steps_since_sync = 0
             else:
                 self._steps_since_sync += 1
+            # lagged metrics: materialise step t's record while step t+1
+            # is already dispatched — the host never waits on the step in
+            # flight
+            jax.tree.map(_to_host_async, metrics)
+            if inflight is not None:
+                self._flush_metrics(inflight, log_every)
             dt = time.time() - t0
             for pod in range(self.trainer.n_pods):
                 self.monitor.beat(pod, dt)
-            rec = {k: float(jax.device_get(v)) for k, v in metrics.items()}
-            rec.update(step=step, dt=dt, H=H)
-            self.history.append(rec)
-            if log_every and i % log_every == 0:
-                print(f"step {step:5d} loss={rec.get('loss', float('nan')):.4f} "
-                      f"H={H} dt={dt:.2f}s", flush=True)
-            done = step + 1  # state now holds the post-step counter
+            inflight = (metrics, dict(step=step, dt=dt, H=H), i)
+            done = self._host_step  # state now holds the post-step counter
             if run.ckpt_every and done % run.ckpt_every == 0:
                 self.ckpt.save(done, state,
                                extras={"pipeline": pipeline.snapshot()})
+        if inflight is not None:
+            self._flush_metrics(inflight, log_every)
         return state
 
     def restore_or_init(self, rng, pipeline):

@@ -1,15 +1,17 @@
 """Pluggable synchronization strategies (see base.py for the contract)."""
-from repro.strategies.base import (STEP_KINDS, SYNC_KINDS, SyncStrategy,
-                                   build_strategy, get_strategy,
-                                   list_strategies, mean_bandwidth,
-                                   register_strategy, resolve_strategy)
+from repro.strategies.base import (STEP_ADVANCING, STEP_KINDS, SYNC_KINDS,
+                                   SyncStrategy, build_strategy,
+                                   get_strategy, list_strategies,
+                                   mean_bandwidth, register_strategy,
+                                   resolve_strategy)
 # importing the module runs the @register_strategy decorators
 from repro.strategies import builtin  # noqa: F401
 from repro.strategies.builtin import (ACESync, BandwidthTiered, FedAvg,
                                       FullSync, LocalSGD, TopK)
 
 __all__ = [
-    "STEP_KINDS", "SYNC_KINDS", "SyncStrategy", "build_strategy",
+    "STEP_ADVANCING", "STEP_KINDS", "SYNC_KINDS", "SyncStrategy",
+    "build_strategy",
     "get_strategy", "list_strategies", "mean_bandwidth",
     "register_strategy", "resolve_strategy",
     "ACESync", "BandwidthTiered", "FedAvg", "FullSync", "LocalSGD", "TopK",

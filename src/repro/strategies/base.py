@@ -45,6 +45,9 @@ from repro.core.scheduler import Scheduler, SyncPlan
 STEP_KINDS = ("grad_sync", "local", "delta_sync", "param_avg")
 # Kinds that move bytes across pods and therefore end a local window.
 SYNC_KINDS = frozenset({"grad_sync", "delta_sync", "param_avg"})
+# Kinds that advance the optimizer step counter (the host loop mirrors the
+# device counter with these instead of a blocking device_get per step).
+STEP_ADVANCING = frozenset({"grad_sync", "local"})
 
 
 def mean_bandwidth(telemetry: Optional[Sequence[dict]],
@@ -97,6 +100,15 @@ class SyncStrategy:
                   omega: Optional[Sequence[float]] = None) -> SyncPlan:
         """Turn (importance, telemetry, omega) into a compression plan."""
         return scheduler.full_plan(omega)
+
+    def device_plan_fn(self, scheduler: Scheduler, cfg: ACESyncConfig):
+        """Device-resident replan, if the strategy supports one: a jitted
+        ``fn(importance_state, struct_feat, budget_bytes) -> int32[G]``
+        level assignment that runs entirely on device (the host fetches
+        the tiny vector asynchronously and rebuilds the plan off the
+        critical path).  ``None`` (the default) means plans only come from
+        the host-side :meth:`make_plan`."""
+        return None
 
     def step_schedule(self, steps_since_sync: int, H: int
                       ) -> Tuple[str, ...]:

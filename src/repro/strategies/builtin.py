@@ -83,6 +83,12 @@ class ACESync(_PeriodicStrategy):
         bw = mean_bandwidth(telemetry)
         return scheduler.plan(imp, bw, omega)
 
+    def device_plan_fn(self, scheduler: Scheduler, cfg):
+        """Importance scoring + knapsack fused into one device computation
+        (core/acesync.device_replan_fn) — the retrace-free control plane."""
+        from repro.core import acesync
+        return acesync.device_replan_fn(scheduler, cfg)
+
 
 @register_strategy
 class LocalSGD(SyncStrategy):
@@ -172,4 +178,7 @@ class BandwidthTiered(SyncStrategy):
             else:
                 choice.append(min(topks,
                                   key=lambda t: abs(t[1] - target))[0])
-        return scheduler.plan_from_levels(choice, omega, sync_interval=1)
+        # adaptive: replans change with telemetry, so pad bucket classes to
+        # keep the compiled step's signature stable across them
+        return scheduler.plan_from_levels(choice, omega, sync_interval=1,
+                                          adaptive=True)

@@ -313,15 +313,18 @@ class TestPlanPricing:
                       Level("TOPK10", 0.10, 8), Level("SKIP", 0.0, 0))
         return SyncPlan(tuple(idx), cfg_levels, omega, 1)
 
-    def test_same_level_groups_share_padding(self):
-        """Two same-level groups are priced as ONE concatenated buffer —
-        fewer padded blocks than pricing them separately."""
-        sizes = [1500, 1500]  # separately: 2 blocks each; together: 3
+    def test_same_level_groups_priced_block_aligned(self):
+        """Two same-level groups share ONE buffer and one collective, but
+        each leaf is block-aligned in the static layout (the price of the
+        retrace-free gather/scatter exchange): the bucket is priced at the
+        sum of per-leaf block counts, exactly what per-group pricing
+        gives — the knapsack's per-group accounting is exact."""
+        sizes = [1500, 1500]  # 2 blocks each -> a 4-block bucket
         plan = self._plan([2, 2])
         bucketed = plan_wire_bytes(plan, sizes, 2)
         separate = sum(plan.levels[2].wire_bytes(n, 2) for n in sizes)
-        assert bucketed < separate
-        assert bucketed == plan.levels[2].wire_bytes(3000, 2)
+        assert bucketed == separate
+        assert bucketed == plan.levels[2].wire_bytes(4 * 1024, 2)
 
     def test_mixed_plan_sums_buckets(self):
         sizes = [2048, 1024, 4096, 512]

@@ -68,3 +68,68 @@ class TestKnapsack:
                       for i, c in enumerate(choice))
             assert val >= prev - 1e-9
             prev = val
+
+
+class TestDeviceSolver:
+    """The vectorized (jittable) knapsack the device-resident replan
+    runs: convex-hull greedy, conservative but never over budget."""
+
+    def _solver(self, sizes):
+        return knapsack.make_device_solver(sizes, LEVELS, 2)
+
+    def test_budget_respected(self):
+        import jax.numpy as jnp
+        sizes = [10 ** 6] * 8
+        solver = self._solver(sizes)
+        full = sum(LEVELS[0].wire_bytes(n, 2) for n in sizes)
+        for frac in (0.0, 0.05, 0.2, 0.5, 0.8, 1.0):
+            choice = np.asarray(solver(jnp.ones((8,), jnp.float32),
+                                       jnp.float32(full * frac))).tolist()
+            assert _bytes(choice, sizes) <= full * frac + 1
+
+    def test_budget_extremes(self):
+        import jax.numpy as jnp
+        sizes = [10 ** 5] * 4
+        solver = self._solver(sizes)
+        lo = np.asarray(solver(jnp.ones((4,), jnp.float32),
+                               jnp.float32(0.0)))
+        assert all(LEVELS[c].is_skip for c in lo)
+        hi = np.asarray(solver(jnp.ones((4,), jnp.float32),
+                               jnp.float32(1e18)))
+        assert all(LEVELS[c].is_full for c in hi)
+
+    def test_important_groups_get_better_levels(self):
+        import jax.numpy as jnp
+        sizes = [10 ** 6] * 4
+        solver = self._solver(sizes)
+        full = sum(LEVELS[0].wire_bytes(n, 2) for n in sizes)
+        choice = np.asarray(solver(
+            jnp.asarray([0.01, 0.01, 1.0, 1.0], jnp.float32),
+            jnp.float32(full * 0.3)))
+        vals = [knapsack.level_value(LEVELS[c]) for c in choice]
+        assert vals[2] >= vals[0] and vals[3] >= vals[1]
+
+    def test_jit_once_budget_is_data(self):
+        """Budget and importance are traced data: sweeping them reuses
+        one compiled solver (the replan path never retraces)."""
+        import jax
+        import jax.numpy as jnp
+        sizes = [10 ** 5] * 6
+        solver = jax.jit(self._solver(sizes))
+        full = sum(LEVELS[0].wire_bytes(n, 2) for n in sizes)
+        for frac in (0.1, 0.4, 0.9):
+            np.asarray(solver(jnp.ones((6,), jnp.float32),
+                              jnp.float32(full * frac)))
+        assert solver._cache_size() == 1
+
+    def test_hull_is_importance_invariant(self):
+        """Scaling all importances leaves the plan unchanged (the hull —
+        and hence the density ORDER — is importance-scale-invariant)."""
+        import jax.numpy as jnp
+        sizes = [10 ** 6, 2 * 10 ** 5, 4 * 10 ** 5]
+        solver = self._solver(sizes)
+        full = sum(LEVELS[0].wire_bytes(n, 2) for n in sizes)
+        imp = jnp.asarray([0.9, 0.2, 0.5], jnp.float32)
+        a = np.asarray(solver(imp, jnp.float32(full * 0.4)))
+        b = np.asarray(solver(imp * 0.1, jnp.float32(full * 0.4)))
+        assert (a == b).all()

@@ -1,0 +1,269 @@
+"""Retrace-free adaptive replanning (plan-as-data) regression tests.
+
+Pins the three contracts of the planexec refactor:
+
+  1. steady-state replans — distinct level assignments sharing a bucket
+     signature — trigger ZERO new train-step compilations (the jit cache
+     is keyed on the signature, the perms ride as device data);
+  2. the plan vectors are live data: the same compiled step produces
+     different (and correct) results under different assignments;
+  3. plan-vector execution is output-identical to the legacy static-plan
+     path on the seed configs (sync_tree accepts both forms).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SMOKE_ARCHS
+from repro.configs.base import ACESyncConfig, RunConfig, ShapeConfig
+from repro.core import sync as S
+from repro.core import planexec
+from repro.core.compression import Level
+from repro.core.planexec import (ExecPlan, bucket_signature,
+                                 build_exec_plan, pad_block_class)
+from repro.core.scheduler import Scheduler, SyncPlan
+from repro.core.trainer import Trainer
+from repro.data.pipeline import TokenPipeline
+from repro.models.registry import build_model
+
+SHAPE = ShapeConfig("replan", 32, 2, "train")
+
+
+def _trainer(strategy="acesync"):
+    cfg = SMOKE_ARCHS["paper-350m"]
+    run = RunConfig(model=cfg, shape=SHAPE, total_steps=30, warmup_steps=2,
+                    lr=1e-3)
+    model = build_model(cfg, run)
+    tr = Trainer(model, run, mesh=None, strategy=strategy)
+    return tr, TokenPipeline(model, SHAPE, seed=0)
+
+
+def _same_sig_variants(sched, base_plan, n=3):
+    """Distinct assignments sharing ``base_plan``'s bucket signature:
+    swap levels between groups with equal block counts."""
+    from repro.core.planexec import n_blocks
+    idx = list(base_plan.level_idx)
+    blocks = [n_blocks(s) for s in sched.sizes]
+    variants, seen = [], {tuple(idx)}
+    for i in range(len(idx)):
+        for j in range(i + 1, len(idx)):
+            if blocks[i] == blocks[j] and idx[i] != idx[j]:
+                cand = list(idx)
+                cand[i], cand[j] = cand[j], cand[i]
+                if tuple(cand) in seen:
+                    continue
+                plan = sched.plan_from_levels(cand, sync_interval=1,
+                                              adaptive=True)
+                if plan.bucket_sig == base_plan.bucket_sig:
+                    variants.append(plan)
+                    seen.add(tuple(cand))
+            if len(variants) >= n:
+                return variants
+    return variants
+
+
+class TestRetraceFree:
+    def test_distinct_replans_zero_recompiles(self):
+        """>= 3 distinct replans through the compiled step add zero jit
+        cache entries after warmup."""
+        tr, pipe = _trainer()
+        state = tr.init_state(jax.random.PRNGKey(0))
+        plan = tr.default_plan(bandwidth_mbps=30.0)
+        assert plan.adaptive and plan.bucket_sig is not None
+        state, _ = tr.step(state, next(pipe), plan, "grad_sync")
+        warm = tr.compile_count()
+        assert warm >= 1
+
+        variants = _same_sig_variants(tr.scheduler, plan, n=3)
+        assert len(variants) >= 3, \
+            "seed config must admit 3 same-signature assignment swaps"
+        for p in variants:
+            assert p.level_idx != plan.level_idx
+            state, m = tr.step(state, next(pipe), p, "grad_sync")
+            assert np.isfinite(float(m["loss"]))
+        assert tr.compile_count() == warm, \
+            f"replanning retraced: {warm} -> {tr.compile_count()}"
+
+    def test_omega_is_data_too(self):
+        """Changing aggregation weights never recompiles either."""
+        tr, pipe = _trainer("fullsync")
+        state = tr.init_state(jax.random.PRNGKey(0))
+        p1 = tr.scheduler.full_plan(omega=None)
+        state, _ = tr.step(state, next(pipe), p1, "grad_sync")
+        warm = tr.compile_count()
+        p2 = tr.scheduler.full_plan(omega=(1.0,))
+        state, _ = tr.step(state, next(pipe), p2, "grad_sync")
+        assert tr.compile_count() == warm
+
+    def test_plan_vectors_are_live(self):
+        """Same compiled step, different perms -> different sync results:
+        the plan is data, not a baked constant."""
+        r = np.random.RandomState(0)
+        tree = {"a": jnp.asarray(r.randn(2048).astype(np.float32)),
+                "b": jnp.asarray(r.randn(2048).astype(np.float32))}
+        errors = jax.tree.map(jnp.zeros_like, tree)
+        cfg = ACESyncConfig()
+        levels = tuple(Level(*l) for l in cfg.levels)
+        names = [l.name for l in levels]
+        iF, iS = names.index("FULL"), names.index("SKIP")
+        sizes = [2048, 2048]
+
+        def run(ep):
+            f = jax.jit(lambda t, e, p: S.sync_tree(
+                t, e, p, mesh=None, shardings=None, gamma=1.0))
+            return f(tree, errors, ep)
+
+        p_ab = build_exec_plan(
+            SyncPlan((iF, iS), levels, (1.0,), 1), sizes)
+        p_ba = build_exec_plan(
+            SyncPlan((iS, iF), levels, (1.0,), 1), sizes)
+        assert p_ab.sig == p_ba.sig
+        agg1, _ = run(p_ab)
+        agg2, _ = run(p_ba)
+        # FULL transmits (bf16), SKIP zeroes — and they swap with the perm
+        assert float(jnp.abs(agg1["a"]).max()) > 0
+        assert float(jnp.abs(agg1["b"]).max()) == 0
+        assert float(jnp.abs(agg2["a"]).max()) == 0
+        assert float(jnp.abs(agg2["b"]).max()) > 0
+
+
+class TestAsyncReplanLoop:
+    def test_device_replan_applies_in_loop(self, tmp_path):
+        """The host loop's non-blocking replan path end-to-end: the device
+        knapsack runs, the assignment vector lands asynchronously, the
+        plan swaps, and training stays finite."""
+        from repro.launch.train import TrainLoop
+        cfg = SMOKE_ARCHS["paper-350m"]
+        run = RunConfig(model=cfg, shape=SHAPE, total_steps=16,
+                        warmup_steps=2, lr=1e-3, ckpt_every=0,
+                        ckpt_dir=str(tmp_path),
+                        acesync=ACESyncConfig(replan_every=3,
+                                              sync_interval_init=2))
+        model = build_model(cfg, run)
+        loop = TrainLoop(model, run, mesh=None, strategy="acesync")
+        pipe = TokenPipeline(model, SHAPE, seed=0)
+        state = loop.restore_or_init(jax.random.PRNGKey(0), pipe)
+        state = loop.run_steps(state, pipe, 14, log_every=0)
+        assert len(loop.replan_latencies) >= 2, \
+            "async device replans should have been applied"
+        assert all(lat >= 0 for lat in loop.replan_latencies)
+        assert loop.plan is not None and loop.plan.adaptive
+        losses = [h["loss"] for h in loop.history if "loss" in h]
+        assert len(losses) == 14 and np.isfinite(losses).all()
+
+
+class TestPlanVectorParity:
+    def test_exec_plan_matches_static_plan(self):
+        """Plan-vector execution (padded, perms as data) is output-
+        identical to the legacy static-plan trace on the seed ladder."""
+        cfg = ACESyncConfig()
+        levels = tuple(Level(*l) for l in cfg.levels)
+        names = [l.name for l in levels]
+        r = np.random.RandomState(3)
+        tree = {k: jnp.asarray(r.randn(n).astype(np.float32))
+                for k, n in [("a", 1000), ("b", 2048), ("c", 231),
+                             ("d", 4096), ("e", 500), ("f", 300)]}
+        errors = jax.tree.map(lambda x: jnp.ones_like(x) * 0.05, tree)
+        idx = tuple(names.index(n) for n in
+                    ["FULL", "INT8", "INT4", "SIGN1", "TOPK10_INT8",
+                     "SKIP"])
+        plan = SyncPlan(idx, levels, (1.0,), 1)
+        sizes = [int(np.prod(v.shape)) for v in tree.values()]
+
+        agg_s, err_s = S.sync_tree(tree, errors, plan, mesh=None,
+                                   shardings=None, gamma=0.9)
+        ep = build_exec_plan(plan, sizes, growth=1.125)
+        agg_d, err_d = S.sync_tree(tree, errors, ep, mesh=None,
+                                   shardings=None, gamma=0.9)
+        for k in tree:
+            np.testing.assert_allclose(np.asarray(agg_s[k]),
+                                       np.asarray(agg_d[k]),
+                                       rtol=1e-6, atol=1e-6)
+            np.testing.assert_allclose(np.asarray(err_s[k]),
+                                       np.asarray(err_d[k]),
+                                       rtol=1e-6, atol=1e-6)
+
+    def test_trainer_step_parity_across_plan_forms(self):
+        """trainer.step under a SyncPlan equals stepping its ExecPlan."""
+        tr, pipe = _trainer()
+        batch = next(pipe)
+        plan = tr.default_plan(bandwidth_mbps=30.0)
+        s1 = tr.init_state(jax.random.PRNGKey(0))
+        s2 = tr.init_state(jax.random.PRNGKey(0))
+        out1, m1 = tr.step(s1, batch, plan, "grad_sync")
+        out2, m2 = tr.step(s2, batch, tr.exec_plan(plan), "grad_sync")
+        assert float(m1["loss"]) == float(m2["loss"])
+        l1 = jax.tree.leaves(out1["params"])[0]
+        l2 = jax.tree.leaves(out2["params"])[0]
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2))
+
+
+class TestBucketSignature:
+    def test_pad_class_properties(self):
+        for growth in (1.125, 1.5, 2.0):
+            prev = 0
+            for nb in range(0, 2000, 7):
+                c = pad_block_class(nb, growth)
+                assert c >= nb
+                assert c >= prev or nb == 0
+                if nb > 0:
+                    assert c <= max(int(np.ceil(nb * growth)), nb + 1)
+                prev = c
+        assert pad_block_class(0, 2.0) == 0
+        assert pad_block_class(5, 1.0) == 5      # growth 1.0: exact sizes
+        assert pad_block_class(5, 2.0) == 8      # power-of-two classes
+
+    def test_signature_absorbs_jitter(self):
+        """Small bucket-size jitter between replans stays in class."""
+        sig1 = bucket_signature([0, 0, 1], [100 * 1024, 80 * 1024, 1024],
+                                2, growth=1.125)
+        sig2 = bucket_signature([0, 0, 1], [101 * 1024, 79 * 1024, 1024],
+                                2, growth=1.125)
+        assert sig1 == sig2
+
+    def test_exec_plan_pads_with_zero_block(self):
+        levels = (Level("INT8", 1.0, 8), Level("SKIP", 0.0, 0))
+        plan = SyncPlan((0,), levels, (1.0,), 1)
+        ep = build_exec_plan(plan, [3000], growth=2.0)
+        assert ep.sig == (4, 0)                  # 3 blocks -> class 4
+        assert ep.total_blocks == 3
+        perm = np.asarray(ep.perms[0])
+        assert perm.shape == (4,)
+        assert list(perm[:3]) == [0, 1, 2]
+        assert perm[3] == ep.total_blocks        # pad -> the zero block
+
+
+class TestSchedulerPlanSig:
+    def test_scheduler_attaches_signature(self):
+        cfg = ACESyncConfig()
+        sched = Scheduler(cfg, [4096, 8192, 1024], n_pods=2)
+        full = sched.full_plan()
+        assert full.bucket_sig is not None and not full.adaptive
+        ada = sched.plan([1.0, 0.5, 0.2], 30.0)
+        assert ada.adaptive
+        # adaptive signature is padded: never below the exact one
+        exact = bucket_signature(ada.level_idx, sched.sizes,
+                                 len(sched.levels))
+        assert all(p >= e for p, e in zip(ada.bucket_sig, exact))
+
+    def test_padded_pricing_at_least_analytic(self):
+        cfg = ACESyncConfig()
+        sched = Scheduler(cfg, [10 ** 5] * 5, n_pods=2)
+        plan = sched.plan([0.5] * 5, 25.0)
+        assert sched.plan_wire_bytes(plan) >= \
+            sched.plan_wire_bytes(plan, padded=False)
+
+    def test_sig_not_priced_under_foreign_block(self):
+        """A signature counted in the scheduler's block size must not be
+        priced at a different block size — pricing falls back to the
+        caller's sizes instead."""
+        from repro.codecs import plan_wire_bytes
+        cfg = ACESyncConfig(topk_block=512)
+        sched = Scheduler(cfg, [4096, 2048], n_pods=2)
+        plan = sched.full_plan()
+        assert plan.bucket_block == 512
+        # priced with the default 1024-block: rebuilt from sizes, equal to
+        # the exact per-leaf block-aligned total (sizes are multiples)
+        got = plan_wire_bytes(plan, sched.sizes, 2)
+        assert got == plan.levels[plan.level_idx[0]].wire_bytes(6144, 2)

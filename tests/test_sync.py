@@ -152,11 +152,14 @@ class TestBucketedSync:
                                        rtol=1e-4, atol=1e-4)
 
     def test_wire_bytes_of_plan_buckets(self):
+        """Pricing matches the static-shape exchange: every leaf is
+        block-aligned (1500 -> 2 blocks), same-level leaves share one
+        buffer/collective, and the bucket is priced at its block total."""
         sizes = [1500, 1500, 2048]
         plan = _plan(["TOPK10_INT8", "TOPK10_INT8", "INT8"])
         got = S.wire_bytes_of_plan(plan, sizes, 2)
         lv = {l.name: l for l in plan.levels}
-        expect = lv["TOPK10_INT8"].wire_bytes(3000, 2) \
+        expect = lv["TOPK10_INT8"].wire_bytes(4 * 1024, 2) \
             + lv["INT8"].wire_bytes(2048, 2)
         assert got == expect
 
@@ -193,10 +196,18 @@ class TestScheduler:
         cfg = ACESyncConfig()
         sched = Scheduler(cfg, [10 ** 6] * 6, n_pods=2)
         imp = [0.5] * 6
-        b_low = sched.plan_wire_bytes(sched.plan(imp, 5.0))
-        b_high = sched.plan_wire_bytes(sched.plan(imp, 200.0))
+        p_low, p_high = sched.plan(imp, 5.0), sched.plan(imp, 200.0)
+        b_low = sched.plan_wire_bytes(p_low)
+        b_high = sched.plan_wire_bytes(p_high)
         full = sched.fullsync_wire_bytes()
-        assert b_low < b_high <= full
+        assert b_low < b_high
+        # the knapsack respects the eq-(5) budget on the analytic floor;
+        # the executed (padded) volume exceeds it by at most the size-class
+        # growth of the bucket ladder
+        assert sched.plan_wire_bytes(p_high, padded=False) <= full
+        growth = sched.pad_growth
+        assert b_high <= sched.plan_wire_bytes(p_high, padded=False) \
+            * growth + len(sched.levels) * 1024 * 4
 
     def test_adapt_interval_eq9(self):
         cfg = ACESyncConfig(sync_interval_init=4)
