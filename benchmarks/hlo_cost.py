@@ -192,6 +192,20 @@ def parse_module(text: str) -> Tuple[Dict[str, HloComputation], Optional[str]]:
 # ---------------------------------------------------------------------------
 
 
+def _parse_source_target_pairs(raw: str) -> Optional[List[List[int]]]:
+    """collective-permute carries source_target_pairs, not replica_groups;
+    each {src,dst} pair is classified like a 2-element group (the mesh
+    axes that vary between the endpoints are the axes the transfer
+    crosses — "pod" for the ring exchange's ppermutes)."""
+    m = re.search(r"source_target_pairs=\{(\{[^=]*?\})\}", raw)
+    if not m:
+        return None
+    pairs = []
+    for g in re.findall(r"\{([\d,\s]*)\}", m.group(1)):
+        pairs.append([int(x) for x in g.split(",") if x.strip()])
+    return pairs or None
+
+
 def _parse_replica_groups(raw: str) -> Optional[List[List[int]]]:
     """Handles explicit {{0,1},{2,3}} and iota [G,N]<=[dims]T(perm) forms."""
     m = re.search(r"replica_groups=\{(\{[^=]*?\})\}", raw)
@@ -322,6 +336,8 @@ class CostWalker:
 
     def _collective(self, op: HloOp, rep: CostReport, comp: HloComputation):
         groups = _parse_replica_groups(op.raw)
+        if groups is None and op.opcode.startswith("collective-permute"):
+            groups = _parse_source_target_pairs(op.raw)
         axis, gsize = classify_axes(groups, self.mesh_shape, self.axis_names)
         opc = op.opcode.replace("-start", "")
         if opc == "all-reduce":

@@ -14,6 +14,16 @@ smear across four layers (``core/compression.py``, ``core/sync.py``,
     flat uint8 buffer and issues ONE ``all_gather``, so a sync round costs
     one collective per codec no matter how many payload components the
     wire format carries;
+  * ``ef_sync_ring`` / ``decode_accumulate`` — the chunked ring pipeline:
+    the payload is split into K chunks circulated with ``ppermute`` over
+    the pod axis, and while chunk *i* is on the DCN its predecessor is
+    decoded and accumulated in place (fused Pallas decode-accumulate
+    kernels on accelerators), hiding the decode behind the wire.  The
+    gathered ``(n_pods, payload)`` buffer is never materialised: the live
+    wire state is the held + in-flight chunk per lane — at most ~2x the
+    bucket payload, vs ``n_pods x`` for the one-shot gather.  Which rungs
+    ring (and with how many chunks) is a static plan decision — see
+    ``repro.core.planexec.ring_chunk_count``;
   * ``wire_bytes``                — analytic per-device on-the-wire bytes
     for the collective the codec actually issues (all_gather receive
     volume for gather codecs, ring all-reduce bytes for psum codecs).
@@ -113,6 +123,11 @@ class Codec:
     value_bits: int = 16
     #: fraction of entries transmitted (1.0 = dense).
     keep_ratio: float = 1.0
+    #: whether the chunked ring pipeline applies: True for gather codecs
+    #: (payload circulated + decode-accumulated per peer).  Codecs whose
+    #: exchange is not a per-peer payload gather (FULL's psum, SKIP's
+    #: nothing) have no decode to hide and stay on their one-shot path.
+    supports_ring: bool = True
 
     # ---- accounting -----------------------------------------------------
     def payload_bytes(self, n: int, block: int = BLOCK) -> int:
@@ -188,6 +203,107 @@ class Codec:
                                 block).reshape(-1)[:n]
             agg = agg + omega[p] * dense
         return agg
+
+    # ---- chunked ring pipeline ------------------------------------------
+    def accum_init(self, nb: int, block: int = BLOCK):
+        """Fresh accumulator for ``nb`` blocks of ring aggregation.
+        Default: the dense f32 partial sum.  Codecs that aggregate in the
+        compressed domain (SIGN's majority vote) override with their own
+        partial state."""
+        return jnp.zeros((nb, block), jnp.float32)
+
+    def decode_accumulate(self, acc, payload: Dict[str, jax.Array],
+                          weight: jax.Array, *, block: int = BLOCK,
+                          use_pallas: bool = False):
+        """``acc (+)= weight * decode(payload)`` — ONE peer's chunk folded
+        into the running aggregate.  The oracle default materialises the
+        dense decode; subclasses fuse dequant + FMA into one HBM pass with
+        the Pallas kernels in ``repro/kernels/decode.py`` when
+        ``use_pallas`` is set."""
+        return acc + weight * self.decode(payload, block)
+
+    def accum_finalize(self, acc, n: int, block: int = BLOCK) -> jax.Array:
+        """Running aggregate -> dense (n,) f32 (identity for the default
+        dense partial sum)."""
+        return acc.reshape(-1)[:n]
+
+    def _chunk_payload(self, payload: Dict[str, jax.Array], i: int,
+                       cb: int) -> Dict[str, jax.Array]:
+        """Rows ``[i*cb, (i+1)*cb)`` of every payload component.  Valid
+        for any blockwise wire format (every component's leading dim is
+        the block row)."""
+        return {k: a[i * cb:(i + 1) * cb] for k, a in payload.items()}
+
+    def ef_sync_ring(self, flat: jax.Array, e_flat: jax.Array,
+                     omega: jax.Array, omega_own: jax.Array, *,
+                     gamma: float, n_pods: int, n_chunks: int,
+                     block: int = BLOCK, axis: str = POD_AXIS,
+                     use_pallas: bool = False
+                     ) -> Tuple[jax.Array, jax.Array]:
+        """EF + compress + CHUNKED RING exchange of one flat buffer.
+
+        The payload is split into ``n_chunks`` equal chunks (the caller —
+        ``planexec.exec_grid`` — pads the bucket to a chunk multiple) and
+        circulated around the pod ring with K*(P-1) ``ppermute``s, exactly
+        the all_gather receive volume on the wire.  The decode-accumulate
+        of chunk *i-1* is issued between the ppermute of chunk *i* and any
+        use of its result, so it carries no data dependence on the
+        in-flight transfer and XLA's latency-hiding scheduler overlaps the
+        DCN hop with the decode; the (P, payload) gathered buffer is never
+        materialised — the live wire state is each lane's held +
+        in-flight chunk, at most ~2x the bucket payload regardless of the
+        pod count.
+
+        Bit-parity with :meth:`ef_sync`: on a 2-pod ring the aggregate is
+        the same two-term omega-weighted sum (addition commutes), pinned
+        by tests/test_codecs.py and the subprocess exchange parity test.
+        For P >= 3 each pod folds peers in ring-arrival order, so per-pod
+        aggregates can differ at ulp level (fp non-associativity) — the
+        auto chunk heuristic therefore only rings 2-pod meshes (see
+        ``planexec.ring_chunk_count``).
+        """
+        if n_pods <= 1 or not self.supports_ring:
+            return self.ef_sync(flat, e_flat, omega, omega_own,
+                                gamma=gamma, n_pods=n_pods, block=block,
+                                axis=axis, use_pallas=use_pallas)
+        n = flat.shape[0]
+        payload, _own, new_e = self.ef_encode(flat, e_flat, gamma=gamma,
+                                              block=block,
+                                              use_pallas=use_pallas)
+        nb = n_blocks(n, block)
+        K = max(1, min(int(n_chunks), nb))
+        assert nb % K == 0, (nb, K)
+        cb = nb // K
+        chunks = [self._chunk_payload(payload, i, cb) for i in range(K)]
+        # hop 0: own contribution (same first term as the one-shot path)
+        accs = [self.decode_accumulate(self.accum_init(cb, block),
+                                       chunks[i], omega_own, block=block,
+                                       use_pallas=use_pallas)
+                for i in range(K)]
+        wires = [pack_payload(c) for c in chunks]
+        meta = wires[0][1]
+        cur = [w for w, _ in wires]
+        my = jax.lax.axis_index(axis)
+        fwd = [(p, (p + 1) % n_pods) for p in range(n_pods)]
+        for h in range(1, n_pods):
+            w_src = omega[(my - h) % n_pods]
+            nxt, prev, pi = [], None, -1
+            for i in range(K):
+                r = jax.lax.ppermute(cur[i], axis, fwd)
+                if prev is not None:
+                    # decode chunk i-1 while chunk i is on the DCN
+                    accs[pi] = self.decode_accumulate(
+                        accs[pi], unpack_payload(prev, meta), w_src,
+                        block=block, use_pallas=use_pallas)
+                nxt.append(r)
+                prev, pi = r, i
+            accs[pi] = self.decode_accumulate(
+                accs[pi], unpack_payload(prev, meta), w_src, block=block,
+                use_pallas=use_pallas)
+            cur = nxt
+        parts = [self.accum_finalize(a, cb * block, block) for a in accs]
+        agg = parts[0] if K == 1 else jnp.concatenate(parts)
+        return agg[:n], new_e
 
     # ---- one sync round -------------------------------------------------
     def ef_sync(self, flat: jax.Array, e_flat: jax.Array, omega: jax.Array,

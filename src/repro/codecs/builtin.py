@@ -41,6 +41,10 @@ class FullCodec(Codec):
     bf16 (tests/test_collectives.py accepts both byte totals)."""
     name = "full"
     value_bits = 16
+    #: the exchange is a psum, not a payload gather: there is no per-peer
+    #: decode for the ring to hide (XLA already pipelines the all-reduce),
+    #: so FULL stays on its one-shot path.
+    supports_ring = False
 
     def wire_bytes(self, n: int, n_pods: int, block: int = BLOCK) -> int:
         if n_pods <= 1 or n <= 0:
@@ -117,6 +121,14 @@ class Int8Codec(Codec):
         payload = {"q": q[:nb], "scale": s[:nb, 0]}
         return payload, ef - r, r
 
+    def decode_accumulate(self, acc, payload, weight, *, block=BLOCK,
+                          use_pallas=False):
+        if not use_pallas or block != ops.LANES:
+            return super().decode_accumulate(acc, payload, weight,
+                                             block=block)
+        return ops.decode_accum_int8(acc, payload["q"], payload["scale"],
+                                     weight, use_pallas=True)
+
 
 @register_codec
 class TopKCodec(Codec):
@@ -166,6 +178,15 @@ class TopKCodec(Codec):
         own = self.decode(payload, block).reshape(-1)[:n]
         return payload, own, (sel - own) + res
 
+    def decode_accumulate(self, acc, payload, weight, *, block=BLOCK,
+                          use_pallas=False):
+        if not use_pallas or block != ops.LANES:
+            return super().decode_accumulate(acc, payload, weight,
+                                             block=block)
+        return ops.topk_scatter_accum(acc, payload["q"], payload["idx"],
+                                      payload["scale"], weight,
+                                      use_pallas=True)
+
 
 @register_codec
 class SkipCodec(Codec):
@@ -173,6 +194,7 @@ class SkipCodec(Codec):
     name = "skip"
     value_bits = 0
     keep_ratio = 0.0
+    supports_ring = False           # nothing on the wire, nothing to ring
 
     def payload_bytes(self, n: int, block: int = BLOCK) -> int:
         return 0
@@ -227,6 +249,14 @@ class Int4Codec(Codec):
         own = (flat + gamma * e_flat) - r  # dead-code on the multi-pod path
         return payload, own, r
 
+    def decode_accumulate(self, acc, payload, weight, *, block=BLOCK,
+                          use_pallas=False):
+        if not use_pallas or block != ops.LANES:
+            return super().decode_accumulate(acc, payload, weight,
+                                             block=block)
+        return ops.decode_accum_int4(acc, payload["q"], payload["scale"],
+                                     weight, use_pallas=True)
+
 
 @register_codec
 class SignCodec(Codec):
@@ -262,6 +292,28 @@ class SignCodec(Codec):
         payload = {"q": pack_bits(sg[:nb] > 0), "scale": s[:nb, 0]}
         own = (flat + gamma * e_flat) - r  # dead-code on the multi-pod path
         return payload, own, r
+
+    # ---- ring pipeline: majority vote in the compressed domain ---------
+    def accum_init(self, nb, block=BLOCK):
+        """Partial vote counts + partial magnitude — the compressed-domain
+        state the ring circulates instead of a dense decode."""
+        return {"vote": jnp.zeros((nb, block), jnp.float32),
+                "mag": jnp.zeros((nb,), jnp.float32)}
+
+    def decode_accumulate(self, acc, payload, weight, *, block=BLOCK,
+                          use_pallas=False):
+        if use_pallas and block == ops.LANES:
+            vote, mag = ops.sign_vote_accum(
+                acc["vote"], acc["mag"], payload["q"], payload["scale"],
+                weight, use_pallas=True)
+            return {"vote": vote, "mag": mag}
+        signs = unpack_bits(payload["q"], block).astype(jnp.float32) * 2 - 1
+        return {"vote": acc["vote"] + weight * signs,
+                "mag": acc["mag"] + weight * payload["scale"]}
+
+    def accum_finalize(self, acc, n, block=BLOCK):
+        agg = jnp.sign(acc["vote"]) * acc["mag"][:, None]
+        return agg.reshape(-1)[:n]
 
     def pod_exchange(self, payload, omega, *, n, block=BLOCK,
                      axis=POD_AXIS):

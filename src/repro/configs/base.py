@@ -198,7 +198,18 @@ class ACESyncConfig:
     # two classes (fewest recompiles, up to 2x wire padding); 1.125 bounds
     # padding at 12.5%; 1.0 = exact sizes (every bucket-size change
     # recompiles).
+    # base growth of the per-rung pad schedule (planexec.rung_growth):
+    # big rungs take finer classes than this, tiny rungs coarser ones.
     bucket_pad_growth: float = 1.125
+    # chunked ring exchange (planexec.ring_chunk_count): 0 = roofline
+    # auto (ring DCN-bound rungs, one-shot all_gather otherwise),
+    # -1 = force the one-shot path everywhere, K > 0 = force K chunks on
+    # every ring-capable rung (benches/tests).
+    ring_chunks: int = 0
+    # rung-ordered optimizer apply: grad_sync applies AdamW to each
+    # rung's bucket as soon as that rung's exchange lands instead of
+    # barriering on the whole tree (core/sync.py apply_fn path).
+    overlap_apply: bool = True
     # level ladder: (name, keep_ratio, value_bits) - SKIP transmits nothing.
     # Each rung resolves to a registered repro/codecs wire format by
     # semantics: dense 8/4/1-bit -> int8 / packed int4 / sign-majority-vote.

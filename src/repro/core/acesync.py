@@ -64,9 +64,16 @@ def state_specs(params_specs, cfg: ACESyncConfig,
 
 
 def sync_gradients(grads, state: ACEState, plan: Union[SyncPlan, ExecPlan],
-                   *, mesh, shardings, cfg: ACESyncConfig
+                   *, mesh, shardings, cfg: ACESyncConfig,
+                   apply_fn=None, apply_aux=(), apply_scalars=()
                    ) -> Tuple[dict, ACEState, Dict[str, jax.Array]]:
-    """The ACE-Sync round. Returns (aggregated grads, new state, metrics)."""
+    """The ACE-Sync round. Returns (aggregated grads, new state, metrics).
+
+    With ``apply_fn`` given (see :func:`repro.core.sync.sync_tree`) the
+    aggregate is consumed rung by rung — the first return value is then
+    the tuple of updated ``apply_aux`` trees instead of the aggregated
+    gradients, and the optimizer work overlaps the later rungs'
+    exchanges."""
     # --- per-group stats for the importance estimator ---
     mean_abs, var, nrm = S.grad_group_stats(grads)
     if mesh is not None and S.POD_AXIS in mesh.axis_names \
@@ -84,7 +91,9 @@ def sync_gradients(grads, state: ACEState, plan: Union[SyncPlan, ExecPlan],
     # --- error feedback + compression + pod aggregation ---
     agg, new_errors = S.sync_tree(grads, state.errors, plan, mesh=mesh,
                                   shardings=shardings, gamma=cfg.gamma,
-                                  block=cfg.topk_block)
+                                  block=cfg.topk_block, apply_fn=apply_fn,
+                                  apply_aux=apply_aux,
+                                  apply_scalars=apply_scalars)
 
     new_state = state._replace(errors=new_errors, importance=ist,
                                mse_ema=0.99 * state.mse_ema + 0.01 * mse)
@@ -95,9 +104,17 @@ def sync_gradients(grads, state: ACEState, plan: Union[SyncPlan, ExecPlan],
 def current_scores(state: ACEState, cfg: ACESyncConfig) -> jax.Array:
     """Importance scores I(theta_i) (G,) — jittable; consumed by the
     device-resident replan (and, lagged, by host-side telemetry)."""
-    temp = imp.temporal_features(state.importance)
-    return imp.scores(state.importance.params, temp, state.struct_feat,
-                      cfg.alpha)
+    return scores_from(state.importance, state.struct_feat, cfg)
+
+
+def scores_from(importance: imp.ImportanceState, struct_feat,
+                cfg: ACESyncConfig) -> jax.Array:
+    """Scores from the estimator state alone.  The host replan path calls
+    this with just ``ace.importance`` / ``ace.struct_feat`` sliced out, so
+    a replan poll never tree-maps over the param-sized error buffers
+    riding in the full :class:`ACEState` (host-side replan overhead)."""
+    temp = imp.temporal_features(importance)
+    return imp.scores(importance.params, temp, struct_feat, cfg.alpha)
 
 
 def device_replan_fn(scheduler: Scheduler, cfg: ACESyncConfig):

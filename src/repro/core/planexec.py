@@ -13,15 +13,31 @@ fresh XLA compile — up to L^G variants for G groups over an L-rung ladder.
     perms are ordinary device arrays — replans swap them without
     retracing;
   * only the tuple of padded per-rung block counts — the **bucket-shape
-    signature** — is static.  Rung sizes are rounded up to a small
-    geometric ladder of size classes (:func:`pad_block_class`, power-of-
-    two classes at the default growth of 2.0), so assignments that shuffle
-    groups between rungs without crossing a class boundary hit the warm
-    jit cache.  The padding is real zeros on the wire and is priced
-    explicitly by ``repro.codecs.plan_wire_bytes``.
+    signature** — plus the per-rung **chunk grid** of the ring exchange is
+    static.  Rung sizes are rounded up to a small geometric ladder of size
+    classes (:func:`pad_block_class`; the growth is scheduled per rung by
+    :func:`rung_growth` — big rungs take finer classes, tiny rungs coarser
+    ones), so assignments that shuffle groups between rungs without
+    crossing a class boundary hit the warm jit cache.  The padding is real
+    zeros on the wire and is priced explicitly by
+    ``repro.codecs.plan_wire_bytes``.
 
-The jit cache is therefore keyed on ``(levels, sig, block)`` — a handful
-of variants per run — instead of the full per-group assignment.
+The jit cache is therefore keyed on ``(levels, sig, chunks, block)`` — a
+handful of variants per run — instead of the full per-group assignment.
+
+Chunk grid (the ring exchange)
+------------------------------
+Rungs whose bucket is big enough to be DCN-bound run a chunked,
+double-buffered ring pipeline (``Codec.ef_sync_ring``): the bucket is
+split into K chunks exchanged with ``jax.lax.ppermute`` so the transfer
+of chunk *i* hides the decode-accumulate of chunk *i-1*.
+:func:`ring_chunk_count` picks K per rung from the roofline constants in
+``repro.launch.mesh`` (DCN 6.25 GB/s vs HBM 819 GB/s); K is rounded to a
+power-of-two class and the padded rung size to a K multiple, so the grid
+is a deterministic function of the (already class-rounded) signature —
+replans that keep the signature keep the chunk grid, and the step stays
+retrace-free.  ``chunks[r] == 0`` means the one-shot ``all_gather`` path
+(small buckets, psum codecs, single pod).
 """
 from __future__ import annotations
 
@@ -34,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.compression import BLOCK, Level
+from repro.launch.mesh import DCN_BW, HBM_BW
 
 #: default geometric growth of the padded-size ladder.  2.0 gives pure
 #: power-of-two classes (fewest signatures, up to 2x wire padding); the
@@ -42,8 +59,25 @@ from repro.core.compression import BLOCK, Level
 #: padding on the wire but more distinct bucket signatures (more
 #: compiles); 1.0 disables padding entirely (exact sizes — right for
 #: strategies whose plan never changes).  Tunable per run via
-#: ``ACESyncConfig.bucket_pad_growth``.
+#: ``ACESyncConfig.bucket_pad_growth``; the *effective* growth is
+#: scheduled per rung by :func:`rung_growth`.
 PAD_GROWTH = 1.125
+
+#: per-hop launch overhead of a pod-axis ``ppermute`` (DCN round-trip
+#: setup; WAN-ish link per the paper's regime).  The ring pipeline pays
+#: K*(P-1) of these to hide the decode, so rungs whose total DCN time is
+#: not >> this latency stay on the one-shot path.
+RING_HOP_LATENCY_S = 10e-6
+
+#: never split a rung into more chunks than this: each extra chunk adds a
+#: ppermute launch and shrinks the per-transfer payload toward the
+#: latency floor.
+RING_MAX_CHUNKS = 16
+
+#: target per-chunk DCN transfer time.  Big enough to amortise
+#: RING_HOP_LATENCY_S (~50x), small enough that the first chunk lands
+#: quickly and the decode pipeline fills.
+RING_TARGET_CHUNK_S = 500e-6
 
 
 def n_blocks(n: int, block: int = BLOCK) -> int:
@@ -64,25 +98,217 @@ def pad_block_class(nb: int, growth: float = PAD_GROWTH) -> int:
     return c
 
 
+#: floor of the scheduled pad growth: huge rungs never pad more than
+#: ~3.1% — but also never get finer classes than this, so replan-to-
+#: replan jitter still lands in class (collapsing to near-exact sizes
+#: would reintroduce the per-replan retraces the class ladder exists to
+#: prevent).
+MIN_RUNG_GROWTH = 1.03125
+
+#: rung size (blocks) where the growth schedule starts decaying from the
+#: base.  Below this the padding is a few KB — not worth narrower (=
+#: jitter-fragile) classes; above it the decay keeps the ABSOLUTE class
+#: width at (base-1)*32 blocks (~4 at the 1.125 default) until the
+#: MIN_RUNG_GROWTH floor takes over and the width grows as ~3.1% of nb.
+RUNG_GROWTH_KNEE = 32
+
+
+def rung_growth(nb: int, base: Optional[float]) -> Optional[float]:
+    """Per-rung pad-growth schedule (ROADMAP knob).
+
+    The flat default charged every rung the same relative padding; but
+    the overhead that matters is byte-weighted, so big rungs want *finer*
+    classes (12.5% of a multi-MB bucket is real DCN time) while tiny
+    rungs want *coarser* ones (their absolute padding is a few KB and
+    fewer classes means fewer compiled variants).  Scheduled, monotone in
+    nb, and careful to keep classes wide enough in ABSOLUTE blocks that
+    steady-state replan jitter never crosses a class boundary:
+
+      * nb <= 4 blocks: power-of-two classes (at most 1-2 pad blocks);
+      * nb <= RUNG_GROWTH_KNEE: the configured base growth (full flat
+        absorption; padding bytes are negligible here);
+      * larger: the excess over 1.0 decays as KNEE/nb — constant
+        ~(base-1)*KNEE-block class width — floored at
+        :data:`MIN_RUNG_GROWTH`, so a 4096-block rung pads <= ~3.1%
+        while its classes stay >= ~128 blocks wide.
+
+    ``BENCH_step_time.json`` records the resulting classes and the
+    byte-weighted ``padding_overhead_frac`` per run.
+    """
+    if not base or base <= 1.0:
+        return base
+    if nb <= 4:
+        return max(base, 2.0)
+    if nb <= RUNG_GROWTH_KNEE:
+        return base
+    # floored at MIN_RUNG_GROWTH (or at base itself when the user asked
+    # for something even finer than the floor)
+    return max(1.0 + (base - 1.0) * (RUNG_GROWTH_KNEE / nb),
+               min(base, MIN_RUNG_GROWTH))
+
+
+def scheduled_block_class(nb: int, base: Optional[float]) -> int:
+    """Smallest size class >= ``nb`` on the SINGLE scheduled ladder.
+
+    Unlike evaluating :func:`pad_block_class` with a per-``nb`` growth
+    (which would give every queried size its own ladder — a class "map"
+    that is neither monotone nor a partition, so two replans one block
+    apart could each be their own class and retrace), the ladder here is
+    built once with the step growth evaluated at the LADDER VALUE:
+    ``c -> max(c + 1, ceil(c * rung_growth(c, base)))``.  The resulting
+    class function is a true monotone partition of the block counts —
+    idempotent, with class widths that follow the schedule (coarse below
+    the knee, ~(base-1)*KNEE blocks just above it, ~3.1% of the rung in
+    the floor regime)."""
+    if nb <= 0:
+        return 0
+    if not base or base <= 1.0:
+        return int(nb)
+    c = 1
+    while c < nb:
+        g = rung_growth(c, base)
+        c = max(c + 1, int(math.ceil(c * g)))
+    return c
+
+
 def bucket_signature(level_idx: Sequence[int], sizes: Sequence[int],
                      n_levels: int, block: int = BLOCK,
                      growth: Optional[float] = None) -> Tuple[int, ...]:
     """Padded per-rung block counts — the static jit-cache key of the
-    exchange.  ``growth=None`` gives exact (unpadded) bucket sizes."""
+    exchange.  ``growth=None`` gives exact (unpadded) bucket sizes; a
+    float is the *base* growth of the scheduled class ladder
+    (:func:`scheduled_block_class`)."""
     per = [0] * n_levels
     for li, n in zip(level_idx, sizes):
         per[int(li)] += n_blocks(n, block)
     if growth:
-        per = [pad_block_class(nb, growth) for nb in per]
+        per = [scheduled_block_class(nb, growth) for nb in per]
     return tuple(per)
+
+
+def ring_chunk_count(level: Level, nb: int, n_pods: int,
+                     block: int = BLOCK,
+                     ring: Optional[int] = None) -> int:
+    """Chunk count K for one rung (0 = one-shot ``all_gather`` fallback).
+
+    Roofline heuristic over the ``launch.mesh`` constants: the ring
+    pipeline hides the per-chunk decode (HBM-bound, ~819 GB/s) behind the
+    DCN transfer of the next chunk (6.25 GB/s — >100x slower per byte, so
+    the decode always fits under the wire once the bucket is big enough),
+    at the cost of K*(P-1) ppermute launches.  A rung rings when its total
+    DCN time dominates the hop latency; K targets ~RING_TARGET_CHUNK_S of
+    wire time per chunk, clamped to [2, RING_MAX_CHUNKS] and rounded to a
+    power-of-two class so the grid — like the signature it derives from —
+    is stable across replans.
+
+    ``ring``: None = the heuristic; 0 (or negative) = force one-shot;
+    K > 0 = force K chunks on every ring-capable rung (tests, benches).
+
+    Cross-pod determinism: on a 2-pod ring (the production cloud-edge
+    mesh — the paper's regime) the ring aggregate is bit-identical to the
+    one-shot path on every pod (two-term sums commute).  For P >= 3 each
+    pod folds peers in its own ring-arrival order, so fp non-
+    associativity lets per-pod aggregates differ at ulp level while the
+    one-shot path keeps a fixed pod order — the AUTO heuristic therefore
+    only rings 2-pod meshes; forcing ``ring=K`` on a larger mesh is
+    allowed for experiments but accepts that drift (ROADMAP tracks
+    deterministic accumulation for P >= 3).
+    """
+    codec = level.codec
+    if (n_pods <= 1 or nb <= 0
+            or not getattr(codec, "supports_ring", False)):
+        return 0
+    if ring is not None:
+        return 0 if ring <= 0 else min(int(ring), nb)
+    if n_pods != 2:
+        return 0  # auto path: stay bit-deterministic across pods
+    payload = codec.payload_bytes(nb * block, block)
+    wire_t = payload * (n_pods - 1) / DCN_BW
+    # decode reads the payload + reads/writes the f32 accumulator per hop
+    decode_t = (payload + 8.0 * nb * block) * (n_pods - 1) / HBM_BW
+    # not worth pipelining: the decode we could hide is smaller than the
+    # launch overhead of even a 2-chunk ring
+    if decode_t < 2 * (n_pods - 1) * RING_HOP_LATENCY_S:
+        return 0
+    if wire_t < 8 * (n_pods - 1) * RING_HOP_LATENCY_S:
+        return 0  # latency-bound already; chunking only adds hops
+    k = int(round(wire_t / ((n_pods - 1) * RING_TARGET_CHUNK_S)))
+    k = max(2, min(RING_MAX_CHUNKS, nb, k))
+    k = 1 << (k - 1).bit_length()        # power-of-two chunk class
+    return min(k, RING_MAX_CHUNKS, nb)
+
+
+def ring_override(ring_chunks: int) -> Optional[int]:
+    """Translate ``ACESyncConfig.ring_chunks`` (0 = auto, -1 = never,
+    K = force K) into the ``ring`` argument of :func:`ring_chunk_count` /
+    :func:`exec_grid` / ``sync_tree`` (None = auto, <= 0 = force
+    one-shot, K = force K).  The ONE place the two sentinel conventions
+    meet — pass config values through here, never raw."""
+    return None if ring_chunks == 0 else int(ring_chunks)
+
+
+def exec_grid(level_idx: Sequence[int], sizes: Sequence[int],
+              levels: Sequence[Level], n_pods: int, block: int = BLOCK,
+              growth: Optional[float] = None,
+              ring: Optional[int] = None
+              ) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    """(sig, chunks) of the executed exchange: the class-padded signature
+    with each ringing rung rounded up to a chunk multiple.  The ONE place
+    the executed static shape is decided — the Scheduler's plan pricing
+    and ``build_exec_plan`` both call it, so analytic bytes match the
+    traced collectives chunk padding included."""
+    sig = list(bucket_signature(level_idx, sizes, len(levels), block,
+                                growth))
+    chunks = []
+    for r, nb in enumerate(sig):
+        k = ring_chunk_count(levels[r], nb, n_pods, block, ring)
+        if k > 1 and nb % k:
+            sig[r] = nb = ((nb + k - 1) // k) * k
+        chunks.append(k)
+    return tuple(sig), tuple(chunks)
 
 
 def sig_wire_bytes(sig: Sequence[int], levels: Sequence[Level],
                    n_pods: int, block: int = BLOCK) -> int:
     """Per-device wire bytes of an executed exchange with bucket signature
-    ``sig`` — what the collectives actually move, padding included."""
+    ``sig`` — what the collectives actually move, padding included.  The
+    ring path moves exactly the all_gather receive volume (K chunks x
+    (P-1) hops x chunk payload), so chunking never changes the per-rung
+    pricing — only the chunk-multiple rounding in :func:`exec_grid`
+    (already folded into ``sig``) does."""
     return int(sum(levels[r].wire_bytes(S * block, n_pods, block)
                    for r, S in enumerate(sig) if S))
+
+
+# ---------------------------------------------------------------------------
+# leaf layout: computed once per (model, mesh), threaded through replans
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LeafLayout:
+    """Where each leaf lands in the static flat (NB, block) buffer.
+
+    Depends only on (leaf local sizes, block) — never on the plan — so the
+    Trainer builds it ONCE at construction and every replan's
+    :func:`build_exec_plan` reuses it instead of re-deriving block counts
+    and start offsets from the full pytree (the host-side replan overhead
+    the PR-4 satellite removes)."""
+    sizes: Tuple[int, ...]
+    block: int
+    nbs: Tuple[int, ...]
+    starts: Tuple[int, ...]          # block offset of each leaf
+    total_blocks: int
+
+
+def leaf_layout(sizes: Sequence[int], block: int = BLOCK) -> LeafLayout:
+    nbs = tuple(n_blocks(n, block) for n in sizes)
+    starts, off = [], 0
+    for nb in nbs:
+        starts.append(off)
+        off += nb
+    return LeafLayout(sizes=tuple(int(n) for n in sizes), block=block,
+                      nbs=nbs, starts=tuple(starts), total_blocks=off)
 
 
 @dataclass(frozen=True)
@@ -92,16 +318,20 @@ class ExecPlan:
     Registered as a pytree: ``perms`` and ``omega`` are children (traced,
     swapped per replan), everything else is aux data (hashed into the jit
     cache key).  ``total_blocks`` is the NB of the *local* leaf layout the
-    perms index into (one zero pad block lives at index NB)."""
+    perms index into (one zero pad block lives at index NB).  ``chunks``
+    is the static per-rung chunk grid of the ring exchange (0 = one-shot;
+    see :func:`ring_chunk_count`)."""
     levels: Tuple[Level, ...]
     sig: Tuple[int, ...]              # padded block count per rung
     block: int
     total_blocks: int
     perms: Tuple[jax.Array, ...]      # int32[S_r] per rung with sig[r] > 0
     omega: jax.Array                  # f32[n_pods] aggregation weights
+    chunks: Tuple[int, ...] = ()      # ring chunk count per rung
 
     def static_key(self) -> tuple:
-        return (self.levels, self.sig, self.block, self.total_blocks)
+        return (self.levels, self.sig, self.chunks, self.block,
+                self.total_blocks)
 
     def with_omega(self, omega) -> "ExecPlan":
         return replace(self, omega=jnp.asarray(omega, jnp.float32))
@@ -110,35 +340,46 @@ class ExecPlan:
 jax.tree_util.register_pytree_node(
     ExecPlan,
     lambda ep: ((ep.perms, ep.omega),
-                (ep.levels, ep.sig, ep.block, ep.total_blocks)),
+                (ep.levels, ep.sig, ep.block, ep.total_blocks, ep.chunks)),
     lambda aux, ch: ExecPlan(levels=aux[0], sig=aux[1], block=aux[2],
-                             total_blocks=aux[3], perms=tuple(ch[0]),
-                             omega=ch[1]),
+                             total_blocks=aux[3], chunks=aux[4],
+                             perms=tuple(ch[0]), omega=ch[1]),
 )
 
 
-def build_exec_plan(plan, sizes: Sequence[int], *, block: int = BLOCK,
-                    growth: Optional[float] = None,
-                    omega=None) -> ExecPlan:
+def build_exec_plan(plan, sizes: Optional[Sequence[int]] = None, *,
+                    block: int = BLOCK, growth: Optional[float] = None,
+                    omega=None, n_pods: int = 1,
+                    ring: Optional[int] = None,
+                    layout: Optional[LeafLayout] = None) -> ExecPlan:
     """Lower a :class:`SyncPlan` to an :class:`ExecPlan`.
 
     ``sizes`` are the per-group element counts of the layout the exchange
     actually runs on — the LOCAL shard sizes when the sync executes inside
-    a data/model-manual region (see ``core.sync.local_group_sizes``).
-    ``growth``: padded-class ladder for adaptive plans (``None`` = exact
-    sizes, right for plans that never change).  The perms are numpy-built
-    (O(total_blocks), trivial next to a train step) and uploaded once per
-    distinct assignment.
+    a data/model-manual region (see ``core.sync.local_group_sizes``) —
+    or pass a prebuilt ``layout`` (:func:`leaf_layout`) to skip the
+    per-replan recomputation.  ``growth``: padded-class ladder for
+    adaptive plans (``None`` = exact sizes, right for plans that never
+    change).  ``n_pods``/``ring`` feed the chunk-grid heuristic (a 1-pod
+    build never rings).  The perms are numpy-built (O(total_blocks),
+    trivial next to a train step) and uploaded once per distinct
+    assignment.
     """
+    if layout is None:
+        if sizes is None:
+            raise ValueError("need sizes or a prebuilt layout")
+        layout = leaf_layout(sizes, block)
+    else:
+        block = layout.block
     level_idx = tuple(int(i) for i in plan.level_idx)
-    if len(level_idx) != len(sizes):
+    if len(level_idx) != len(layout.sizes):
         raise ValueError(f"plan has {len(level_idx)} groups, layout has "
-                         f"{len(sizes)}")
+                         f"{len(layout.sizes)}")
     L = len(plan.levels)
-    nbs = [n_blocks(n, block) for n in sizes]
-    starts = np.concatenate([[0], np.cumsum(nbs)]).astype(np.int64)
-    NB = int(starts[-1])
-    sig = bucket_signature(level_idx, sizes, L, block, growth)
+    nbs, starts = layout.nbs, layout.starts
+    NB = layout.total_blocks
+    sig, chunks = exec_grid(level_idx, layout.sizes, plan.levels, n_pods,
+                            block, growth, ring)
     member = [[] for _ in range(L)]
     for i, li in enumerate(level_idx):
         if nbs[i]:
@@ -158,5 +399,5 @@ def build_exec_plan(plan, sizes: Sequence[int], *, block: int = BLOCK,
         perms.append(jnp.asarray(p))
     om = plan.omega if omega is None else omega
     return ExecPlan(levels=tuple(plan.levels), sig=sig, block=block,
-                    total_blocks=NB, perms=tuple(perms),
+                    total_blocks=NB, perms=tuple(perms), chunks=chunks,
                     omega=jnp.asarray(om, jnp.float32))

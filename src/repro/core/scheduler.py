@@ -77,6 +77,7 @@ class SyncPlan:
     bucket_sig: Optional[Tuple[int, ...]] = None
     bucket_block: Optional[int] = None    # block size bucket_sig counts in
     adaptive: bool = False
+    ring_chunks: Optional[Tuple[int, ...]] = None  # per-rung chunk grid
 
     def signature(self) -> tuple:
         """Hashable key of the full assignment (legacy; the compiled step
@@ -109,12 +110,18 @@ class Scheduler:
 
     def _finalize(self, plan: SyncPlan, adaptive: bool) -> SyncPlan:
         """Attach the bucket signature the executed exchange moves (padded
-        size classes for adaptive plans, exact sizes otherwise)."""
+        size classes for adaptive plans, exact sizes otherwise — plus the
+        ring chunk grid's chunk-multiple rounding, via the same
+        ``planexec.exec_grid`` the trainer lowers with, so the priced
+        bytes track the executed collectives)."""
         plan.adaptive = adaptive
-        plan.bucket_sig = planexec.bucket_signature(
-            plan.level_idx, self.sizes, len(plan.levels),
+        sig, chunks = planexec.exec_grid(
+            plan.level_idx, self.sizes, plan.levels, self.n_pods,
             block=self.cfg.topk_block,
-            growth=self.pad_growth if adaptive else None)
+            growth=self.pad_growth if adaptive else None,
+            ring=planexec.ring_override(self.cfg.ring_chunks))
+        plan.bucket_sig = sig
+        plan.ring_chunks = chunks
         plan.bucket_block = self.cfg.topk_block
         return plan
 

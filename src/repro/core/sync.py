@@ -16,14 +16,22 @@ leaf is laid out block-aligned in ONE static flat (NB, block) buffer, and
 per ladder rung a gather permutation (``repro.core.planexec.ExecPlan`` —
 ordinary device data) repacks the member leaves into one contiguous
 per-rung buffer.  Each rung runs its codec's fused EF + compress +
-exchange round on that buffer (at most ONE pod collective per rung with a
-non-empty bucket), and the aggregate/residual are scattered back through
-the same permutation.  Only the tuple of padded per-rung block counts —
-the bucket-shape signature — is static, so a replan that keeps the
-signature swaps permutations without recompiling
+exchange round on that buffer — ONE pod collective (all_gather/psum) for
+small buckets, or the plan's K-chunk ``ppermute`` ring for DCN-bound ones
+(``Codec.ef_sync_ring``: the transfer of chunk *i* hides the
+decode-accumulate of chunk *i-1*; exactly the same bytes on the wire) —
+and the aggregate/residual are scattered back through the same
+permutation.  Only the tuple of padded per-rung block counts — the
+bucket-shape signature — plus the per-rung chunk grid is static, so a
+replan that keeps the signature swaps permutations without recompiling
 (tests/test_replan.py pins this; tests/test_collectives.py keeps pinning
-the ≤-one-collective-per-rung and analytic==traced byte contracts, now
-with the per-leaf block padding priced explicitly).
+the collectives-per-rung and analytic==traced byte contracts, now with
+the per-leaf block padding priced explicitly).
+
+The trainer-level counterpart is rung-ordered apply (``apply_fn``): the
+optimizer consumes each rung's aggregate the moment it lands, so the
+apply of rung r overlaps the exchange of rung r+1 instead of barriering
+on the whole tree.
 
 Wire formats are pluggable :class:`repro.codecs.base.Codec` objects (FULL
 bf16-psum, dense INT8 / packed INT4, block top-k, 1-bit sign with majority
@@ -165,8 +173,25 @@ def _leaf_blocks(leaves, block: int) -> jax.Array:
     return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
 
 
-def _repack_sync_local(gs, es, perms, omega, omega_own, *, ep: ExecPlan,
-                       gamma, n_pods, use_pallas):
+def _rung_exchange(codec, bucket, ebucket, omega, omega_own, *, chunks,
+                   gamma, n_pods, block, use_pallas):
+    """One rung's EF + compress + exchange round: the chunked ring
+    pipeline when the plan's chunk grid says so (``chunks > 0``; see
+    ``planexec.ring_chunk_count``), the one-shot ``all_gather`` path
+    otherwise."""
+    if chunks and n_pods > 1:
+        return codec.ef_sync_ring(
+            bucket, ebucket, omega, omega_own, gamma=gamma,
+            n_pods=n_pods, n_chunks=chunks, block=block, axis=POD_AXIS,
+            use_pallas=use_pallas)
+    return codec.ef_sync(
+        bucket, ebucket, omega, omega_own, gamma=gamma, n_pods=n_pods,
+        block=block, axis=POD_AXIS, use_pallas=use_pallas)
+
+
+def _repack_sync_local(gs, es, perms, omega, omega_own, aux, scalars, *,
+                       ep: ExecPlan, gamma, n_pods, use_pallas,
+                       apply_fn=None):
     """Fully local per-device sync of the whole tree through the plan's
     gather/scatter repacking.
 
@@ -174,9 +199,18 @@ def _repack_sync_local(gs, es, perms, omega, omega_own, *, ep: ExecPlan,
     in leaf order.  They are packed into the static block layout, each
     rung's bucket is gathered through its permutation (device data — the
     only thing a replan changes), pushed through the codec's fused EF +
-    compress + exchange round (at most one pod collective per rung), and
-    scattered back.  Pad blocks gather the zero row at index NB and
+    compress + exchange round (ring-chunked where the plan says so),
+    and scattered back.  Pad blocks gather the zero row at index NB and
     scatter into it, so they never touch real data.
+
+    Rung-ordered apply: with ``apply_fn`` set, ``aux`` is a tuple of
+    leaf-tuples (e.g. params / m / v) packed into the same block layout,
+    and ``apply_fn(agg_rows, aux_rows, scalars)`` (all ``(S, block)``
+    f32) consumes each rung's aggregate AS SOON AS that rung's exchange
+    lands — the optimizer math for rung r carries no data dependence on
+    rung r+1's collective, so XLA overlaps the apply with the next rung's
+    DCN transfer instead of barriering on the whole tree.  Returns
+    ``(aux_out_tuples, errs)`` instead of ``(aggs, errs)``.
     """
     block = ep.block
     fb = _leaf_blocks(gs, block)
@@ -187,7 +221,9 @@ def _repack_sync_local(gs, es, perms, omega, omega_own, *, ep: ExecPlan,
     zrow = jnp.zeros((1, block), jnp.float32)
     fb = jnp.concatenate([fb, zrow])
     eb = jnp.concatenate([eb, zrow])
-    agg = jnp.zeros((NB + 1, block), jnp.float32)
+    abufs = [jnp.concatenate([_leaf_blocks(a, block), zrow]) for a in aux]
+    agg = None if apply_fn is not None \
+        else jnp.zeros((NB + 1, block), jnp.float32)
     err = jnp.zeros((NB + 1, block), jnp.float32)
     pi = 0
     for r, S in enumerate(ep.sig):
@@ -196,22 +232,37 @@ def _repack_sync_local(gs, es, perms, omega, omega_own, *, ep: ExecPlan,
         perm = perms[pi]
         pi += 1
         codec = ep.levels[r].codec
-        b_agg, b_err = codec.ef_sync(
-            fb[perm].reshape(-1), eb[perm].reshape(-1), omega, omega_own,
-            gamma=gamma, n_pods=n_pods, block=block, axis=POD_AXIS,
+        b_agg, b_err = _rung_exchange(
+            codec, fb[perm].reshape(-1), eb[perm].reshape(-1), omega,
+            omega_own, chunks=ep.chunks[r] if ep.chunks else 0,
+            gamma=gamma, n_pods=n_pods, block=block,
             use_pallas=use_pallas)
-        agg = agg.at[perm].set(b_agg.reshape(S, block))
         err = err.at[perm].set(b_err.reshape(S, block))
-    agg = agg[:NB].reshape(-1)
+        if apply_fn is None:
+            agg = agg.at[perm].set(b_agg.reshape(S, block))
+        else:
+            rows = apply_fn(b_agg.reshape(S, block),
+                            tuple(ab[perm] for ab in abufs), scalars)
+            abufs = [ab.at[perm].set(nr)
+                     for ab, nr in zip(abufs, rows)]
     err = err[:NB].reshape(-1)
-    outs, errs, boff = [], [], 0
-    for g, e in zip(gs, es):
-        n = math.prod(g.shape)
-        o = boff * block
-        outs.append(agg[o:o + n].reshape(g.shape).astype(g.dtype))
-        errs.append(err[o:o + n].reshape(e.shape).astype(e.dtype))
-        boff += n_blocks(n, block)
-    return tuple(outs), tuple(errs)
+
+    def unpack(flat_buf, like):
+        outs, boff = [], 0
+        for leaf in like:
+            n = math.prod(leaf.shape)
+            o = boff * block
+            outs.append(flat_buf[o:o + n].reshape(leaf.shape)
+                        .astype(leaf.dtype))
+            boff += n_blocks(n, block)
+        return tuple(outs)
+
+    errs = unpack(err, es)
+    if apply_fn is None:
+        return unpack(agg[:NB].reshape(-1), gs), errs
+    outs = tuple(unpack(ab[:NB].reshape(-1), a)
+                 for ab, a in zip(abufs, aux))
+    return outs, errs
 
 
 # ---------------------------------------------------------------------------
@@ -225,7 +276,9 @@ def _auto_axes(mesh):
 
 def sync_tree(tree, errors, plan: Union[SyncPlan, ExecPlan], *, mesh,
               shardings, gamma: float, block: int = C.BLOCK,
-              inside_manual: bool = None, use_pallas: bool = None):
+              inside_manual: bool = None, use_pallas: bool = None,
+              ring: Optional[int] = None, apply_fn=None, apply_aux=(),
+              apply_scalars=()):
     """Compress + hierarchically aggregate a gradient (or delta) pytree.
 
     Must be called inside the outer per-pod shard_map when the mesh has a
@@ -236,9 +289,22 @@ def sync_tree(tree, errors, plan: Union[SyncPlan, ExecPlan], *, mesh,
     retrace-free form whose gather perms and omega are traced device data
     (the trainer's hot path) — or a host :class:`SyncPlan`, which is
     lowered at trace time with exact (unpadded) bucket sizes, perms baked
-    as constants.  Both run the same static-shape exchange: at most one
-    pod collective per rung with a non-empty bucket
-    (tests/test_collectives.py counts them in the lowered HLO).
+    as constants.  Both run the same static-shape exchange: per rung with
+    a non-empty bucket either ONE pod collective (the one-shot path) or
+    the plan's K-chunk ``ppermute`` ring (big DCN-bound buckets; same
+    bytes on the wire — tests/test_collectives.py counts both in the
+    lowered HLO).  ``ring`` tunes the chunk heuristic for the SyncPlan
+    lowering path (None = roofline auto, 0 = force one-shot, K = force K
+    chunks; ExecPlans already carry their chunk grid).
+
+    Rung-ordered apply: with ``apply_fn`` given, ``apply_aux`` is a tuple
+    of pytrees shaped like ``tree`` (e.g. params / m / v) and the sync
+    consumes each rung's aggregate in place of returning it —
+    ``apply_fn(agg_rows, aux_rows, apply_scalars)`` maps the rung bucket's
+    ``(S, block)`` f32 rows to updated aux rows, and the return value is
+    ``(tuple_of_new_aux_trees, new_errors)``.  This is how the trainer
+    overlaps the optimizer with the exchange: rung r's update depends
+    only on rung r's collective, not on a whole-tree barrier.
 
     ``inside_manual``: whether we are already inside a shard_map (then the
     nested shard_map must infer the context mesh); default: pod axis
@@ -268,7 +334,8 @@ def sync_tree(tree, errors, plan: Union[SyncPlan, ExecPlan], *, mesh,
                    for l, s in zip(leaves, s_leaves)]
         else:
             lsz = [math.prod(l.shape) for l in leaves]
-        ep = build_exec_plan(plan, lsz, block=block, growth=None)
+        ep = build_exec_plan(plan, lsz, block=block, growth=None,
+                             n_pods=n_pods, ring=ring)
     else:
         ep = plan
 
@@ -283,8 +350,11 @@ def sync_tree(tree, errors, plan: Union[SyncPlan, ExecPlan], *, mesh,
         omega_own = omega[0]
 
     fn = functools.partial(_repack_sync_local, ep=ep, gamma=gamma,
-                           n_pods=n_pods, use_pallas=use_pallas)
+                           n_pods=n_pods, use_pallas=use_pallas,
+                           apply_fn=apply_fn)
     gs, es = tuple(leaves), tuple(e_leaves)
+    aux = tuple(tuple(treedef.flatten_up_to(a)) for a in apply_aux)
+    scalars = tuple(apply_scalars)
     if nested:
         aspecs = []
         for s in s_leaves:
@@ -294,21 +364,31 @@ def sync_tree(tree, errors, plan: Union[SyncPlan, ExecPlan], *, mesh,
                               for ax in aspec]))
         aspecs = tuple(aspecs)
         pspecs = tuple(P(None) for _ in ep.perms)
+        aux_specs = tuple(aspecs for _ in aux)
+        scalar_specs = tuple(P() for _ in scalars)
+        out_main = (tuple(aspecs for _ in aux) if apply_fn is not None
+                    else aspecs)
         inner = compat.shard_map(
             fn, mesh,
-            in_specs=(aspecs, aspecs, pspecs, P(None), P()),
-            out_specs=(aspecs, aspecs),
+            in_specs=(aspecs, aspecs, pspecs, P(None), P(), aux_specs,
+                      scalar_specs),
+            out_specs=(out_main, aspecs),
             manual_axes=set(_auto_axes(mesh)),
             # surrounding per-pod shard_map (if any) provides the mesh
             infer_mesh=inside_manual)
-        aggs, news = inner(gs, es, ep.perms, omega, omega_own)
+        aggs, news = inner(gs, es, ep.perms, omega, omega_own, aux,
+                           scalars)
     else:
         # no mesh, or old-jax fully-manual region (leaves replicated
         # over data/model there): device-local math, pod collectives
         # still bound by the enclosing manual region
-        aggs, news = fn(gs, es, ep.perms, omega, omega_own)
-    return (jax.tree_util.tree_unflatten(treedef, list(aggs)),
-            jax.tree_util.tree_unflatten(treedef, list(news)))
+        aggs, news = fn(gs, es, ep.perms, omega, omega_own, aux, scalars)
+    news_tree = jax.tree_util.tree_unflatten(treedef, list(news))
+    if apply_fn is not None:
+        out_trees = tuple(jax.tree_util.tree_unflatten(treedef, list(a))
+                          for a in aggs)
+        return out_trees, news_tree
+    return jax.tree_util.tree_unflatten(treedef, list(aggs)), news_tree
 
 
 def grad_group_stats(tree):

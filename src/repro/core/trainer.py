@@ -44,6 +44,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro import compat
 from repro.configs.base import RunConfig
 from repro.core import acesync
+from repro.core import planexec
 from repro.core import sync as S
 from repro.core import divergence as D
 from repro.core.planexec import ExecPlan, build_exec_plan
@@ -87,9 +88,14 @@ class Trainer:
                                    [m.size for m in self.metas],
                                    self.n_pods)
         # per-group element counts of the layout the exchange runs on
-        # (local shard sizes under the nested data/model-manual region)
+        # (local shard sizes under the nested data/model-manual region),
+        # and the block layout derived from them — both computed ONCE here
+        # and threaded through every replan (TrainLoop / exec_plan) so a
+        # replan poll never re-walks the param pytree
         self.local_sizes = S.local_group_sizes(
             self.param_specs, self.param_shardings, mesh)
+        self.leaf_layout = planexec.leaf_layout(self.local_sizes,
+                                                run.acesync.topk_block)
         self._step_cache: Dict = {}    # (levels, sig, block, kind) -> jit fn
         self._exec_cache: Dict = {}    # (levels, level_idx, adaptive) -> EP
 
@@ -194,13 +200,45 @@ class Trainer:
     def _body_grad_sync(self, state, batch, plan: ExecPlan):
         st = self._split_pod(state)
         loss, grads, gnorm = self._grad_step(st["params"], batch)
-        agg, new_ace, metrics = acesync.sync_gradients(
-            grads, st["ace"], plan, mesh=self.mesh,
-            shardings=self.param_shardings, cfg=self.run.acesync)
-        new_params, opt = self._optimize(st["params"], agg, st["m"],
-                                         st["v"], st["step"])
-        new_st = dict(st, params=new_params, m=opt["m"], v=opt["v"],
-                      step=st["step"] + 1, ace=new_ace)
+        run = self.run
+        if run.acesync.overlap_apply:
+            # rung-ordered apply: AdamW runs on each rung's bucket the
+            # moment that rung's exchange lands (no data dependence on
+            # the later rungs' collectives), so the optimizer FLOPs hide
+            # behind the next rung's DCN transfer instead of waiting on a
+            # whole-tree barrier after sync_tree.  Same elementwise math
+            # as _optimize, on the exchange's (S, block) f32 rows.
+            lr = adamw.cosine_schedule(st["step"], base_lr=run.lr,
+                                       warmup=run.warmup_steps,
+                                       total=run.total_steps)
+            bc1, bc2 = adamw.bias_corrections(st["step"], run.beta1,
+                                              run.beta2)
+
+            def apply_rows(g_rows, aux_rows, scalars):
+                p, m, v = aux_rows
+                lr_s, bc1_s, bc2_s = scalars
+                return adamw.update_rows(
+                    p, g_rows, m, v, lr=lr_s, bc1=bc1_s, bc2=bc2_s,
+                    beta1=run.beta1, beta2=run.beta2,
+                    weight_decay=run.weight_decay)
+
+            out, new_ace, metrics = acesync.sync_gradients(
+                grads, st["ace"], plan, mesh=self.mesh,
+                shardings=self.param_shardings, cfg=run.acesync,
+                apply_fn=apply_rows,
+                apply_aux=(st["params"], st["m"], st["v"]),
+                apply_scalars=(lr, bc1, bc2))
+            new_params, new_m, new_v = out
+            new_st = dict(st, params=new_params, m=new_m, v=new_v,
+                          step=st["step"] + 1, ace=new_ace)
+        else:
+            agg, new_ace, metrics = acesync.sync_gradients(
+                grads, st["ace"], plan, mesh=self.mesh,
+                shardings=self.param_shardings, cfg=run.acesync)
+            new_params, opt = self._optimize(st["params"], agg, st["m"],
+                                             st["v"], st["step"])
+            new_st = dict(st, params=new_params, m=opt["m"], v=opt["v"],
+                          step=st["step"] + 1, ace=new_ace)
         metrics = dict(metrics, loss=self._pmean(loss),
                        grad_norm=self._pmean(gnorm))
         return self._join_pod(new_st), metrics
@@ -274,10 +312,12 @@ class Trainer:
         key = (plan.levels, plan.level_idx, plan.adaptive)
         ep = self._exec_cache.get(key)
         if ep is None:
+            cfg = self.run.acesync
             growth = self.scheduler.pad_growth if plan.adaptive else None
-            ep = build_exec_plan(plan, self.local_sizes,
-                                 block=self.run.acesync.topk_block,
-                                 growth=growth)
+            ep = build_exec_plan(plan, layout=self.leaf_layout,
+                                 growth=growth, n_pods=self.n_pods,
+                                 ring=planexec.ring_override(
+                                     cfg.ring_chunks))
             # bounded: adaptive runs see a fresh assignment nearly every
             # replan, and each entry holds O(total_blocks) device perms —
             # evict oldest-first, rebuilding is a cheap numpy pass

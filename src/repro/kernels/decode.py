@@ -1,0 +1,152 @@
+"""Pallas TPU kernels: fused decode-accumulate for the ring exchange.
+
+The chunked ring pipeline (``Codec.ef_sync_ring``) folds ONE peer's
+payload chunk into the running aggregate per hop:
+
+    acc += weight * decode(payload_chunk)
+
+Done naively that is two HBM passes (materialise the dense decode, then
+FMA).  These kernels fuse dequantisation + weighted accumulate into one
+VMEM pass per (8, 1024) tile — the decode compute the ring hides behind
+the DCN transfer of the next chunk:
+
+  * int8:  acc += w * (q * scale)          (dequant-add)
+  * int4:  unpack two nibbles per byte, then dequant-add
+  * sign:  majority-vote partial counts: vote += w * (+-1 signs unpacked
+           from the bit-packed wire), mag += w * scale
+  * topk:  scatter-add the k (value, index) pairs per block into the
+           dense accumulator (one-hot lane compare per kept entry)
+
+``weight`` is a TRACED scalar (the omega entry of the sending pod — plan
+data, swapped per replan), so it rides as a (1, 1) operand instead of a
+baked constant.  The arithmetic association matches the jnp oracle path
+(``acc + w * (q * scale)``) bit for bit on identical inputs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.quantize import unpack_nibbles
+from repro.kernels.topk_compress import LANES, ROWS
+
+_spec = pl.BlockSpec((ROWS, LANES), lambda i: (i, 0))
+_sspec = pl.BlockSpec((ROWS, 1), lambda i: (i, 0))
+_wspec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+
+
+def unpack_signs(packed):
+    """(rows, C // 8) uint8 bit-packed -> (rows, C) f32 {-1, +1} signs.
+    Same bit layout as ``repro.codecs.base.unpack_bits`` (bit i of byte b
+    = column 8b+i); plain jnp, so it runs inside the kernel body and in
+    the oracle ref alike."""
+    bits = ((packed[:, :, None] >>
+             jnp.arange(8, dtype=jnp.uint8)) & 1).astype(jnp.float32)
+    return bits.reshape(packed.shape[0], packed.shape[1] * 8) * 2.0 - 1.0
+
+
+def _int8_kernel(acc_ref, q_ref, s_ref, w_ref, out_ref):
+    w = w_ref[0, 0]
+    q = q_ref[...].astype(jnp.float32)
+    out_ref[...] = acc_ref[...] + w * (q * s_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequant_accum_int8_fused(acc, q, s, w, *, interpret: bool = False):
+    """acc (rows, LANES) f32, q int8, s (rows, 1) f32, w (1, 1) f32
+    -> acc + w * (q * s) in one pass."""
+    n_rows, lanes = acc.shape
+    assert lanes == LANES and n_rows % ROWS == 0, (acc.shape,)
+    return pl.pallas_call(
+        _int8_kernel,
+        grid=(n_rows // ROWS,),
+        in_specs=[_spec, _spec, _sspec, _wspec],
+        out_specs=_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rows, LANES), jnp.float32),
+        interpret=interpret,
+    )(acc, q, s, w)
+
+
+def _int4_kernel(acc_ref, p_ref, s_ref, w_ref, out_ref):
+    w = w_ref[0, 0]
+    q = unpack_nibbles(p_ref[...])
+    out_ref[...] = acc_ref[...] + w * (q * s_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequant_accum_int4_fused(acc, p, s, w, *, interpret: bool = False):
+    """acc (rows, LANES) f32, p (rows, LANES // 2) uint8 packed nibbles,
+    s (rows, 1) f32, w (1, 1) f32 -> acc + w * dequant(p, s)."""
+    n_rows, lanes = acc.shape
+    assert lanes == LANES and n_rows % ROWS == 0, (acc.shape,)
+    pspec = pl.BlockSpec((ROWS, LANES // 2), lambda i: (i, 0))
+    return pl.pallas_call(
+        _int4_kernel,
+        grid=(n_rows // ROWS,),
+        in_specs=[_spec, pspec, _sspec, _wspec],
+        out_specs=_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rows, LANES), jnp.float32),
+        interpret=interpret,
+    )(acc, p, s, w)
+
+
+def _sign_kernel(vote_ref, mag_ref, p_ref, s_ref, w_ref, vout_ref,
+                 mout_ref):
+    w = w_ref[0, 0]
+    vout_ref[...] = vote_ref[...] + w * unpack_signs(p_ref[...])
+    mout_ref[...] = mag_ref[...] + w * s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sign_vote_accum_fused(vote, mag, p, s, w, *, interpret: bool = False):
+    """Majority-vote partials: vote (rows, LANES) f32 += w * signs
+    (unpacked from p (rows, LANES // 8) uint8), mag (rows, 1) f32
+    += w * s."""
+    n_rows, lanes = vote.shape
+    assert lanes == LANES and n_rows % ROWS == 0, (vote.shape,)
+    pspec = pl.BlockSpec((ROWS, LANES // 8), lambda i: (i, 0))
+    return pl.pallas_call(
+        _sign_kernel,
+        grid=(n_rows // ROWS,),
+        in_specs=[_spec, _sspec, pspec, _sspec, _wspec],
+        out_specs=[_spec, _sspec],
+        out_shape=[jax.ShapeDtypeStruct((n_rows, LANES), jnp.float32),
+                   jax.ShapeDtypeStruct((n_rows, 1), jnp.float32)],
+        interpret=interpret,
+    )(vote, mag, p, s, w)
+
+
+def _topk_kernel(acc_ref, q_ref, i_ref, s_ref, w_ref, out_ref, *, k: int):
+    w = w_ref[0, 0]
+    vals = q_ref[...].astype(jnp.float32) * s_ref[...]   # (ROWS, k) dense
+    idx = i_ref[...].astype(jnp.int32)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (ROWS, LANES), 1)
+    acc = acc_ref[...]
+
+    def body(j, acc):
+        hot = (lanes == idx[:, j][:, None]).astype(jnp.float32)
+        return acc + hot * (w * vals[:, j][:, None])
+
+    out_ref[...] = jax.lax.fori_loop(0, k, body, acc)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def topk_scatter_accum_fused(acc, q, idx, s, w, *, interpret: bool = False):
+    """acc (rows, LANES) f32 += w * scatter(q * s at idx): the top-k
+    rung's decode-accumulate.  Indices are distinct per block (top_k), so
+    the one-hot accumulation never double-counts a lane."""
+    n_rows, lanes = acc.shape
+    k = q.shape[1]
+    assert lanes == LANES and n_rows % ROWS == 0, (acc.shape,)
+    kspec = pl.BlockSpec((ROWS, k), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_topk_kernel, k=k),
+        grid=(n_rows // ROWS,),
+        in_specs=[_spec, kspec, kspec, _sspec, _wspec],
+        out_specs=_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rows, LANES), jnp.float32),
+        interpret=interpret,
+    )(acc, q, idx, s, w)

@@ -29,6 +29,10 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.topk_compress import ef_topk_select, LANES, ROWS
+from repro.kernels.decode import (dequant_accum_int4_fused,
+                                  dequant_accum_int8_fused,
+                                  sign_vote_accum_fused,
+                                  topk_scatter_accum_fused)
 from repro.kernels.quantize import (quantize_int8_fused, dequantize_int8,
                                     ef_int4_fused)
 from repro.kernels.sign import ef_sign_fused
@@ -123,6 +127,77 @@ def ef_int4(g_flat, e_flat, *, gamma: float, use_pallas: bool = True):
     else:
         p, s, r = ref.ef_int4_ref(g2, e2, gamma=gamma)
     return p, s, r.reshape(-1)[:n], n
+
+
+def _pad_rows2(a, rows, fill=0):
+    """Pad dim 0 of ``a`` up to ``rows`` (kernel tiles want ROWS
+    multiples; the pad rows carry zero payload and are sliced off)."""
+    if a.shape[0] == rows:
+        return a
+    pad = [(0, rows - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
+    return jnp.pad(a, pad, constant_values=fill)
+
+
+def _w2(w):
+    return jnp.asarray(w, jnp.float32).reshape(1, 1)
+
+
+def decode_accum_int8(acc, q, s, w, *, use_pallas: bool = True):
+    """acc (nb, LANES) f32 += w * (q * s) fused — the int8 rung's ring
+    decode-accumulate.  ``s``: (nb,) f32 per-block scales."""
+    nb = acc.shape[0]
+    rows = ((nb + ROWS - 1) // ROWS) * ROWS
+    args = (_pad_rows2(acc, rows), _pad_rows2(q, rows),
+            _pad_rows2(s.reshape(-1, 1), rows), _w2(w))
+    if use_pallas:
+        out = dequant_accum_int8_fused(*args, interpret=interpret_mode())
+    else:
+        out = ref.dequant_accum_int8_ref(*args)
+    return out[:nb]
+
+
+def decode_accum_int4(acc, p, s, w, *, use_pallas: bool = True):
+    """acc (nb, LANES) f32 += w * dequant(p packed nibbles, s) fused."""
+    nb = acc.shape[0]
+    rows = ((nb + ROWS - 1) // ROWS) * ROWS
+    args = (_pad_rows2(acc, rows), _pad_rows2(p, rows),
+            _pad_rows2(s.reshape(-1, 1), rows), _w2(w))
+    if use_pallas:
+        out = dequant_accum_int4_fused(*args, interpret=interpret_mode())
+    else:
+        out = ref.dequant_accum_int4_ref(*args)
+    return out[:nb]
+
+
+def sign_vote_accum(vote, mag, p, s, w, *, use_pallas: bool = True):
+    """Majority-vote partials: vote (nb, LANES) += w * unpacked signs,
+    mag (nb,) += w * s, fused."""
+    nb = vote.shape[0]
+    rows = ((nb + ROWS - 1) // ROWS) * ROWS
+    args = (_pad_rows2(vote, rows), _pad_rows2(mag.reshape(-1, 1), rows),
+            _pad_rows2(p, rows), _pad_rows2(s.reshape(-1, 1), rows),
+            _w2(w))
+    if use_pallas:
+        v, m = sign_vote_accum_fused(*args, interpret=interpret_mode())
+    else:
+        v, m = ref.sign_vote_accum_ref(*args)
+    return v[:nb], m[:nb].reshape(-1)
+
+
+def topk_scatter_accum(acc, q, idx, s, w, *, use_pallas: bool = True):
+    """acc (nb, LANES) += w * scatter(q * s at idx) fused — the top-k
+    rung's ring decode-accumulate."""
+    nb = acc.shape[0]
+    rows = ((nb + ROWS - 1) // ROWS) * ROWS
+    args = (_pad_rows2(acc, rows), _pad_rows2(q, rows),
+            _pad_rows2(idx, rows), _pad_rows2(s.reshape(-1, 1), rows),
+            _w2(w))
+    if use_pallas:
+        out = topk_scatter_accum_fused(*args, interpret=interpret_mode())
+    else:
+        out = ref.topk_scatter_accum_ref(args[0], args[1], args[2],
+                                         args[3], args[4])
+    return out[:nb]
 
 
 def ef_sign(g_flat, e_flat, *, gamma: float, use_pallas: bool = True):

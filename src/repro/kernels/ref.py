@@ -39,6 +39,26 @@ def ef_sign_ref(g, e, *, gamma: float):
     return sign.astype(jnp.int8), scale, ef - sign * scale
 
 
+def dequant_accum_int8_ref(acc, q, s, w):
+    return acc + w * (q.astype(jnp.float32) * s)
+
+
+def dequant_accum_int4_ref(acc, p, s, w):
+    from repro.kernels.quantize import unpack_nibbles
+    return acc + w * (unpack_nibbles(p) * s)
+
+
+def sign_vote_accum_ref(vote, mag, p, s, w):
+    from repro.kernels.decode import unpack_signs
+    return vote + w * unpack_signs(p), mag + w * s
+
+
+def topk_scatter_accum_ref(acc, q, idx, s, w):
+    vals = q.astype(jnp.float32) * s
+    rows = jnp.arange(acc.shape[0])[:, None]
+    return acc.at[rows, idx.astype(jnp.int32)].add(w * vals)
+
+
 def exact_topk_mask(x, k):
     """Exact per-row top-k mask (what sync.py's lax.top_k path selects) —
     used to bound the bisection kernel's approximation in property tests."""

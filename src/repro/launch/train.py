@@ -137,12 +137,17 @@ class TrainLoop:
                 dev_fn(imp0, ace.struct_feat[0], budget))
             self._pending_replan = (assign, omega, self._host_step or step)
             return self._plan
-        # host path: the first plan, and strategies without a device solver
+        # host path: the first plan, and strategies without a device solver.
+        # Only the estimator's few-hundred-scalar state is sliced and
+        # fetched — never the param-sized error buffers in ACEState (the
+        # group metas / local sizes / leaf layout are likewise computed
+        # once at Trainer construction, not re-derived per replan poll).
         imp = None
         if self.strategy.uses_importance and state is not None:
-            imp = np.asarray(jax.device_get(acesync.current_scores(
-                jax.tree.map(lambda x: x[0], state["ace"]),
-                cfg))).tolist()
+            ace = state["ace"]
+            imp0 = jax.tree.map(lambda x: x[0], ace.importance)
+            imp = np.asarray(jax.device_get(acesync.scores_from(
+                imp0, ace.struct_feat[0], cfg))).tolist()
         self._plan = self.strategy.make_plan(
             self.trainer.scheduler, importance=imp, telemetry=telem,
             omega=omega)

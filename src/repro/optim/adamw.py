@@ -25,22 +25,40 @@ def clip_by_global_norm(tree, max_norm: float):
     return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), norm
 
 
+def bias_corrections(step, beta1: float, beta2: float):
+    """(bc1, bc2) for the Adam moment bias correction at ``step``."""
+    t = step.astype(jnp.float32) + 1.0
+    return 1.0 - beta1 ** t, 1.0 - beta2 ** t
+
+
+def update_rows(p, g, m, v, *, lr, bc1, bc2, beta1=0.9, beta2=0.95,
+                eps=1e-8, weight_decay=0.1):
+    """The elementwise AdamW update on arbitrary same-shape f32 buffers —
+    layout-free, so the trainer's rung-ordered apply can run it on a
+    rung's ``(S, block)`` bucket rows the moment that rung's exchange
+    lands.  Identical math (same association, same dtypes) to the
+    whole-tree :func:`adamw_update` path.  Returns (p', m', v') in f32;
+    the caller casts back to storage dtypes."""
+    g32 = g.astype(jnp.float32)
+    p32 = p.astype(jnp.float32)
+    m_new = beta1 * m + (1 - beta1) * g32
+    v_new = beta2 * v + (1 - beta2) * g32 * g32
+    mh = m_new / bc1
+    vh = v_new / bc2
+    p_new = p32 - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p32)
+    return p_new, m_new, v_new
+
+
 def adamw_update(params, grads, opt_state, step, *, lr, beta1=0.9,
                  beta2=0.95, eps=1e-8, weight_decay=0.1):
     """One AdamW step. ``lr`` may be a traced scalar. Returns
     (new_params, new_opt_state)."""
-    t = step.astype(jnp.float32) + 1.0
-    bc1 = 1.0 - beta1 ** t
-    bc2 = 1.0 - beta2 ** t
+    bc1, bc2 = bias_corrections(step, beta1, beta2)
 
     def upd(p, g, m, v):
-        g32 = g.astype(jnp.float32)
-        p32 = p.astype(jnp.float32)
-        m_new = beta1 * m + (1 - beta1) * g32
-        v_new = beta2 * v + (1 - beta2) * g32 * g32
-        mh = m_new / bc1
-        vh = v_new / bc2
-        p_new = p32 - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p32)
+        p_new, m_new, v_new = update_rows(
+            p, g, m, v, lr=lr, bc1=bc1, bc2=bc2, beta1=beta1, beta2=beta2,
+            eps=eps, weight_decay=weight_decay)
         return p_new.astype(p.dtype), m_new, v_new
 
     flat_p, tdef = jax.tree_util.tree_flatten(params)

@@ -111,3 +111,122 @@ def test_bucketed_sync_collectives_subprocess():
                        capture_output=True, text=True, timeout=600)
     assert r.returncode == 0, r.stderr[-3000:]
     assert "COLLECTIVES_OK" in r.stdout
+
+
+RING_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core import sync as S
+from repro.core.compression import Level
+from repro.core.planexec import build_exec_plan, sig_wire_bytes
+from repro.core.scheduler import SyncPlan
+from repro.launch.mesh import make_mesh
+from benchmarks import hlo_cost
+
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+# every ring-capable codec rings; FULL/SKIP stay on their one-shot path
+levels = (Level("INT8", 1.0, 8), Level("TOPK10", 0.10, 8),
+          Level("SIGN1", 1.0, 1), Level("INT4", 1.0, 4),
+          Level("FULL", 1.0, 16), Level("SKIP", 0.0, 0))
+idx = tuple(range(6))
+sizes = [6000, 8192, 4100, 6000, 2048, 700]
+plan = SyncPlan(idx, levels, (0.6, 0.4), 1)
+
+r = np.random.RandomState(7)
+tree = {f"p{i}": jnp.asarray(r.randn(n).astype(np.float32))
+        for i, n in enumerate(sizes)}
+errors = jax.tree.map(lambda x: jnp.ones_like(x) * 0.03, tree)
+K = 2
+ep_ring = build_exec_plan(plan, sizes, n_pods=2, ring=K)
+ep_one = build_exec_plan(plan, sizes, n_pods=2, ring=0)
+assert ep_ring.chunks == (K, K, K, K, 0, 0), ep_ring.chunks
+assert ep_one.chunks == (0,) * 6, ep_one.chunks
+# chunk rounding only pads rungs whose class is not a K multiple
+assert all(s % K == 0 for s, c in zip(ep_ring.sig, ep_ring.chunks) if c)
+
+
+def run(ep):
+    def inner(t, e):
+        return S.sync_tree(t, e, ep, mesh=mesh, shardings=None,
+                           gamma=0.9, inside_manual=True)
+    smapped = compat.shard_map(
+        inner, mesh,
+        in_specs=(jax.tree.map(lambda _: P(), tree),
+                  jax.tree.map(lambda _: P(), errors)),
+        out_specs=(jax.tree.map(lambda _: P(), tree),
+                   jax.tree.map(lambda _: P(), errors)),
+        manual_axes=set(mesh.axis_names))
+    return jax.jit(smapped)
+
+
+fn_ring, fn_one = run(ep_ring), run(ep_one)
+
+# --- exchange parity: ring == one-shot ----------------------------------
+agg_r, err_r = fn_ring(tree, errors)
+agg_o, err_o = fn_one(tree, errors)
+for k in tree:
+    # residuals are device-local (no exchange in the loop): bit-exact
+    np.testing.assert_array_equal(np.asarray(jax.device_get(err_r[k])),
+                                  np.asarray(jax.device_get(err_o[k])),
+                                  err_msg=k)
+    # aggregates: the same omega-weighted two-term sums; XLA fusion may
+    # re-associate the dense FMA by 1 ulp
+    np.testing.assert_allclose(np.asarray(jax.device_get(agg_r[k])),
+                               np.asarray(jax.device_get(agg_o[k])),
+                               rtol=3e-7, atol=3e-7, err_msg=k)
+
+# --- traced-HLO: exactly K ppermutes per ringing rung, same pod bytes ---
+import re
+txt = fn_ring.lower(tree, errors).compile().as_text()
+rep = hlo_cost.analyze(txt, (2, 2, 2), ("pod", "data", "model"))
+n_ring_rungs = sum(1 for c in ep_ring.chunks if c)
+expect_permutes = K * (2 - 1) * n_ring_rungs
+got_permutes = len(re.findall(
+    r"=\s+\S+\s+collective-permute(?:-start)?\(", txt))
+assert got_permutes == expect_permutes, (got_permutes, expect_permutes)
+# pod collectives overall: K ppermutes per ringing rung + 1 for FULL
+assert rep.collective_count.get("pod", 0) == expect_permutes + 1, \
+    dict(rep.collective_count)
+for ax, b in rep.collective_bytes.items():
+    if "pod" not in ax:
+        assert b == 0.0, (ax, b)
+
+analytic = sig_wire_bytes(ep_ring.sig, ep_ring.levels, 2)
+traced = rep.collective_bytes.get("pod", 0.0)
+# XLA promotes FULL's bf16 all-reduce to f32 on CPU (see SCRIPT above)
+full_part = levels[4].wire_bytes(ep_ring.sig[4] * 1024, 2)
+assert traced in (float(analytic), float(analytic + full_part)), \
+    (analytic, traced)
+# the ring moves exactly the one-shot all_gather receive volume; only the
+# K-multiple rounding of the signature pads, and that is priced in sig
+txt_o = fn_one.lower(tree, errors).compile().as_text()
+rep_o = hlo_cost.analyze(txt_o, (2, 2, 2), ("pod", "data", "model"))
+analytic_o = sig_wire_bytes(ep_one.sig, ep_one.levels, 2)
+traced_o = rep_o.collective_bytes.get("pod", 0.0)
+assert traced_o in (float(analytic_o), float(analytic_o + full_part)), \
+    (analytic_o, traced_o)
+ring_pad = analytic - analytic_o
+assert 0 <= ring_pad <= sum(
+    lv.wire_bytes((K - 1) * 1024, 2)
+    for lv, c in zip(levels, ep_ring.chunks) if c), ring_pad
+print("RING_OK", got_permutes, int(analytic))
+"""
+
+
+@pytest.mark.slow
+def test_ring_exchange_collectives_subprocess():
+    """The chunked ring pipeline: bit-parity with the one-shot exchange,
+    exactly K ppermutes per ringing rung in the lowered HLO, and analytic
+    == traced wire bytes (the ring moves the all_gather receive volume)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + root
+    r = subprocess.run([sys.executable, "-c", RING_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "RING_OK" in r.stdout

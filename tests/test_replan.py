@@ -184,6 +184,44 @@ class TestPlanVectorParity:
                                        np.asarray(err_d[k]),
                                        rtol=1e-6, atol=1e-6)
 
+    def test_overlap_apply_matches_barrier_apply(self):
+        """The rung-ordered apply (AdamW on each rung's bucket rows via
+        sync_tree's apply_fn path, the new default) must match the
+        whole-tree _optimize barrier path: same grads, same plan, same
+        state -> same params / moments / EF residuals.  Guards the
+        pack/gather/scatter invariants (intra-block tail padding and the
+        shared zero row at index NB stay inert across rungs)."""
+        import dataclasses
+        cfg = SMOKE_ARCHS["paper-350m"]
+
+        def run(overlap):
+            run_cfg = RunConfig(model=cfg, shape=SHAPE, total_steps=30,
+                                warmup_steps=2, lr=1e-3,
+                                acesync=ACESyncConfig(
+                                    overlap_apply=overlap))
+            model = build_model(cfg, run_cfg)
+            tr = Trainer(model, run_cfg, mesh=None, strategy="acesync")
+            pipe = TokenPipeline(model, SHAPE, seed=0)
+            state = tr.init_state(jax.random.PRNGKey(0))
+            plan = tr.default_plan(bandwidth_mbps=30.0)
+            for _ in range(3):
+                state, m = tr.step(state, next(pipe), plan, "grad_sync")
+            return state, m
+
+        s_overlap, m_overlap = run(True)
+        s_barrier, m_barrier = run(False)
+        assert float(m_overlap["loss"]) == float(m_barrier["loss"])
+        for key in ("params", "m", "v"):
+            for a, b in zip(jax.tree.leaves(s_overlap[key]),
+                            jax.tree.leaves(s_barrier[key])):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-6, atol=1e-6,
+                                           err_msg=key)
+        for a, b in zip(jax.tree.leaves(s_overlap["ace"].errors),
+                        jax.tree.leaves(s_barrier["ace"].errors)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-6)
+
     def test_trainer_step_parity_across_plan_forms(self):
         """trainer.step under a SyncPlan equals stepping its ExecPlan."""
         tr, pipe = _trainer()
@@ -232,6 +270,142 @@ class TestBucketSignature:
         assert perm.shape == (4,)
         assert list(perm[:3]) == [0, 1, 2]
         assert perm[3] == ep.total_blocks        # pad -> the zero block
+
+
+class TestChunkGrid:
+    LEVELS = (Level("INT8", 1.0, 8), Level("FULL", 1.0, 16),
+              Level("SKIP", 0.0, 0))
+
+    def test_chunks_in_static_key_and_pytree_aux(self):
+        plan = SyncPlan((0,), (self.LEVELS[0], self.LEVELS[2]), (0.5, 0.5),
+                        1)
+        ep = build_exec_plan(plan, [8 * 1024], n_pods=2, ring=4)
+        assert ep.chunks == (4, 0)
+        assert ep.chunks in (ep.static_key()[2],) \
+            and ep.static_key()[2] == ep.chunks
+        # aux data: a tree-map does not touch the chunk grid
+        ep2 = jax.tree.map(lambda x: x, ep)
+        assert ep2.chunks == ep.chunks and ep2.sig == ep.sig
+
+    def test_forced_ring_rounds_sig_to_chunk_multiple(self):
+        plan = SyncPlan((0,), (self.LEVELS[0], self.LEVELS[2]), (0.5, 0.5),
+                        1)
+        ep = build_exec_plan(plan, [3 * 1024], n_pods=2, ring=2)
+        assert ep.chunks[0] == 2
+        assert ep.sig[0] == 4                   # 3 blocks -> 2-chunk pad
+        perm = np.asarray(ep.perms[0])
+        assert perm[3] == ep.total_blocks       # pad -> the zero block
+
+    def test_heuristic_small_buckets_stay_one_shot(self):
+        from repro.core.planexec import ring_chunk_count
+        lvl = self.LEVELS[0]
+        assert ring_chunk_count(lvl, 4, 2) == 0          # ~4KB payload
+        assert ring_chunk_count(lvl, 0, 2) == 0
+        assert ring_chunk_count(lvl, 10 ** 4, 1) == 0    # single pod
+        # auto rings only the 2-pod (cloud-edge) regime: P >= 3 would
+        # break cross-pod bit-determinism (ring-arrival fold order)
+        assert ring_chunk_count(lvl, 10 ** 4, 4) == 0
+        assert ring_chunk_count(lvl, 10 ** 4, 4, ring=2) == 2  # forced ok
+
+    def test_heuristic_rings_dcn_bound_buckets(self):
+        from repro.core.planexec import RING_MAX_CHUNKS, ring_chunk_count
+        lvl = self.LEVELS[0]
+        # a 64 MB int8 bucket is >> the DCN latency floor
+        k = ring_chunk_count(lvl, 64 * 1024, 2)
+        assert 2 <= k <= RING_MAX_CHUNKS
+        assert k & (k - 1) == 0                  # power-of-two class
+        # deterministic in the padded signature: same inputs, same grid
+        assert k == ring_chunk_count(lvl, 64 * 1024, 2)
+
+    def test_psum_and_skip_never_ring(self):
+        from repro.core.planexec import ring_chunk_count
+        assert ring_chunk_count(self.LEVELS[1], 10 ** 5, 2) == 0
+        assert ring_chunk_count(self.LEVELS[2], 10 ** 5, 2) == 0
+        # even forced
+        assert ring_chunk_count(self.LEVELS[1], 10 ** 5, 2, ring=4) == 0
+
+    def test_exec_grid_shared_with_scheduler_pricing(self):
+        """Scheduler._finalize and build_exec_plan derive the signature
+        from the same exec_grid, chunk rounding included — analytic bytes
+        track the executed collectives."""
+        cfg = ACESyncConfig(ring_chunks=2)
+        sched = Scheduler(cfg, [3 * 1024, 2048], n_pods=2)
+        plan = sched.full_plan()
+        ep = build_exec_plan(plan, sched.sizes, n_pods=2, ring=2,
+                             growth=None)
+        assert plan.bucket_sig == ep.sig
+        assert plan.ring_chunks == ep.chunks
+
+
+class TestRungGrowthSchedule:
+    def test_large_rungs_get_finer_classes(self):
+        from repro.core.planexec import (MIN_RUNG_GROWTH, pad_block_class,
+                                         rung_growth,
+                                         scheduled_block_class)
+        base = 1.125
+        # expected (mean over sizes) padding of big rungs: the scheduled
+        # ladder's ~3.1% classes beat the flat 12.5% ones (pointwise a
+        # flat ladder value can land luckily close, so compare in
+        # expectation)
+        sizes = range(900, 1150)
+        sched = np.mean([(scheduled_block_class(nb, base) - nb) / nb
+                         for nb in sizes])
+        flat = np.mean([(pad_block_class(nb, base) - nb) / nb
+                        for nb in sizes])
+        assert sched < flat / 2, (sched, flat)
+        # floor regime: padding bounded by ~2x MIN_RUNG_GROWTH's excess
+        assert all((scheduled_block_class(nb, base) - nb) / nb
+                   <= 2 * (MIN_RUNG_GROWTH - 1.0) for nb in sizes)
+        # ...but never finer than the floor: classes must stay wide
+        # enough to absorb replan jitter (no per-replan retraces)
+        assert rung_growth(10 ** 5, base) == MIN_RUNG_GROWTH
+
+    def test_tiny_rungs_get_coarser_classes(self):
+        from repro.core.planexec import RUNG_GROWTH_KNEE, rung_growth
+        assert rung_growth(3, 1.125) == 2.0
+        assert rung_growth(10, 1.125) == 1.125
+        # the whole sub-knee band keeps the flat base: padding bytes are
+        # negligible there and narrower classes would only add retraces
+        assert rung_growth(RUNG_GROWTH_KNEE, 1.125) == 1.125
+        assert rung_growth(1.0, None) is None
+
+    def test_class_map_is_monotone_partition(self):
+        """The scheduled class function is a single-ladder partition:
+        monotone, idempotent, with above-knee ladder gaps wide enough
+        that +-1-block replan jitter cannot force a recompile per replan
+        (exhaustive over every nb — the earlier per-nb-growth scheme had
+        width-1 and non-monotone classes the strided test missed)."""
+        from repro.core.planexec import (MIN_RUNG_GROWTH, RUNG_GROWTH_KNEE,
+                                         scheduled_block_class)
+        base = 1.125
+        prev = 0
+        for nb in range(1, 4096):
+            cls = scheduled_block_class(nb, base)
+            assert cls >= nb
+            assert cls >= prev, nb                        # monotone
+            assert scheduled_block_class(cls, base) == cls  # idempotent
+            prev = cls
+        # ladder gaps above the knee: >= ~(base-1)*KNEE blocks, growing
+        # to ~3.1% of the class in the floor regime
+        c = scheduled_block_class(RUNG_GROWTH_KNEE + 1, base)
+        while c < 4096:
+            nxt = scheduled_block_class(c + 1, base)
+            assert nxt - c >= (base - 1.0) * RUNG_GROWTH_KNEE - 1, (c, nxt)
+            if c >= 256:
+                assert nxt - c >= 0.5 * (MIN_RUNG_GROWTH - 1) * c, (c, nxt)
+            c = nxt
+
+    def test_schedule_classes_bounded(self):
+        """The byte-weighted padding bound shrinks with rung size down to
+        the MIN_RUNG_GROWTH floor; no class more than doubles its rung."""
+        from repro.core.planexec import rung_growth, scheduled_block_class
+        for nb in (3, 9, 30, 100, 400, 1500):
+            cls = scheduled_block_class(nb, 1.125)
+            assert nb <= cls <= 2 * nb, nb
+            if nb > 64:  # past the knee: padding well under the flat 12.5%
+                assert cls <= np.ceil(nb * 1.07), nb
+        assert rung_growth(1500, 1.125) <= rung_growth(100, 1.125) \
+            < rung_growth(30, 1.125) < rung_growth(3, 1.125)
 
 
 class TestSchedulerPlanSig:
