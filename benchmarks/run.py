@@ -204,9 +204,10 @@ def bench_steptime(out_path=None, steps=24, warmup=6, multipod=False,
     one-shot/barrier variant and a forced-ring stress variant), the
     replan-to-apply latency of the async device replan, the train-step
     compile count (steady-state replans must add ZERO — CI gates on it
-    with ``--fail-on-recompile``), the padded-vs-analytic wire-byte
-    overhead of the per-rung size classes, and the chosen classes / chunk
-    grid themselves.  ``--multipod`` runs on the simulated (2, 2, 2)
+    with ``--fail-on-recompile``; AOT warm-ups are reported separately
+    as ``warm_compiles``), the padded-vs-analytic wire-byte overhead of
+    the per-rung size classes, the chosen classes / chunk grid, and the
+    bidirectional-vs-unidirectional forced-ring pair.  ``--multipod`` runs on the simulated (2, 2, 2)
     pod mesh (8 virtual CPU devices — the mesh CI exercises with
     ``REPRO_FORCE_INTERPRET=1``).  Written to
     benchmarks/results/BENCH_step_time.json and mirrored at the repo root
@@ -232,9 +233,15 @@ def bench_steptime(out_path=None, steps=24, warmup=6, multipod=False,
     if multipod:
         # forced 2-chunk ring on every ring-capable rung: exercises the
         # ppermute pipeline end-to-end even at smoke bucket sizes (the
-        # roofline auto path one-shots buckets this small)
-        variants.append(("acesync_ring2", "acesync", 6,
-                         dict(ring_chunks=2)))
+        # roofline auto path one-shots buckets this small).  The
+        # bidirectional (default) and unidirectional variants are both
+        # recorded: on the CPU simulator they time within noise (no real
+        # full-duplex links), but the pair pins the perf trajectory for
+        # real multi-pod hardware where the half-ring split is ~2x.
+        variants.append(("acesync_ring2_bidir", "acesync", 6,
+                         dict(ring_chunks=2, ring_bidir=True)))
+        variants.append(("acesync_ring2_unidir", "acesync", 6,
+                         dict(ring_chunks=2, ring_bidir=False)))
 
     records = []
     for name, strategy, cadence, ace_kw in variants:
@@ -288,6 +295,10 @@ def bench_steptime(out_path=None, steps=24, warmup=6, multipod=False,
             "replans_applied": len(lat),
             "replan_to_apply_latency_steps":
                 (sum(lat) / len(lat) if lat else None),
+            # ring direction + the AOT compiles the speculative replan
+            # warm-up kept off the foreground step
+            "ring_bidir": ace.ring_bidir,
+            "warm_compiles": tr.warm_compiles,
             "wire_bytes_padded": padded,
             "wire_bytes_analytic": analytic,
             "padding_overhead_frac":

@@ -16,14 +16,21 @@ smear across four layers (``core/compression.py``, ``core/sync.py``,
     wire format carries;
   * ``ef_sync_ring`` / ``decode_accumulate`` — the chunked ring pipeline:
     the payload is split into K chunks circulated with ``ppermute`` over
-    the pod axis, and while chunk *i* is on the DCN its predecessor is
+    the pod axis (both DCN directions at once by default — two
+    half-rings of ⌈(P-1)/2⌉ hops, same wire bytes, ~2x full-duplex
+    bandwidth), and while chunk *i* is on the DCN its predecessor is
     decoded and accumulated in place (fused Pallas decode-accumulate
     kernels on accelerators), hiding the decode behind the wire.  The
     gathered ``(n_pods, payload)`` buffer is never materialised: the live
     wire state is the held + in-flight chunk per lane — at most ~2x the
     bucket payload, vs ``n_pods x`` for the one-shot gather.  Which rungs
     ring (and with how many chunks) is a static plan decision — see
-    ``repro.core.planexec.ring_chunk_count``;
+    ``repro.core.planexec.ring_chunk_count``.  Whenever >= 3 pods
+    exchange, BOTH the ring and the one-shot fold switch to the codec's
+    deterministic accumulation (int32 fixed-point partial sums /
+    integer vote counts, or canonical-order buffering for
+    ``canonical_fold`` codecs), so per-pod aggregates are bit-identical
+    in any fold order and the two exchange paths never disagree;
   * ``wire_bytes``                — analytic per-device on-the-wire bytes
     for the collective the codec actually issues (all_gather receive
     volume for gather codecs, ring all-reduce bytes for psum codecs).
@@ -38,12 +45,14 @@ that resolves to a registered codec via :func:`codec_for_level`.
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Sequence, Tuple, Type
+from typing import Dict, List, Optional, Sequence, Tuple, Type
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.compression import BLOCK, pad_to_blocks
+from repro.kernels.decode import (FIXED_POINT_BITS, fixed_point,
+                                  from_fixed_point)
 
 #: the bandwidth-constrained mesh axis payloads cross (see core/sync.py).
 POD_AXIS = "pod"
@@ -128,6 +137,15 @@ class Codec:
     #: exchange is not a per-peer payload gather (FULL's psum, SKIP's
     #: nothing) have no decode to hide and stay on their one-shot path.
     supports_ring: bool = True
+    #: deterministic-mode strategy: False (default) means the codec's
+    #: ``decode_accumulate`` with ``deterministic=True`` is ORDER-
+    #: INSENSITIVE (exact integer partial sums — fixed-point dequant-add,
+    #: integer vote counts), so the ring folds peers in arrival order.
+    #: True means the accumulate is inherently order-sensitive (top-k's
+    #: float scatter-add) and the ring must instead BUFFER each chunk's
+    #: peer payloads and fold them in canonical pod order 0..P-1 — the
+    #: exact float association of the one-shot all_gather fold.
+    canonical_fold: bool = False
 
     # ---- accounting -----------------------------------------------------
     def payload_bytes(self, n: int, block: int = BLOCK) -> int:
@@ -182,50 +200,92 @@ class Codec:
     # ---- pod aggregation ------------------------------------------------
     def pod_exchange(self, payload: Dict[str, jax.Array],
                      omega: jax.Array, *, n: int, block: int = BLOCK,
-                     axis: str = POD_AXIS) -> jax.Array:
+                     axis: str = POD_AXIS, use_pallas: bool = False,
+                     deterministic: bool = False,
+                     fixed_bits: int = FIXED_POINT_BITS) -> jax.Array:
         """Aggregate payloads across the pod axis -> (n,) f32.
 
         Default: pack the payload into one uint8 buffer, ONE ``all_gather``
-        over ``axis``, then the omega-weighted sum of per-peer decodes
-        (paper eq. 8), accumulated one peer at a time so the dense
-        transient stays at one (n,) buffer instead of (P, n) — with
-        bucketing n can be the whole model, and a stacked decode would
-        multiply peak sync memory by the pod count.  Codecs whose
-        aggregation is not a weighted sum of decodes (FULL's psum, SIGN's
-        majority vote) override this.
+        over ``axis``, then fold peer decodes through the codec's
+        accumulation trio in canonical pod order 0..P-1 (paper eq. 8),
+        one peer at a time so the dense transient stays at one (nb, block)
+        buffer instead of (P, n) — with bucketing n can be the whole
+        model, and a stacked decode would multiply peak sync memory by the
+        pod count.  ``deterministic`` switches the trio to its exact
+        (fixed-point / integer) accumulation so this one-shot fold is
+        bit-identical to the P >= 3 ring's arrival-order fold.  Codecs
+        whose aggregation is not a fold of per-peer payloads (FULL's
+        psum, SKIP's nothing) override this.
         """
         wire, meta = pack_payload(payload)
         gathered = jax.lax.all_gather(wire, axis)       # (P, payload_bytes)
         n_peers = gathered.shape[0]
-        agg = jnp.zeros((n,), jnp.float32)
+        # canonical-fold codecs (top-k) are already order-deterministic
+        # here — the gather order IS the canonical order, float math kept
+        det = deterministic and not self.canonical_fold
+        init_kw, fold_kw = self._det_kwargs(det, fixed_bits)
+        nb = n_blocks(n, block)
+        acc = self.accum_init(nb, block, **init_kw)
         for p in range(n_peers):
-            dense = self.decode(unpack_payload(gathered[p], meta),
-                                block).reshape(-1)[:n]
-            agg = agg + omega[p] * dense
-        return agg
+            acc = self.decode_accumulate(
+                acc, unpack_payload(gathered[p], meta), omega[p],
+                block=block, use_pallas=use_pallas, **fold_kw)
+        return self.accum_finalize(acc, n, block, **fold_kw)
 
     # ---- chunked ring pipeline ------------------------------------------
-    def accum_init(self, nb: int, block: int = BLOCK):
-        """Fresh accumulator for ``nb`` blocks of ring aggregation.
-        Default: the dense f32 partial sum.  Codecs that aggregate in the
+    def accum_init(self, nb: int, block: int = BLOCK, *,
+                   deterministic: bool = False):
+        """Fresh accumulator for ``nb`` blocks of aggregation.  Default:
+        the dense f32 partial sum; ``deterministic`` selects the int32
+        fixed-point partial sum whose integer adds are exact and
+        commutative (the P >= 3 mode).  Codecs that aggregate in the
         compressed domain (SIGN's majority vote) override with their own
         partial state."""
+        if deterministic:
+            return jnp.zeros((nb, block), jnp.int32)
         return jnp.zeros((nb, block), jnp.float32)
 
     def decode_accumulate(self, acc, payload: Dict[str, jax.Array],
                           weight: jax.Array, *, block: int = BLOCK,
-                          use_pallas: bool = False):
+                          use_pallas: bool = False,
+                          deterministic: bool = False,
+                          fixed_bits: int = FIXED_POINT_BITS):
         """``acc (+)= weight * decode(payload)`` — ONE peer's chunk folded
         into the running aggregate.  The oracle default materialises the
         dense decode; subclasses fuse dequant + FMA into one HBM pass with
         the Pallas kernels in ``repro/kernels/decode.py`` when
-        ``use_pallas`` is set."""
+        ``use_pallas`` is set.  ``deterministic`` quantises the weighted
+        term to ``fixed_bits`` fractional bits and accumulates in int32 —
+        bit-identical in ANY fold order (kernels/decode.py)."""
+        if deterministic:
+            return acc + fixed_point(weight * self.decode(payload, block),
+                                     fixed_bits)
         return acc + weight * self.decode(payload, block)
 
-    def accum_finalize(self, acc, n: int, block: int = BLOCK) -> jax.Array:
-        """Running aggregate -> dense (n,) f32 (identity for the default
-        dense partial sum)."""
+    def accum_finalize(self, acc, n: int, block: int = BLOCK, *,
+                       deterministic: bool = False,
+                       fixed_bits: int = FIXED_POINT_BITS) -> jax.Array:
+        """Running aggregate -> dense (n,) f32 (a fixed-point rescale for
+        the deterministic int32 partial sum, identity otherwise)."""
+        if deterministic:
+            acc = from_fixed_point(acc, fixed_bits)
         return acc.reshape(-1)[:n]
+
+    @staticmethod
+    def _det_kwargs(deterministic: bool,
+                    fixed_bits: int) -> Tuple[dict, dict]:
+        """(accum_init kwargs, decode_accumulate/accum_finalize kwargs)
+        for the accumulation trio.  The new ``deterministic`` /
+        ``fixed_bits`` kwargs are forwarded ONLY when the deterministic
+        mode is engaged, so a codec subclassed against the
+        pre-deterministic trio signature keeps working on every float
+        path — and can opt into P >= 3 rings via ``canonical_fold``
+        (whose buffered fold never passes them) without signature
+        changes."""
+        if not deterministic:
+            return {}, {}
+        return ({"deterministic": True},
+                {"deterministic": True, "fixed_bits": fixed_bits})
 
     def _chunk_payload(self, payload: Dict[str, jax.Array], i: int,
                        cb: int) -> Dict[str, jax.Array]:
@@ -238,7 +298,9 @@ class Codec:
                      omega: jax.Array, omega_own: jax.Array, *,
                      gamma: float, n_pods: int, n_chunks: int,
                      block: int = BLOCK, axis: str = POD_AXIS,
-                     use_pallas: bool = False
+                     use_pallas: bool = False, bidir: bool = True,
+                     deterministic: Optional[bool] = None,
+                     fixed_bits: int = FIXED_POINT_BITS
                      ) -> Tuple[jax.Array, jax.Array]:
         """EF + compress + CHUNKED RING exchange of one flat buffer.
 
@@ -254,18 +316,45 @@ class Codec:
         in-flight chunk, at most ~2x the bucket payload regardless of the
         pod count.
 
-        Bit-parity with :meth:`ef_sync`: on a 2-pod ring the aggregate is
-        the same two-term omega-weighted sum (addition commutes), pinned
+        ``bidir``: circulate BOTH DCN directions at once — two half-rings
+        of ⌈(P-1)/2⌉ forward and ⌊(P-1)/2⌋ backward hops.  The total
+        ppermute count and wire bytes are unchanged (each peer's payload
+        still crosses the link once per receiving pod), but the two
+        directions carry no data dependence on each other, so on
+        full-duplex DCN links the critical path halves — up to 2x
+        effective bandwidth.  For P = 2 it degenerates to the single
+        forward hop.
+
+        Determinism: on a 2-pod ring the aggregate is the same two-term
+        omega-weighted sum as :meth:`ef_sync` (addition commutes), pinned
         by tests/test_codecs.py and the subprocess exchange parity test.
-        For P >= 3 each pod folds peers in ring-arrival order, so per-pod
-        aggregates can differ at ulp level (fp non-associativity) — the
-        auto chunk heuristic therefore only rings 2-pod meshes (see
-        ``planexec.ring_chunk_count``).
+        For P >= 3 each pod receives peers in its OWN ring order, so a
+        float fold would drift across pods at ulp level (fp addition is
+        not associative).  ``deterministic`` (default: auto, on for
+        P >= 3) therefore switches the fold to the codec's exact
+        accumulation: order-insensitive int32 fixed-point / integer-vote
+        partial sums folded in arrival order, or — for
+        ``canonical_fold`` codecs (top-k's float scatter-add) — a
+        chunk-major pipeline that buffers each chunk's P-1 peer payloads
+        and folds them in canonical pod order 0..P-1, the exact float
+        association of the one-shot all_gather fold.  Either way every
+        pod produces bit-identical aggregates, equal to the one-shot
+        path's (tests/test_collectives.py soaks this on P = 3 and 4).
+        The legacy order-sensitive float fold is a loud error on P >= 3.
         """
         if n_pods <= 1 or not self.supports_ring:
             return self.ef_sync(flat, e_flat, omega, omega_own,
                                 gamma=gamma, n_pods=n_pods, block=block,
-                                axis=axis, use_pallas=use_pallas)
+                                axis=axis, use_pallas=use_pallas,
+                                deterministic=deterministic,
+                                fixed_bits=fixed_bits)
+        if deterministic is None:
+            deterministic = n_pods >= 3
+        if n_pods >= 3 and not deterministic:
+            raise ValueError(
+                f"the order-sensitive float ring fold drifts across pods "
+                f"for n_pods={n_pods} >= 3; deterministic accumulation is "
+                f"mandatory there (pass deterministic=None or True)")
         n = flat.shape[0]
         payload, _own, new_e = self.ef_encode(flat, e_flat, gamma=gamma,
                                               block=block,
@@ -275,52 +364,130 @@ class Codec:
         assert nb % K == 0, (nb, K)
         cb = nb // K
         chunks = [self._chunk_payload(payload, i, cb) for i in range(K)]
-        # hop 0: own contribution (same first term as the one-shot path)
-        accs = [self.decode_accumulate(self.accum_init(cb, block),
-                                       chunks[i], omega_own, block=block,
-                                       use_pallas=use_pallas)
-                for i in range(K)]
         wires = [pack_payload(c) for c in chunks]
         meta = wires[0][1]
         cur = [w for w, _ in wires]
         my = jax.lax.axis_index(axis)
-        fwd = [(p, (p + 1) % n_pods) for p in range(n_pods)]
-        for h in range(1, n_pods):
-            w_src = omega[(my - h) % n_pods]
-            nxt, prev, pi = [], None, -1
-            for i in range(K):
-                r = jax.lax.ppermute(cur[i], axis, fwd)
-                if prev is not None:
-                    # decode chunk i-1 while chunk i is on the DCN
+        P = n_pods
+        fwd = [(p, (p + 1) % P) for p in range(P)]   # hop h: recv my-h
+        bwd = [(p, (p - 1) % P) for p in range(P)]   # hop h: recv my+h
+        hops_f = (P - 1 + 1) // 2 if bidir else P - 1
+        hops_b = (P - 1) - hops_f
+        if deterministic and self.canonical_fold:
+            parts = self._ring_canonical_fold(
+                cur, meta, omega, my, axis, fwd, bwd, hops_f, hops_b,
+                P, cb, block, use_pallas)
+        else:
+            init_kw, fold_kw = self._det_kwargs(deterministic, fixed_bits)
+            # hop 0: own contribution (same first term as one-shot)
+            accs = [self.decode_accumulate(
+                        self.accum_init(cb, block, **init_kw),
+                        chunks[i], omega_own, block=block,
+                        use_pallas=use_pallas, **fold_kw)
+                    for i in range(K)]
+            cur_f = cur
+            cur_b = list(cur) if hops_b else []
+            for h in range(1, max(hops_f, hops_b) + 1):
+                w_f = omega[(my - h) % P]
+                w_b = omega[(my + h) % P]
+                nxt_f, nxt_b, pending = [], [], []
+                for i in range(K):
+                    # issue this chunk's transfers first, then fold the
+                    # previous chunk's receives: the fold has no data
+                    # dependence on the in-flight ppermutes, so XLA
+                    # hides the decode behind the wire (both directions)
+                    if h <= hops_f:
+                        nxt_f.append(jax.lax.ppermute(cur_f[i], axis,
+                                                      fwd))
+                    if h <= hops_b:
+                        nxt_b.append(jax.lax.ppermute(cur_b[i], axis,
+                                                      bwd))
+                    for pi, wire, w_src in pending:
+                        accs[pi] = self.decode_accumulate(
+                            accs[pi], unpack_payload(wire, meta), w_src,
+                            block=block, use_pallas=use_pallas,
+                            **fold_kw)
+                    pending = []
+                    if h <= hops_f:
+                        pending.append((i, nxt_f[-1], w_f))
+                    if h <= hops_b:
+                        pending.append((i, nxt_b[-1], w_b))
+                for pi, wire, w_src in pending:
                     accs[pi] = self.decode_accumulate(
-                        accs[pi], unpack_payload(prev, meta), w_src,
-                        block=block, use_pallas=use_pallas)
-                nxt.append(r)
-                prev, pi = r, i
-            accs[pi] = self.decode_accumulate(
-                accs[pi], unpack_payload(prev, meta), w_src, block=block,
-                use_pallas=use_pallas)
-            cur = nxt
-        parts = [self.accum_finalize(a, cb * block, block) for a in accs]
+                        accs[pi], unpack_payload(wire, meta), w_src,
+                        block=block, use_pallas=use_pallas, **fold_kw)
+                cur_f, cur_b = nxt_f, nxt_b
+            parts = [self.accum_finalize(a, cb * block, block, **fold_kw)
+                     for a in accs]
         agg = parts[0] if K == 1 else jnp.concatenate(parts)
         return agg[:n], new_e
+
+    def _ring_canonical_fold(self, cur, meta, omega, my, axis, fwd, bwd,
+                             hops_f, hops_b, P, cb, block, use_pallas):
+        """Chunk-major ring with canonical-order buffering — the
+        deterministic mode of ``canonical_fold`` codecs (top-k).
+
+        Each chunk runs its full hop chain (both directions), stacking
+        the received wires; the fold then walks pods 0..P-1 selecting
+        each pod's wire from the stack (slot 0 = own, slots 1..hops_f =
+        forward arrivals, the rest = backward), reproducing the one-shot
+        all_gather fold's float association exactly — so every pod folds
+        the same values in the same order and the aggregate is
+        bit-identical across pods AND to the one-shot path.  Chunk i+1's
+        hops carry no dependence on chunk i's fold, so the decode still
+        hides behind the wire; the buffering cost is ~2 in-flight chunks
+        x P chunk-payloads (≈ 2P/K of the bucket payload) instead of the
+        streaming path's ~2 chunks — the price of an order-sensitive
+        accumulate (README: canonical buffering cost)."""
+        parts = []
+        for wire in cur:
+            stack = [wire]                       # slot 0: own payload
+            f = b = wire
+            for _ in range(hops_f):              # slot h: pod (my - h)
+                f = jax.lax.ppermute(f, axis, fwd)
+                stack.append(f)
+            for _ in range(hops_b):              # slot hops_f+h: (my + h)
+                b = jax.lax.ppermute(b, axis, bwd)
+                stack.append(b)
+            buf = jnp.stack(stack)               # (P, chunk_bytes) uint8
+            acc = self.accum_init(cb, block)
+            for j in range(P):                   # canonical pod order
+                d_f = (my - j) % P               # 0 = own, <=hops_f = fwd
+                d_b = (j - my) % P
+                slot = jnp.where(d_f <= hops_f, d_f, hops_f + d_b)
+                wire_j = jax.lax.dynamic_index_in_dim(buf, slot, axis=0,
+                                                      keepdims=False)
+                acc = self.decode_accumulate(
+                    acc, unpack_payload(wire_j, meta), omega[j],
+                    block=block, use_pallas=use_pallas)
+            parts.append(self.accum_finalize(acc, cb * block, block))
+        return parts
 
     # ---- one sync round -------------------------------------------------
     def ef_sync(self, flat: jax.Array, e_flat: jax.Array, omega: jax.Array,
                 omega_own: jax.Array, *, gamma: float, n_pods: int,
                 block: int = BLOCK, axis: str = POD_AXIS,
-                use_pallas: bool = False
+                use_pallas: bool = False,
+                deterministic: Optional[bool] = None,
+                fixed_bits: int = FIXED_POINT_BITS
                 ) -> Tuple[jax.Array, jax.Array]:
         """EF + compress + exchange one flat buffer.  Returns
         ``(agg, new_e)`` with the invariant ``own + new_e == ef`` (the
-        lossless transmit/residual split error feedback relies on)."""
+        lossless transmit/residual split error feedback relies on).
+        ``deterministic`` (auto: on for P >= 3) folds the gathered
+        payloads with the same exact accumulation the ring uses, keeping
+        the two exchange paths bit-identical on any pod count."""
         n = flat.shape[0]
         payload, own, new_e = self.ef_encode(flat, e_flat, gamma=gamma,
                                              block=block,
                                              use_pallas=use_pallas)
         if n_pods > 1:
+            if deterministic is None:
+                deterministic = n_pods >= 3
             agg = self.pod_exchange(payload, omega, n=n, block=block,
-                                    axis=axis)
+                                    axis=axis, use_pallas=use_pallas,
+                                    deterministic=deterministic,
+                                    fixed_bits=fixed_bits)
         else:
             agg = own * omega_own
         return agg, new_e

@@ -22,12 +22,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.codecs.base import (POD_AXIS, Codec, n_blocks, pack_bits,
-                               pack_payload, register_codec, unpack_bits,
-                               unpack_payload)
+                               register_codec, unpack_bits)
 from repro.core.compression import (BLOCK, int8_compress, int8_decompress,
                                     pad_to_blocks, topk_compress,
                                     topk_decompress)
 from repro.kernels import ops
+from repro.kernels.decode import (FIXED_POINT_BITS, fixed_point,
+                                  from_fixed_point)
 from repro.kernels.quantize import _int4_body, pack_nibbles, unpack_nibbles
 
 
@@ -69,11 +70,19 @@ class FullCodec(Codec):
         return {"wire": wire}, own, ef - own
 
     def pod_exchange(self, payload, omega, *, n, block=BLOCK,
-                     axis=POD_AXIS):
+                     axis=POD_AXIS, **_kw):
         raise NotImplementedError("FULL aggregates inside ef_sync (psum)")
 
     def ef_sync(self, flat, e_flat, omega, omega_own, *, gamma, n_pods,
-                block=BLOCK, axis=POD_AXIS, use_pallas=False):
+                block=BLOCK, axis=POD_AXIS, use_pallas=False,
+                deterministic=None, fixed_bits=None):
+        """The psum exchange is already cross-pod deterministic on any
+        pod count: XLA's all-reduce hands every participant the SAME
+        reduced bits (whatever internal order it reduces in), so pods
+        cannot drift apart — ``deterministic`` needs no special mode
+        here.  (The inherited accumulation trio still supports the
+        fixed-point mode, so a gather-style fold of FULL payloads — e.g.
+        a future ring variant — is order-insensitive for free.)"""
         payload, own, new_e = self.ef_encode(flat, e_flat, gamma=gamma,
                                              block=block)
         if n_pods > 1:
@@ -122,19 +131,29 @@ class Int8Codec(Codec):
         return payload, ef - r, r
 
     def decode_accumulate(self, acc, payload, weight, *, block=BLOCK,
-                          use_pallas=False):
+                          use_pallas=False, deterministic=False,
+                          fixed_bits=FIXED_POINT_BITS):
         if not use_pallas or block != ops.LANES:
-            return super().decode_accumulate(acc, payload, weight,
-                                             block=block)
-        return ops.decode_accum_int8(acc, payload["q"], payload["scale"],
-                                     weight, use_pallas=True)
+            return super().decode_accumulate(
+                acc, payload, weight, block=block,
+                deterministic=deterministic, fixed_bits=fixed_bits)
+        return ops.decode_accum_int8(
+            acc, payload["q"], payload["scale"], weight, use_pallas=True,
+            fixed_bits=fixed_bits if deterministic else None)
 
 
 @register_codec
 class TopKCodec(Codec):
-    """Block-local top-k, int8-quantised values + uint16 indices."""
+    """Block-local top-k, int8-quantised values + uint16 indices.
+
+    The ring decode-accumulate is a float scatter-add — inherently
+    fold-order sensitive — so the deterministic P >= 3 mode uses the
+    canonical-order buffering path (``canonical_fold``): each chunk's
+    peer payloads are buffered over the hop chain and folded in pod
+    order 0..P-1, the exact association of the one-shot fold."""
     name = "topk"
     value_bits = 8
+    canonical_fold = True
 
     def __init__(self, ratio: float = 0.1):
         if not 0.0 < ratio < 1.0:
@@ -179,7 +198,11 @@ class TopKCodec(Codec):
         return payload, own, (sel - own) + res
 
     def decode_accumulate(self, acc, payload, weight, *, block=BLOCK,
-                          use_pallas=False):
+                          use_pallas=False, deterministic=False,
+                          fixed_bits=FIXED_POINT_BITS):
+        # never called with deterministic=True: canonical_fold routes the
+        # P >= 3 ring through the buffered canonical-order float fold
+        assert not deterministic, "topk folds canonically, not fixed-point"
         if not use_pallas or block != ops.LANES:
             return super().decode_accumulate(acc, payload, weight,
                                              block=block)
@@ -212,7 +235,8 @@ class SkipCodec(Codec):
         raise NotImplementedError("SKIP has no payload to decode")
 
     def ef_sync(self, flat, e_flat, omega, omega_own, *, gamma, n_pods,
-                block=BLOCK, axis=POD_AXIS, use_pallas=False):
+                block=BLOCK, axis=POD_AXIS, use_pallas=False,
+                deterministic=None, fixed_bits=None):
         ef = flat + gamma * e_flat
         return jnp.zeros_like(flat), ef
 
@@ -250,12 +274,15 @@ class Int4Codec(Codec):
         return payload, own, r
 
     def decode_accumulate(self, acc, payload, weight, *, block=BLOCK,
-                          use_pallas=False):
+                          use_pallas=False, deterministic=False,
+                          fixed_bits=FIXED_POINT_BITS):
         if not use_pallas or block != ops.LANES:
-            return super().decode_accumulate(acc, payload, weight,
-                                             block=block)
-        return ops.decode_accum_int4(acc, payload["q"], payload["scale"],
-                                     weight, use_pallas=True)
+            return super().decode_accumulate(
+                acc, payload, weight, block=block,
+                deterministic=deterministic, fixed_bits=fixed_bits)
+        return ops.decode_accum_int4(
+            acc, payload["q"], payload["scale"], weight, use_pallas=True,
+            fixed_bits=fixed_bits if deterministic else None)
 
 
 @register_codec
@@ -294,40 +321,45 @@ class SignCodec(Codec):
         return payload, own, r
 
     # ---- ring pipeline: majority vote in the compressed domain ---------
-    def accum_init(self, nb, block=BLOCK):
+    # The pod exchange itself is the BASE all_gather + trio fold (the
+    # majority vote of Bernstein et al.'s signSGD expressed as partial
+    # counts): agg = sign(sum_k omega_k * sign_k) scaled by the
+    # omega-weighted mean magnitude.
+    def accum_init(self, nb, block=BLOCK, *, deterministic=False):
         """Partial vote counts + partial magnitude — the compressed-domain
-        state the ring circulates instead of a dense decode."""
-        return {"vote": jnp.zeros((nb, block), jnp.float32),
-                "mag": jnp.zeros((nb,), jnp.float32)}
+        state the ring circulates instead of a dense decode.  The
+        deterministic mode keeps INTEGER vote counts (fixed-point omega x
+        exact ±1 signs) and a fixed-point magnitude — both commutative,
+        so any fold order reaches the same bits."""
+        dt = jnp.int32 if deterministic else jnp.float32
+        return {"vote": jnp.zeros((nb, block), dt),
+                "mag": jnp.zeros((nb,), dt)}
 
     def decode_accumulate(self, acc, payload, weight, *, block=BLOCK,
-                          use_pallas=False):
+                          use_pallas=False, deterministic=False,
+                          fixed_bits=FIXED_POINT_BITS):
         if use_pallas and block == ops.LANES:
             vote, mag = ops.sign_vote_accum(
                 acc["vote"], acc["mag"], payload["q"], payload["scale"],
-                weight, use_pallas=True)
+                weight, use_pallas=True,
+                fixed_bits=fixed_bits if deterministic else None)
             return {"vote": vote, "mag": mag}
         signs = unpack_bits(payload["q"], block).astype(jnp.float32) * 2 - 1
+        if deterministic:
+            wq = fixed_point(weight, fixed_bits)
+            return {"vote": acc["vote"] + wq * signs.astype(jnp.int32),
+                    "mag": acc["mag"] + fixed_point(
+                        weight * payload["scale"], fixed_bits)}
         return {"vote": acc["vote"] + weight * signs,
                 "mag": acc["mag"] + weight * payload["scale"]}
 
-    def accum_finalize(self, acc, n, block=BLOCK):
-        agg = jnp.sign(acc["vote"]) * acc["mag"][:, None]
-        return agg.reshape(-1)[:n]
-
-    def pod_exchange(self, payload, omega, *, n, block=BLOCK,
-                     axis=POD_AXIS):
-        """Majority vote: agg = sign(sum_k omega_k * sign_k) scaled by the
-        omega-weighted mean magnitude (Bernstein et al. signSGD)."""
-        wire, meta = pack_payload(payload)
-        gathered = jax.lax.all_gather(wire, axis)      # (P, payload_bytes)
-        vote = mag = None
-        for p in range(gathered.shape[0]):  # one dense transient at a time
-            pl = unpack_payload(gathered[p], meta)
-            signs = unpack_bits(pl["q"], block).astype(jnp.float32) * 2 - 1
-            contrib = omega[p] * signs
-            scale_c = omega[p] * pl["scale"]
-            vote = contrib if vote is None else vote + contrib
-            mag = scale_c if mag is None else mag + scale_c
+    def accum_finalize(self, acc, n, block=BLOCK, *, deterministic=False,
+                       fixed_bits=FIXED_POINT_BITS):
+        vote, mag = acc["vote"], acc["mag"]
+        if deterministic:
+            # votes only feed sign(); int32 -> f32 is exact here (the
+            # count magnitude is far below 2^24)
+            vote = vote.astype(jnp.float32)
+            mag = from_fixed_point(mag, fixed_bits)
         agg = jnp.sign(vote) * mag[:, None]
         return agg.reshape(-1)[:n]

@@ -206,6 +206,21 @@ class ACESyncConfig:
     # -1 = force the one-shot path everywhere, K > 0 = force K chunks on
     # every ring-capable rung (benches/tests).
     ring_chunks: int = 0
+    # bidirectional ring: circulate both DCN directions at once (two
+    # half-rings of ceil((P-1)/2) hops — same ppermute count and wire
+    # bytes, ~2x effective link bandwidth on full-duplex links).  False =
+    # the single forward ring (benches compare the two).
+    ring_bidir: bool = True
+    # fractional bits of the deterministic fixed-point accumulation used
+    # whenever >= 3 pods exchange (ring or one-shot): terms quantise to
+    # round(x * 2^accum_bits) int32 and fold in exact integer arithmetic,
+    # so per-pod aggregates are bit-identical in any fold order.  16 bits
+    # = 2^-16 ABSOLUTE resolution over a +-2^15 aggregate range —
+    # negligible next to the wire formats' own quantisation at unit
+    # gradient scale, but terms below ~2^-17 round to zero: raise this
+    # (e.g. 24 -> 6e-8 resolution, +-2^7 range) for regimes whose
+    # gradients shrink far below unit scale.
+    accum_bits: int = 16
     # rung-ordered optimizer apply: grad_sync applies AdamW to each
     # rung's bucket as soon as that rung's exchange lands instead of
     # barriering on the whole tree (core/sync.py apply_fn path).

@@ -91,7 +91,10 @@ def sync_gradients(grads, state: ACEState, plan: Union[SyncPlan, ExecPlan],
     # --- error feedback + compression + pod aggregation ---
     agg, new_errors = S.sync_tree(grads, state.errors, plan, mesh=mesh,
                                   shardings=shardings, gamma=cfg.gamma,
-                                  block=cfg.topk_block, apply_fn=apply_fn,
+                                  block=cfg.topk_block,
+                                  bidir=cfg.ring_bidir,
+                                  fixed_bits=cfg.accum_bits,
+                                  apply_fn=apply_fn,
                                   apply_aux=apply_aux,
                                   apply_scalars=apply_scalars)
 

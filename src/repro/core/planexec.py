@@ -186,33 +186,45 @@ def bucket_signature(level_idx: Sequence[int], sizes: Sequence[int],
     return tuple(per)
 
 
+def ring_hops(n_pods: int, bidir: bool = True) -> int:
+    """Sequential hops on the ring's critical path: the bidirectional
+    ring splits the P-1 receives over two independent half-rings (forward
+    ⌈(P-1)/2⌉, backward ⌊(P-1)/2⌋), so full-duplex DCN links finish in
+    ⌈(P-1)/2⌉ sequential hop times — up to 2x effective bandwidth at the
+    same total ppermute count and wire bytes."""
+    if n_pods <= 1:
+        return 0
+    return (n_pods // 2) if bidir else (n_pods - 1)
+
+
 def ring_chunk_count(level: Level, nb: int, n_pods: int,
                      block: int = BLOCK,
-                     ring: Optional[int] = None) -> int:
+                     ring: Optional[int] = None,
+                     bidir: bool = True) -> int:
     """Chunk count K for one rung (0 = one-shot ``all_gather`` fallback).
 
     Roofline heuristic over the ``launch.mesh`` constants: the ring
     pipeline hides the per-chunk decode (HBM-bound, ~819 GB/s) behind the
     DCN transfer of the next chunk (6.25 GB/s — >100x slower per byte, so
     the decode always fits under the wire once the bucket is big enough),
-    at the cost of K*(P-1) ppermute launches.  A rung rings when its total
-    DCN time dominates the hop latency; K targets ~RING_TARGET_CHUNK_S of
-    wire time per chunk, clamped to [2, RING_MAX_CHUNKS] and rounded to a
-    power-of-two class so the grid — like the signature it derives from —
-    is stable across replans.
+    at the cost of K*(P-1) ppermute launches.  A rung rings when its
+    per-hop DCN time dominates the hop latency; K targets
+    ~RING_TARGET_CHUNK_S of wire time per chunk-hop, clamped to
+    [2, RING_MAX_CHUNKS] and rounded to a power-of-two class so the grid
+    — like the signature it derives from — is stable across replans.
+    ``bidir`` shortens the critical path to :func:`ring_hops` sequential
+    hops, which only moves the latency thresholds (per-hop wire time is
+    P-independent).
 
     ``ring``: None = the heuristic; 0 (or negative) = force one-shot;
     K > 0 = force K chunks on every ring-capable rung (tests, benches).
 
-    Cross-pod determinism: on a 2-pod ring (the production cloud-edge
-    mesh — the paper's regime) the ring aggregate is bit-identical to the
-    one-shot path on every pod (two-term sums commute).  For P >= 3 each
-    pod folds peers in its own ring-arrival order, so fp non-
-    associativity lets per-pod aggregates differ at ulp level while the
-    one-shot path keeps a fixed pod order — the AUTO heuristic therefore
-    only rings 2-pod meshes; forcing ``ring=K`` on a larger mesh is
-    allowed for experiments but accepts that drift (ROADMAP tracks
-    deterministic accumulation for P >= 3).
+    Cross-pod determinism: the ring is bit-deterministic on ANY pod
+    count — P = 2 trivially (two-term sums commute), P >= 3 through the
+    codecs' order-insensitive accumulation (fixed-point partial sums /
+    integer vote counts, canonical-order buffering for top-k; see
+    ``Codec.ef_sync_ring``), so the auto heuristic rings every mesh and
+    forced rings share the same deterministic fold.
     """
     codec = level.codec
     if (n_pods <= 1 or nb <= 0
@@ -220,19 +232,19 @@ def ring_chunk_count(level: Level, nb: int, n_pods: int,
         return 0
     if ring is not None:
         return 0 if ring <= 0 else min(int(ring), nb)
-    if n_pods != 2:
-        return 0  # auto path: stay bit-deterministic across pods
     payload = codec.payload_bytes(nb * block, block)
-    wire_t = payload * (n_pods - 1) / DCN_BW
-    # decode reads the payload + reads/writes the f32 accumulator per hop
+    hops = ring_hops(n_pods, bidir)
+    hop_t = payload / DCN_BW             # per-hop wire time (full payload)
+    # decode reads the payload + reads/writes the f32 accumulator per
+    # received peer — all P-1 of them, whichever direction they arrive by
     decode_t = (payload + 8.0 * nb * block) * (n_pods - 1) / HBM_BW
     # not worth pipelining: the decode we could hide is smaller than the
     # launch overhead of even a 2-chunk ring
-    if decode_t < 2 * (n_pods - 1) * RING_HOP_LATENCY_S:
+    if decode_t < 2 * hops * RING_HOP_LATENCY_S:
         return 0
-    if wire_t < 8 * (n_pods - 1) * RING_HOP_LATENCY_S:
+    if hop_t < 8 * RING_HOP_LATENCY_S:
         return 0  # latency-bound already; chunking only adds hops
-    k = int(round(wire_t / ((n_pods - 1) * RING_TARGET_CHUNK_S)))
+    k = int(round(hop_t / RING_TARGET_CHUNK_S))
     k = max(2, min(RING_MAX_CHUNKS, nb, k))
     k = 1 << (k - 1).bit_length()        # power-of-two chunk class
     return min(k, RING_MAX_CHUNKS, nb)
@@ -250,7 +262,7 @@ def ring_override(ring_chunks: int) -> Optional[int]:
 def exec_grid(level_idx: Sequence[int], sizes: Sequence[int],
               levels: Sequence[Level], n_pods: int, block: int = BLOCK,
               growth: Optional[float] = None,
-              ring: Optional[int] = None
+              ring: Optional[int] = None, bidir: bool = True
               ) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
     """(sig, chunks) of the executed exchange: the class-padded signature
     with each ringing rung rounded up to a chunk multiple.  The ONE place
@@ -261,7 +273,7 @@ def exec_grid(level_idx: Sequence[int], sizes: Sequence[int],
                                 growth))
     chunks = []
     for r, nb in enumerate(sig):
-        k = ring_chunk_count(levels[r], nb, n_pods, block, ring)
+        k = ring_chunk_count(levels[r], nb, n_pods, block, ring, bidir)
         if k > 1 and nb % k:
             sig[r] = nb = ((nb + k - 1) // k) * k
         chunks.append(k)
@@ -320,7 +332,9 @@ class ExecPlan:
     cache key).  ``total_blocks`` is the NB of the *local* leaf layout the
     perms index into (one zero pad block lives at index NB).  ``chunks``
     is the static per-rung chunk grid of the ring exchange (0 = one-shot;
-    see :func:`ring_chunk_count`)."""
+    see :func:`ring_chunk_count`); ``bidir`` selects the bidirectional
+    half-ring circulation for ringing rungs (static: it changes the
+    lowered ppermute pattern)."""
     levels: Tuple[Level, ...]
     sig: Tuple[int, ...]              # padded block count per rung
     block: int
@@ -328,10 +342,11 @@ class ExecPlan:
     perms: Tuple[jax.Array, ...]      # int32[S_r] per rung with sig[r] > 0
     omega: jax.Array                  # f32[n_pods] aggregation weights
     chunks: Tuple[int, ...] = ()      # ring chunk count per rung
+    bidir: bool = True                # both DCN directions at once
 
     def static_key(self) -> tuple:
-        return (self.levels, self.sig, self.chunks, self.block,
-                self.total_blocks)
+        return (self.levels, self.sig, self.chunks, self.bidir,
+                self.block, self.total_blocks)
 
     def with_omega(self, omega) -> "ExecPlan":
         return replace(self, omega=jnp.asarray(omega, jnp.float32))
@@ -340,17 +355,19 @@ class ExecPlan:
 jax.tree_util.register_pytree_node(
     ExecPlan,
     lambda ep: ((ep.perms, ep.omega),
-                (ep.levels, ep.sig, ep.block, ep.total_blocks, ep.chunks)),
+                (ep.levels, ep.sig, ep.block, ep.total_blocks, ep.chunks,
+                 ep.bidir)),
     lambda aux, ch: ExecPlan(levels=aux[0], sig=aux[1], block=aux[2],
                              total_blocks=aux[3], chunks=aux[4],
-                             perms=tuple(ch[0]), omega=ch[1]),
+                             bidir=aux[5], perms=tuple(ch[0]),
+                             omega=ch[1]),
 )
 
 
 def build_exec_plan(plan, sizes: Optional[Sequence[int]] = None, *,
                     block: int = BLOCK, growth: Optional[float] = None,
                     omega=None, n_pods: int = 1,
-                    ring: Optional[int] = None,
+                    ring: Optional[int] = None, bidir: bool = True,
                     layout: Optional[LeafLayout] = None) -> ExecPlan:
     """Lower a :class:`SyncPlan` to an :class:`ExecPlan`.
 
@@ -379,7 +396,7 @@ def build_exec_plan(plan, sizes: Optional[Sequence[int]] = None, *,
     nbs, starts = layout.nbs, layout.starts
     NB = layout.total_blocks
     sig, chunks = exec_grid(level_idx, layout.sizes, plan.levels, n_pods,
-                            block, growth, ring)
+                            block, growth, ring, bidir)
     member = [[] for _ in range(L)]
     for i, li in enumerate(level_idx):
         if nbs[i]:
@@ -400,4 +417,4 @@ def build_exec_plan(plan, sizes: Optional[Sequence[int]] = None, *,
     om = plan.omega if omega is None else omega
     return ExecPlan(levels=tuple(plan.levels), sig=sig, block=block,
                     total_blocks=NB, perms=tuple(perms), chunks=chunks,
-                    omega=jnp.asarray(om, jnp.float32))
+                    bidir=bidir, omega=jnp.asarray(om, jnp.float32))

@@ -119,7 +119,8 @@ class Scheduler:
             plan.level_idx, self.sizes, plan.levels, self.n_pods,
             block=self.cfg.topk_block,
             growth=self.pad_growth if adaptive else None,
-            ring=planexec.ring_override(self.cfg.ring_chunks))
+            ring=planexec.ring_override(self.cfg.ring_chunks),
+            bidir=self.cfg.ring_bidir)
         plan.bucket_sig = sig
         plan.ring_chunks = chunks
         plan.bucket_block = self.cfg.topk_block

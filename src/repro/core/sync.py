@@ -55,6 +55,7 @@ from repro import compat
 from repro.codecs import POD_AXIS, plan_wire_bytes
 from repro.core import compression as C
 from repro.core.planexec import ExecPlan, build_exec_plan, n_blocks
+from repro.kernels.decode import FIXED_POINT_BITS
 from repro.core.scheduler import SyncPlan
 from repro.kernels import ops
 from repro.models.shardctx import norm_spec
@@ -174,24 +175,28 @@ def _leaf_blocks(leaves, block: int) -> jax.Array:
 
 
 def _rung_exchange(codec, bucket, ebucket, omega, omega_own, *, chunks,
-                   gamma, n_pods, block, use_pallas):
+                   bidir, gamma, n_pods, block, use_pallas, fixed_bits):
     """One rung's EF + compress + exchange round: the chunked ring
     pipeline when the plan's chunk grid says so (``chunks > 0``; see
     ``planexec.ring_chunk_count``), the one-shot ``all_gather`` path
-    otherwise."""
+    otherwise.  Both paths accumulate deterministically (fixed-point /
+    integer / canonical-order — the codec's choice) whenever >= 3 pods
+    exchange, so per-pod aggregates are bit-identical on any mesh and
+    ring <-> one-shot replans never move the numerics."""
     if chunks and n_pods > 1:
         return codec.ef_sync_ring(
             bucket, ebucket, omega, omega_own, gamma=gamma,
             n_pods=n_pods, n_chunks=chunks, block=block, axis=POD_AXIS,
-            use_pallas=use_pallas)
+            use_pallas=use_pallas, bidir=bidir, fixed_bits=fixed_bits)
     return codec.ef_sync(
         bucket, ebucket, omega, omega_own, gamma=gamma, n_pods=n_pods,
-        block=block, axis=POD_AXIS, use_pallas=use_pallas)
+        block=block, axis=POD_AXIS, use_pallas=use_pallas,
+        fixed_bits=fixed_bits)
 
 
 def _repack_sync_local(gs, es, perms, omega, omega_own, aux, scalars, *,
                        ep: ExecPlan, gamma, n_pods, use_pallas,
-                       apply_fn=None):
+                       fixed_bits, apply_fn=None):
     """Fully local per-device sync of the whole tree through the plan's
     gather/scatter repacking.
 
@@ -235,8 +240,8 @@ def _repack_sync_local(gs, es, perms, omega, omega_own, aux, scalars, *,
         b_agg, b_err = _rung_exchange(
             codec, fb[perm].reshape(-1), eb[perm].reshape(-1), omega,
             omega_own, chunks=ep.chunks[r] if ep.chunks else 0,
-            gamma=gamma, n_pods=n_pods, block=block,
-            use_pallas=use_pallas)
+            bidir=ep.bidir, gamma=gamma, n_pods=n_pods, block=block,
+            use_pallas=use_pallas, fixed_bits=fixed_bits)
         err = err.at[perm].set(b_err.reshape(S, block))
         if apply_fn is None:
             agg = agg.at[perm].set(b_agg.reshape(S, block))
@@ -277,8 +282,9 @@ def _auto_axes(mesh):
 def sync_tree(tree, errors, plan: Union[SyncPlan, ExecPlan], *, mesh,
               shardings, gamma: float, block: int = C.BLOCK,
               inside_manual: bool = None, use_pallas: bool = None,
-              ring: Optional[int] = None, apply_fn=None, apply_aux=(),
-              apply_scalars=()):
+              ring: Optional[int] = None, bidir: bool = True,
+              fixed_bits: int = FIXED_POINT_BITS, apply_fn=None,
+              apply_aux=(), apply_scalars=()):
     """Compress + hierarchically aggregate a gradient (or delta) pytree.
 
     Must be called inside the outer per-pod shard_map when the mesh has a
@@ -293,9 +299,12 @@ def sync_tree(tree, errors, plan: Union[SyncPlan, ExecPlan], *, mesh,
     a non-empty bucket either ONE pod collective (the one-shot path) or
     the plan's K-chunk ``ppermute`` ring (big DCN-bound buckets; same
     bytes on the wire — tests/test_collectives.py counts both in the
-    lowered HLO).  ``ring`` tunes the chunk heuristic for the SyncPlan
-    lowering path (None = roofline auto, 0 = force one-shot, K = force K
-    chunks; ExecPlans already carry their chunk grid).
+    lowered HLO).  ``ring`` / ``bidir`` tune the chunk heuristic and the
+    ring direction for the SyncPlan lowering path (None = roofline auto,
+    0 = force one-shot, K = force K chunks; ExecPlans already carry
+    their chunk grid and direction).  ``fixed_bits`` sets the
+    deterministic fixed-point accumulation width used whenever >= 3 pods
+    exchange (``ACESyncConfig.accum_bits``).
 
     Rung-ordered apply: with ``apply_fn`` given, ``apply_aux`` is a tuple
     of pytrees shaped like ``tree`` (e.g. params / m / v) and the sync
@@ -335,7 +344,7 @@ def sync_tree(tree, errors, plan: Union[SyncPlan, ExecPlan], *, mesh,
         else:
             lsz = [math.prod(l.shape) for l in leaves]
         ep = build_exec_plan(plan, lsz, block=block, growth=None,
-                             n_pods=n_pods, ring=ring)
+                             n_pods=n_pods, ring=ring, bidir=bidir)
     else:
         ep = plan
 
@@ -351,7 +360,7 @@ def sync_tree(tree, errors, plan: Union[SyncPlan, ExecPlan], *, mesh,
 
     fn = functools.partial(_repack_sync_local, ep=ep, gamma=gamma,
                            n_pods=n_pods, use_pallas=use_pallas,
-                           apply_fn=apply_fn)
+                           fixed_bits=fixed_bits, apply_fn=apply_fn)
     gs, es = tuple(leaves), tuple(e_leaves)
     aux = tuple(tuple(treedef.flatten_up_to(a)) for a in apply_aux)
     scalars = tuple(apply_scalars)

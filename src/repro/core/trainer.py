@@ -35,6 +35,7 @@ between syncs while remaining one SPMD program.
 from __future__ import annotations
 
 import functools
+import threading
 from typing import Callable, Dict, Optional, Tuple, Union
 
 import jax
@@ -68,6 +69,15 @@ def _pod_prefix(spec: P, rank: int) -> P:
     return P(POD, *rest[: rank - 1])
 
 
+def _array_spec(x):
+    """ShapeDtypeStruct carrying the array's sharding — the ONE spec
+    builder the AOT warm-up lowers against and the dry-run/plan specs
+    reuse, so recorded call-time specs can never diverge from the warmed
+    lowering."""
+    return jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                sharding=getattr(x, "sharding", None))
+
+
 class Trainer:
     #: max distinct assignments whose ExecPlan (device perm arrays) stays
     #: resident; beyond this the oldest is evicted and rebuilt on demand.
@@ -98,6 +108,16 @@ class Trainer:
                                                 run.acesync.topk_block)
         self._step_cache: Dict = {}    # (levels, sig, block, kind) -> jit fn
         self._exec_cache: Dict = {}    # (levels, level_idx, adaptive) -> EP
+        self._aot_cache: Dict = {}     # (static_key, kind) -> AOT Compiled
+        self._arg_specs: Dict = {}     # kind -> (state_specs, batch_specs)
+        # guards the build-and-evict sequences of the plan/AOT caches:
+        # warm_compile runs them from a background thread while the
+        # foreground step evicts the same dicts
+        self._cache_lock = threading.Lock()
+        #: AOT compilations performed by warm_compile (telemetry: the
+        #: compiles the speculative replan warm-up moved off the
+        #: foreground step; benchmarks record it)
+        self.warm_compiles = 0
 
     # ------------------------------------------------------------------
     # state
@@ -255,16 +275,34 @@ class Trainer:
         return self._join_pod(new_st), metrics
 
     def _body_delta_sync(self, state, batch, plan: ExecPlan):
-        """Compress/aggregate (theta - anchor); theta <- anchor + agg."""
+        """Compress/aggregate (theta - anchor); theta <- anchor + agg.
+
+        With ``overlap_apply`` (default) the anchor update is rung-
+        ordered the same way grad_sync's AdamW is: ``sync_tree``'s
+        ``apply_fn`` path adds each rung's aggregated delta onto the
+        anchor rows the moment that rung's exchange lands, so the anchor
+        math of rung r hides behind rung r+1's DCN transfer instead of
+        barriering on the whole tree."""
         st = self._split_pod(state)
         delta = jax.tree.map(lambda p, a: (p - a).astype(p.dtype),
                              st["params"], st["anchor"])
         div = D.pod_divergence(st["params"], self.mesh)
-        agg, new_ace, metrics = acesync.sync_gradients(
-            delta, st["ace"], plan, mesh=self.mesh,
-            shardings=self.param_shardings, cfg=self.run.acesync)
-        new_params = jax.tree.map(lambda a, d: (a + d).astype(a.dtype),
-                                  st["anchor"], agg)
+        if self.run.acesync.overlap_apply:
+            def apply_anchor(d_rows, aux_rows, _scalars):
+                (a_rows,) = aux_rows
+                return (a_rows + d_rows,)
+
+            out, new_ace, metrics = acesync.sync_gradients(
+                delta, st["ace"], plan, mesh=self.mesh,
+                shardings=self.param_shardings, cfg=self.run.acesync,
+                apply_fn=apply_anchor, apply_aux=(st["anchor"],))
+            (new_params,) = out
+        else:
+            agg, new_ace, metrics = acesync.sync_gradients(
+                delta, st["ace"], plan, mesh=self.mesh,
+                shardings=self.param_shardings, cfg=self.run.acesync)
+            new_params = jax.tree.map(lambda a, d: (a + d).astype(a.dtype),
+                                      st["anchor"], agg)
         new_ace = new_ace._replace(
             div_ema=0.9 * st["ace"].div_ema + 0.1 * self._pmean(div))
         new_st = dict(st, params=new_params,
@@ -317,13 +355,17 @@ class Trainer:
             ep = build_exec_plan(plan, layout=self.leaf_layout,
                                  growth=growth, n_pods=self.n_pods,
                                  ring=planexec.ring_override(
-                                     cfg.ring_chunks))
+                                     cfg.ring_chunks),
+                                 bidir=cfg.ring_bidir)
             # bounded: adaptive runs see a fresh assignment nearly every
             # replan, and each entry holds O(total_blocks) device perms —
-            # evict oldest-first, rebuilding is a cheap numpy pass
-            while len(self._exec_cache) >= self._EXEC_CACHE_MAX:
-                self._exec_cache.pop(next(iter(self._exec_cache)))
-            self._exec_cache[key] = ep
+            # evict oldest-first, rebuilding is a cheap numpy pass.  The
+            # lock keeps the evict-and-insert atomic against the
+            # background warm_compile thread.
+            with self._cache_lock:
+                while len(self._exec_cache) >= self._EXEC_CACHE_MAX:
+                    self._exec_cache.pop(next(iter(self._exec_cache)))
+                self._exec_cache[key] = ep
         return ep.with_omega(plan.omega)
 
     def jit_step(self, plan: Union[SyncPlan, ExecPlan],
@@ -369,14 +411,46 @@ class Trainer:
                 out_specs=(state_in, P()),
                 manual_axes=manual)
             fn = jax.jit(smapped, donate_argnums=(0,))
-        self._step_cache[key] = fn
-        return fn
+        # setdefault: a background warm_compile thread may race this
+        # insert for the same key — both must end up sharing ONE jitted
+        # fn, or compile_count() would sum whichever copy survived
+        return self._step_cache.setdefault(key, fn)
+
+    def _record_specs(self, kind: str, state, batch):
+        """Remember the (state, batch) avals + shardings of this step
+        kind once — what warm_compile AOT-lowers against (shapes never
+        change within a run)."""
+        if kind in self._arg_specs:
+            return
+        self._arg_specs[kind] = (jax.tree.map(_array_spec, state),
+                                 jax.tree.map(_array_spec, batch))
 
     def step(self, state, batch, plan: Union[SyncPlan, ExecPlan],
              kind: str = "grad_sync"):
         """Execute one step kind under ``plan``.  The plan rides as data;
-        the compiled step is resolved from the signature-keyed cache."""
+        the compiled step is resolved from the signature-keyed cache —
+        or from the AOT cache when :meth:`warm_compile` already built
+        this signature's executable in the background."""
         ep = self.exec_plan(plan)
+        self._record_specs(kind, state, batch)
+        key = (ep.static_key(), kind)
+        warmed = self._aot_cache.get(key)
+        if warmed is not None:
+            # LRU touch: re-insert so eviction (oldest-first insertion
+            # order) never drops the signature currently being stepped
+            with self._cache_lock:
+                if key in self._aot_cache:
+                    self._aot_cache[key] = self._aot_cache.pop(key)
+            try:
+                return warmed(state, batch, ep)
+            except (TypeError, ValueError):
+                # arg aval/sharding drifted from the warmed lowering —
+                # raised by argument validation BEFORE dispatch, so the
+                # donated state is untouched: drop the stale executable
+                # and fall back.  Anything else (e.g. a runtime fault
+                # after dispatch, when the donated buffers are already
+                # gone) propagates — re-running would only mask it.
+                self._aot_cache.pop(key, None)
         return self.jit_step(ep, kind)(state, batch, ep)
 
     def step_fn(self, plan: Union[SyncPlan, ExecPlan],
@@ -400,16 +474,77 @@ class Trainer:
 
         return jax.tree.map(spec, ep)
 
+    @staticmethod
+    def _fn_cache_size(fn) -> int:
+        try:
+            return fn._cache_size()
+        except Exception:       # pragma: no cover - very old jax
+            return 1
+
     def compile_count(self) -> int:
         """Total traced-and-compiled variants across the step cache — the
-        number tests/test_replan.py pins flat across replans."""
-        total = 0
-        for fn in self._step_cache.values():
+        number tests/test_replan.py pins flat across replans.  AOT
+        executables from :meth:`warm_compile` are counted separately
+        (``warm_compiles``): they never stall the foreground step, which
+        is what this count gates.  The list() snapshot keeps the
+        iteration safe against a background warm thread inserting via
+        jit_step mid-count."""
+        return sum(self._fn_cache_size(fn)
+                   for fn in list(self._step_cache.values()))
+
+    # ------------------------------------------------------------------
+    # speculative signature warm-up (replan-time background compile)
+    # ------------------------------------------------------------------
+    def step_is_warm(self, plan: Union[SyncPlan, ExecPlan],
+                     kinds: Optional[Tuple[str, ...]] = None) -> bool:
+        """Whether stepping under ``plan`` would hit a compiled
+        executable for every step kind seen so far (``kinds`` narrows
+        the check)."""
+        ep = self.exec_plan(plan)
+        for kind in (kinds if kinds is not None else self._arg_specs):
+            key = (ep.static_key(), kind)
+            if key in self._aot_cache:
+                continue
+            fn = self._step_cache.get(key)
+            if fn is None or self._fn_cache_size(fn) == 0:
+                return False
+        return True
+
+    def warm_compile(self, plan: Union[SyncPlan, ExecPlan],
+                     kinds: Optional[Tuple[str, ...]] = None) -> bool:
+        """AOT-compile the step for ``plan``'s bucket signature against
+        the recorded argument specs — safe to run from a background
+        thread, so the host replan loop can warm an incoming signature
+        BEFORE swapping the plan in and a class-ladder rung change never
+        stalls the device on a foreground compile (ROADMAP follow-up).
+        Returns True when every requested kind is warm afterwards."""
+        ep = self.exec_plan(plan)
+        ok = True
+        for kind in (kinds if kinds is not None else tuple(self._arg_specs)):
+            key = (ep.static_key(), kind)
+            if key in self._aot_cache:
+                continue
+            fn = self._step_cache.get(key)
+            if fn is not None and self._fn_cache_size(fn) > 0:
+                continue        # the jit cache already holds it
+            specs = self._arg_specs.get(kind)
+            if specs is None:
+                ok = False      # never stepped this kind: nothing to lower
+                continue
+            fn = self.jit_step(ep, kind)
             try:
-                total += fn._cache_size()
-            except Exception:   # pragma: no cover - very old jax
-                total += 1
-        return total
+                compiled = fn.lower(
+                    specs[0], specs[1],
+                    jax.tree.map(_array_spec, ep)).compile()
+            except Exception:   # pragma: no cover - defensive: a failed
+                ok = False      # warm-up degrades to a foreground compile
+                continue
+            with self._cache_lock:
+                while len(self._aot_cache) >= self._EXEC_CACHE_MAX:
+                    self._aot_cache.pop(next(iter(self._aot_cache)))
+                self._aot_cache[key] = compiled
+            self.warm_compiles += 1
+        return ok
 
     # convenience plans per strategy ------------------------------------
     def default_plan(self, importance=None, bandwidth_mbps: float = 50.0,

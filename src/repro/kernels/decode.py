@@ -21,6 +21,24 @@ the DCN transfer of the next chunk:
 data, swapped per replan), so it rides as a (1, 1) operand instead of a
 baked constant.  The arithmetic association matches the jnp oracle path
 (``acc + w * (q * scale)``) bit for bit on identical inputs.
+
+Deterministic (fixed-point) variants
+------------------------------------
+For P >= 3 pods the ring folds peers in per-pod arrival order, so the
+float accumulate above would let per-pod aggregates differ at ulp level
+(fp addition is not associative).  The ``*_fp`` kernels instead quantise
+each weighted term to int32 fixed point and accumulate in INTEGER
+arithmetic — exact, commutative and associative, so every pod reaches
+bit-identical sums in any fold order:
+
+    acc_i32 += round(w * decode(chunk) * 2^bits)       (int32 add)
+
+``fixed_point`` / ``FIXED_POINT_BITS`` define the shared quantiser (used
+by the kernels, the oracle refs AND the codecs' one-shot fold, so ring
+and all_gather paths stay bit-identical).  With the default 16
+fractional bits the representable aggregate range is ±2^15 at 2^-16
+absolute resolution; per-term saturation (and, past it, int32 wraparound)
+is itself deterministic — accuracy degrades, determinism never does.
 """
 from __future__ import annotations
 
@@ -32,6 +50,30 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.quantize import unpack_nibbles
 from repro.kernels.topk_compress import LANES, ROWS
+
+#: fractional bits of the deterministic fixed-point accumulator
+#: (``ACESyncConfig.accum_bits`` overrides per run).
+FIXED_POINT_BITS = 16
+
+#: largest f32 magnitude that casts to int32 without overflow (2^31 - 128,
+#: the nearest representable float below 2^31).
+_INT32_SAT = 2147483520.0
+
+
+def fixed_point(x, bits: int = FIXED_POINT_BITS):
+    """f32 -> int32 fixed point: round-to-nearest-even at ``bits``
+    fractional bits, saturating at the int32 range.  Pure jnp, so it runs
+    inside kernel bodies, the oracle refs and the codec fold alike —
+    every path quantises a term to exactly the same integer."""
+    s = jnp.round(x * jnp.float32(2.0 ** bits))
+    return jnp.clip(s, -_INT32_SAT, _INT32_SAT).astype(jnp.int32)
+
+
+def from_fixed_point(acc, bits: int = FIXED_POINT_BITS):
+    """int32 fixed point -> f32 (exact: int32 -> f64-free scale by a
+    power of two)."""
+    return acc.astype(jnp.float32) * jnp.float32(2.0 ** -bits)
+
 
 _spec = pl.BlockSpec((ROWS, LANES), lambda i: (i, 0))
 _sspec = pl.BlockSpec((ROWS, 1), lambda i: (i, 0))
@@ -131,6 +173,83 @@ def _topk_kernel(acc_ref, q_ref, i_ref, s_ref, w_ref, out_ref, *, k: int):
         return acc + hot * (w * vals[:, j][:, None])
 
     out_ref[...] = jax.lax.fori_loop(0, k, body, acc)
+
+
+def _int8_fp_kernel(acc_ref, q_ref, s_ref, w_ref, out_ref, *, bits: int):
+    w = w_ref[0, 0]
+    q = q_ref[...].astype(jnp.float32)
+    out_ref[...] = acc_ref[...] + fixed_point(w * (q * s_ref[...]), bits)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def dequant_accum_int8_fp_fused(acc, q, s, w, *, bits: int,
+                                interpret: bool = False):
+    """Deterministic int8 decode-accumulate: acc (rows, LANES) int32
+    += fixed_point(w * (q * s)) — exact integer partial sums, fold-order
+    insensitive."""
+    n_rows, lanes = acc.shape
+    assert lanes == LANES and n_rows % ROWS == 0, (acc.shape,)
+    return pl.pallas_call(
+        functools.partial(_int8_fp_kernel, bits=bits),
+        grid=(n_rows // ROWS,),
+        in_specs=[_spec, _spec, _sspec, _wspec],
+        out_specs=_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rows, LANES), jnp.int32),
+        interpret=interpret,
+    )(acc, q, s, w)
+
+
+def _int4_fp_kernel(acc_ref, p_ref, s_ref, w_ref, out_ref, *, bits: int):
+    w = w_ref[0, 0]
+    q = unpack_nibbles(p_ref[...])
+    out_ref[...] = acc_ref[...] + fixed_point(w * (q * s_ref[...]), bits)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def dequant_accum_int4_fp_fused(acc, p, s, w, *, bits: int,
+                                interpret: bool = False):
+    """Deterministic int4 decode-accumulate on the int32 fixed-point
+    accumulator (packed-nibble unpack fused in)."""
+    n_rows, lanes = acc.shape
+    assert lanes == LANES and n_rows % ROWS == 0, (acc.shape,)
+    pspec = pl.BlockSpec((ROWS, LANES // 2), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_int4_fp_kernel, bits=bits),
+        grid=(n_rows // ROWS,),
+        in_specs=[_spec, pspec, _sspec, _wspec],
+        out_specs=_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rows, LANES), jnp.int32),
+        interpret=interpret,
+    )(acc, p, s, w)
+
+
+def _sign_fp_kernel(vote_ref, mag_ref, p_ref, s_ref, w_ref, vout_ref,
+                    mout_ref, *, bits: int):
+    w = w_ref[0, 0]
+    wq = fixed_point(w, bits)               # omega quantised once per hop
+    signs = unpack_signs(p_ref[...]).astype(jnp.int32)    # exact ±1
+    vout_ref[...] = vote_ref[...] + wq * signs
+    mout_ref[...] = mag_ref[...] + fixed_point(w * s_ref[...], bits)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def sign_vote_accum_fp_fused(vote, mag, p, s, w, *, bits: int,
+                             interpret: bool = False):
+    """Deterministic majority-vote partials: integer vote counts
+    (vote int32 += fixed_point(w) * ±1) and fixed-point magnitude
+    (mag int32 += fixed_point(w * s)) — both exact and commutative."""
+    n_rows, lanes = vote.shape
+    assert lanes == LANES and n_rows % ROWS == 0, (vote.shape,)
+    pspec = pl.BlockSpec((ROWS, LANES // 8), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_sign_fp_kernel, bits=bits),
+        grid=(n_rows // ROWS,),
+        in_specs=[_spec, _sspec, pspec, _sspec, _wspec],
+        out_specs=[_spec, _sspec],
+        out_shape=[jax.ShapeDtypeStruct((n_rows, LANES), jnp.int32),
+                   jax.ShapeDtypeStruct((n_rows, 1), jnp.int32)],
+        interpret=interpret,
+    )(vote, mag, p, s, w)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

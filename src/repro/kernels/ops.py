@@ -29,8 +29,11 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.topk_compress import ef_topk_select, LANES, ROWS
-from repro.kernels.decode import (dequant_accum_int4_fused,
+from repro.kernels.decode import (dequant_accum_int4_fp_fused,
+                                  dequant_accum_int4_fused,
+                                  dequant_accum_int8_fp_fused,
                                   dequant_accum_int8_fused,
+                                  sign_vote_accum_fp_fused,
                                   sign_vote_accum_fused,
                                   topk_scatter_accum_fused)
 from repro.kernels.quantize import (quantize_int8_fused, dequantize_int8,
@@ -142,42 +145,67 @@ def _w2(w):
     return jnp.asarray(w, jnp.float32).reshape(1, 1)
 
 
-def decode_accum_int8(acc, q, s, w, *, use_pallas: bool = True):
+def decode_accum_int8(acc, q, s, w, *, use_pallas: bool = True,
+                      fixed_bits=None):
     """acc (nb, LANES) f32 += w * (q * s) fused — the int8 rung's ring
-    decode-accumulate.  ``s``: (nb,) f32 per-block scales."""
+    decode-accumulate.  ``s``: (nb,) f32 per-block scales.
+    ``fixed_bits`` set -> the deterministic variant on the int32
+    fixed-point accumulator (see kernels/decode.py)."""
     nb = acc.shape[0]
     rows = ((nb + ROWS - 1) // ROWS) * ROWS
     args = (_pad_rows2(acc, rows), _pad_rows2(q, rows),
             _pad_rows2(s.reshape(-1, 1), rows), _w2(w))
-    if use_pallas:
+    if fixed_bits is not None:
+        if use_pallas:
+            out = dequant_accum_int8_fp_fused(*args, bits=int(fixed_bits),
+                                              interpret=interpret_mode())
+        else:
+            out = ref.dequant_accum_int8_fp_ref(*args, int(fixed_bits))
+    elif use_pallas:
         out = dequant_accum_int8_fused(*args, interpret=interpret_mode())
     else:
         out = ref.dequant_accum_int8_ref(*args)
     return out[:nb]
 
 
-def decode_accum_int4(acc, p, s, w, *, use_pallas: bool = True):
-    """acc (nb, LANES) f32 += w * dequant(p packed nibbles, s) fused."""
+def decode_accum_int4(acc, p, s, w, *, use_pallas: bool = True,
+                      fixed_bits=None):
+    """acc (nb, LANES) f32 += w * dequant(p packed nibbles, s) fused.
+    ``fixed_bits`` set -> deterministic int32 fixed-point accumulate."""
     nb = acc.shape[0]
     rows = ((nb + ROWS - 1) // ROWS) * ROWS
     args = (_pad_rows2(acc, rows), _pad_rows2(p, rows),
             _pad_rows2(s.reshape(-1, 1), rows), _w2(w))
-    if use_pallas:
+    if fixed_bits is not None:
+        if use_pallas:
+            out = dequant_accum_int4_fp_fused(*args, bits=int(fixed_bits),
+                                              interpret=interpret_mode())
+        else:
+            out = ref.dequant_accum_int4_fp_ref(*args, int(fixed_bits))
+    elif use_pallas:
         out = dequant_accum_int4_fused(*args, interpret=interpret_mode())
     else:
         out = ref.dequant_accum_int4_ref(*args)
     return out[:nb]
 
 
-def sign_vote_accum(vote, mag, p, s, w, *, use_pallas: bool = True):
+def sign_vote_accum(vote, mag, p, s, w, *, use_pallas: bool = True,
+                    fixed_bits=None):
     """Majority-vote partials: vote (nb, LANES) += w * unpacked signs,
-    mag (nb,) += w * s, fused."""
+    mag (nb,) += w * s, fused.  ``fixed_bits`` set -> integer vote counts
+    + fixed-point magnitude (deterministic, fold-order insensitive)."""
     nb = vote.shape[0]
     rows = ((nb + ROWS - 1) // ROWS) * ROWS
     args = (_pad_rows2(vote, rows), _pad_rows2(mag.reshape(-1, 1), rows),
             _pad_rows2(p, rows), _pad_rows2(s.reshape(-1, 1), rows),
             _w2(w))
-    if use_pallas:
+    if fixed_bits is not None:
+        if use_pallas:
+            v, m = sign_vote_accum_fp_fused(*args, bits=int(fixed_bits),
+                                            interpret=interpret_mode())
+        else:
+            v, m = ref.sign_vote_accum_fp_ref(*args, int(fixed_bits))
+    elif use_pallas:
         v, m = sign_vote_accum_fused(*args, interpret=interpret_mode())
     else:
         v, m = ref.sign_vote_accum_ref(*args)

@@ -53,6 +53,24 @@ def sign_vote_accum_ref(vote, mag, p, s, w):
     return vote + w * unpack_signs(p), mag + w * s
 
 
+def dequant_accum_int8_fp_ref(acc, q, s, w, bits):
+    from repro.kernels.decode import fixed_point
+    return acc + fixed_point(w * (q.astype(jnp.float32) * s), bits)
+
+
+def dequant_accum_int4_fp_ref(acc, p, s, w, bits):
+    from repro.kernels.decode import fixed_point
+    from repro.kernels.quantize import unpack_nibbles
+    return acc + fixed_point(w * (unpack_nibbles(p) * s), bits)
+
+
+def sign_vote_accum_fp_ref(vote, mag, p, s, w, bits):
+    from repro.kernels.decode import fixed_point, unpack_signs
+    wq = fixed_point(w, bits)
+    return (vote + wq * unpack_signs(p).astype(jnp.int32),
+            mag + fixed_point(w * s, bits))
+
+
 def topk_scatter_accum_ref(acc, q, idx, s, w):
     vals = q.astype(jnp.float32) * s
     rows = jnp.arange(acc.shape[0])[:, None]

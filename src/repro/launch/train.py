@@ -21,6 +21,11 @@ never stalls the device to replan.
   * Per-step metrics and the divergence EMA are fetched LAGGED — the
     record for step t is materialised while step t+1 is already running
     on device, so the host read overlaps device compute.
+  * A replan whose bucket signature crosses a size-class boundary is
+    warmed SPECULATIVELY: the new signature's step is AOT-compiled in a
+    background thread (``Trainer.warm_compile``) before the plan swap
+    lands, so a class-ladder rung change never stalls the device on a
+    foreground compile.
 
 Runs on any mesh (including none) with any registered arch; reduced configs
 train end-to-end on CPU (see examples/train_lm.py).
@@ -29,6 +34,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import threading
 import time
 from typing import Optional, Union
 
@@ -90,6 +96,7 @@ class TrainLoop:
         self._steps_since_sync = 0
         self._host_step = None          # host mirror of the device counter
         self._pending_replan = None     # (assign_dev, omega, launched_step)
+        self._warming = None            # (plan, thread, launched_step)
         self._div_fetch = None          # lagged divergence EMA fetch
         self.replan_latencies = []      # steps from replan launch to apply
 
@@ -153,9 +160,39 @@ class TrainLoop:
             omega=omega)
         return self._plan
 
+    def _swap_plan(self, plan, launched) -> bool:
+        self._plan = plan
+        if self._host_step is not None:
+            self.replan_latencies.append(self._host_step - launched)
+        return True
+
     def poll_replan(self, block: bool = False) -> bool:
         """Apply a pending device replan if its async fetch has landed.
-        Returns True when the plan was swapped."""
+        Returns True when the plan was swapped.
+
+        Signature warm-up: when the fetched assignment crosses a
+        size-class boundary (a bucket signature the step cache has not
+        compiled), the swap is DEFERRED — the new signature's step is
+        AOT-compiled in a background thread (``Trainer.warm_compile``)
+        while the loop keeps stepping on the current plan, and the swap
+        lands on a later poll once the executable is ready.  A rung/class
+        change therefore never stalls the device on a foreground
+        compile."""
+        if self._warming is not None:
+            plan, th, launched = self._warming
+            if self._pending_replan is not None \
+                    and _device_ready(self._pending_replan[0]):
+                # a newer assignment landed while this one was warming:
+                # abandon the stale swap (the thread still finishes into
+                # the AOT cache) and process the fresh fetch below
+                self._warming = None
+            else:
+                if block:
+                    th.join()
+                if th.is_alive():
+                    return False
+                self._warming = None
+                return self._swap_plan(plan, launched)
         if self._pending_replan is None:
             return False
         assign, omega, launched = self._pending_replan
@@ -163,11 +200,19 @@ class TrainLoop:
             return False
         idx = np.asarray(jax.device_get(assign)).tolist()
         self._pending_replan = None
-        self._plan = self.trainer.scheduler.plan_from_levels(
+        plan = self.trainer.scheduler.plan_from_levels(
             idx, omega, adaptive=True)
-        if self._host_step is not None:
-            self.replan_latencies.append(self._host_step - launched)
-        return True
+        if self.trainer.step_is_warm(plan):
+            return self._swap_plan(plan, launched)
+        th = threading.Thread(target=self.trainer.warm_compile,
+                              args=(plan,), daemon=True)
+        th.start()
+        self._warming = (plan, th, launched)
+        if block:
+            th.join()
+            self._warming = None
+            return self._swap_plan(plan, launched)
+        return False
 
     def adapt_interval(self, state):
         """Sync-interval control (eq 9); a fixed H for static strategies.

@@ -369,6 +369,130 @@ class TestRingParity:
                                        rtol=1e-6, atol=1e-7,
                                        err_msg=name)
 
+    @pytest.mark.parametrize("name", ["int8", "int4", "sign"])
+    @pytest.mark.parametrize("use_pallas", [False, True])
+    def test_deterministic_fold_is_order_insensitive(self, name,
+                                                     use_pallas):
+        """The P >= 3 mode: fixed-point / integer-vote partial sums reach
+        bit-identical aggregates in ANY fold order (the float fold does
+        not — that is the cross-pod drift the mode removes), and the
+        fused Pallas kernels match the oracle bit for bit."""
+        codec = _default(name)
+        n = 4 * 1024
+        omega = jnp.asarray([0.5, 0.3, 0.2], jnp.float32)
+        payloads = _payloads(codec, n, n_pods=3)
+        nb = 4
+
+        def fold(order, det, up):
+            acc = codec.accum_init(nb, 1024, deterministic=det)
+            for j in order:
+                acc = codec.decode_accumulate(acc, payloads[j], omega[j],
+                                              block=1024, use_pallas=up,
+                                              deterministic=det)
+            return np.asarray(codec.accum_finalize(acc, n, 1024,
+                                                   deterministic=det))
+
+        a = fold([0, 1, 2], True, use_pallas)
+        for order in ([2, 0, 1], [1, 2, 0], [2, 1, 0]):
+            np.testing.assert_array_equal(a, fold(order, True, use_pallas),
+                                          err_msg=f"{name}/{order}")
+        # the dequant-add codecs also stay within the 2^-16 fixed-point
+        # quantisation of the float fold (sign is excluded: a vote that
+        # TIES in exact arithmetic legitimately resolves to 0 where the
+        # float fold's rounding noise picked a side)
+        if name != "sign":
+            f = fold([0, 1, 2], False, use_pallas)
+            np.testing.assert_allclose(a, f, atol=4 * 2.0 ** -16,
+                                       err_msg=name)
+
+    @pytest.mark.parametrize("name", ["int8", "int4", "sign"])
+    def test_deterministic_pallas_matches_oracle_bitwise(self, name):
+        """Integer accumulation admits no ulp wiggle: the fused fp
+        kernels and the jnp oracle must agree EXACTLY."""
+        codec = _default(name)
+        n = 3 * 1024
+        pay, _, _ = codec.ef_encode(_rand(n, 60), jnp.zeros((n,)),
+                                    gamma=1.0, block=1024)
+        w = jnp.float32(0.37)
+        acc = codec.accum_init(3, 1024, deterministic=True)
+        o = codec.decode_accumulate(acc, pay, w, block=1024,
+                                    use_pallas=False, deterministic=True)
+        p = codec.decode_accumulate(acc, pay, w, block=1024,
+                                    use_pallas=True, deterministic=True)
+        for a, b in zip(jax.tree.leaves(o), jax.tree.leaves(p)):
+            assert a.dtype == b.dtype and a.dtype in (jnp.int32,)
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=name)
+
+    def test_deterministic_one_shot_matches_ring_fold(self):
+        """pod_exchange's deterministic fold (canonical gather order) ==
+        the ring's arrival-order fold: exact accumulation makes the order
+        irrelevant, so ring <-> one-shot replans never move the bits."""
+        for name in ["int8", "int4", "sign"]:
+            codec = _default(name)
+            n = 4 * 1024
+            omega = jnp.asarray([0.2, 0.5, 0.3], jnp.float32)
+            payloads = _payloads(codec, n, n_pods=3)
+            nb = 4
+            # one-shot: pods 0..P-1; ring at pod 1: own, then 0, then 2
+            accs = []
+            for order in ([0, 1, 2], [1, 0, 2]):
+                acc = codec.accum_init(nb, 1024, deterministic=True)
+                for j in order:
+                    acc = codec.decode_accumulate(
+                        acc, payloads[j], omega[j], block=1024,
+                        deterministic=True)
+                accs.append(np.asarray(codec.accum_finalize(
+                    acc, n, 1024, deterministic=True)))
+            np.testing.assert_array_equal(accs[0], accs[1], err_msg=name)
+
+    def test_old_style_trio_signature_stays_compatible(self):
+        """A codec subclassed against the PRE-deterministic trio
+        signature (no deterministic/fixed_bits kwargs) keeps working on
+        every float path: the base exchange forwards the new kwargs only
+        when the deterministic mode engages (Codec._det_kwargs)."""
+        from repro.codecs.builtin import Int8Codec
+
+        class OldTrio(Int8Codec):
+            name = ""  # not registered
+
+            def accum_init(self, nb, block=1024):
+                return jnp.zeros((nb, block), jnp.float32)
+
+            def decode_accumulate(self, acc, payload, weight, *,
+                                  block=1024, use_pallas=False):
+                return acc + weight * self.decode(payload, block)
+
+            def accum_finalize(self, acc, n, block=1024):
+                return acc.reshape(-1)[:n]
+
+        old = OldTrio()
+        init_kw, fold_kw = old._det_kwargs(False, 16)
+        assert init_kw == {} and fold_kw == {}
+        pay, _, _ = old.ef_encode(_rand(2048, 5), jnp.zeros((2048,)),
+                                  gamma=1.0, block=1024)
+        acc = old.accum_init(2, 1024, **init_kw)
+        acc = old.decode_accumulate(acc, pay, jnp.float32(0.5),
+                                    block=1024, **fold_kw)
+        out = old.accum_finalize(acc, 2048, 1024, **fold_kw)
+        assert out.shape == (2048,)
+        # ...while the deterministic mode demands the new contract
+        init_kw, fold_kw = old._det_kwargs(True, 16)
+        assert init_kw == {"deterministic": True}
+        assert fold_kw == {"deterministic": True, "fixed_bits": 16}
+
+    def test_legacy_float_ring_fold_is_loud_error_on_p3(self):
+        """Satellite pin: the order-sensitive float fold is unreachable
+        on P >= 3 — explicitly requesting it raises instead of silently
+        drifting (the old forced-ring bypass)."""
+        codec = _default("int8")
+        g, e = _rand(2048, 80), jnp.zeros((2048,))
+        om = jnp.full((3,), 1 / 3, jnp.float32)
+        with pytest.raises(ValueError, match="deterministic"):
+            codec.ef_sync_ring(g, e, om, om[0], gamma=1.0, n_pods=3,
+                               n_chunks=2, block=1024,
+                               deterministic=False)
+
     @pytest.mark.parametrize("name", BUILTINS)
     def test_ring_single_pod_equals_one_shot(self, name):
         """ef_sync_ring degenerates to ef_sync off-mesh (and for the

@@ -230,3 +230,164 @@ def test_ring_exchange_collectives_subprocess():
                        capture_output=True, text=True, timeout=600)
     assert r.returncode == 0, r.stderr[-3000:]
     assert "RING_OK" in r.stdout
+
+
+# The P >= 3 deterministic-accumulation contract, soaked on real pod
+# meshes.  Parameterised via env vars (XLA locks the device count per
+# process): REPRO_TEST_PODS, REPRO_TEST_MESH, REPRO_TEST_DEVS,
+# REPRO_TEST_RING ("auto" or a forced K).
+DET_SCRIPT = r"""
+import os
+P = int(os.environ["REPRO_TEST_PODS"])
+MESH = tuple(int(x) for x in os.environ["REPRO_TEST_MESH"].split(","))
+RING = os.environ.get("REPRO_TEST_RING", "auto")
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                           + os.environ["REPRO_TEST_DEVS"])
+import re
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as Spec
+
+from repro import compat
+from repro.core import sync as S
+from repro.core.compression import Level
+from repro.core.planexec import build_exec_plan, ring_hops, sig_wire_bytes
+from repro.core.scheduler import SyncPlan
+from repro.launch.mesh import make_mesh
+from benchmarks import hlo_cost
+
+mesh = make_mesh(MESH, ("pod", "data", "model"))
+levels = (Level("INT8", 1.0, 8), Level("TOPK10", 0.10, 8),
+          Level("SIGN1", 1.0, 1), Level("INT4", 1.0, 4),
+          Level("FULL", 1.0, 16), Level("SKIP", 0.0, 0))
+idx = tuple(range(6))
+# the INT8 rung is big enough to be DCN-bound (its decode time clears
+# the ppermute launch overhead on BOTH the bidir and the longer unidir
+# critical path), so the AUTO heuristic rings it even without a forced K
+# (the acceptance pin)
+sizes = [2048 * 1024 if RING == "auto" else 6144,
+         8192, 4096, 6144, 2048, 700]
+omega = tuple(np.arange(1, P + 1, dtype=np.float64) / (P * (P + 1) / 2))
+plan = SyncPlan(idx, levels, omega, 1)
+ring = None if RING == "auto" else int(RING)
+ep_ring = build_exec_plan(plan, sizes, n_pods=P, ring=ring, bidir=True)
+ep_uni = build_exec_plan(plan, sizes, n_pods=P, ring=ring, bidir=False)
+ep_one = build_exec_plan(plan, sizes, n_pods=P, ring=0)
+assert ep_ring.chunks[0] >= 2, (RING, ep_ring.chunks)
+assert all(c == 0 for c in ep_ring.chunks[4:]), ep_ring.chunks
+assert ep_uni.chunks == ep_ring.chunks  # per-hop wire time is P-free
+
+r = np.random.RandomState(11)
+tree = {f"p{i}": jnp.asarray(r.randn(P, n).astype(np.float32))
+        for i, n in enumerate(sizes)}          # per-pod DISTINCT grads
+errors0 = jax.tree.map(jnp.zeros_like, tree)
+
+
+def runner(ep):
+    def inner(t, e):
+        t = jax.tree.map(lambda x: x.reshape(x.shape[1:]), t)
+        e = jax.tree.map(lambda x: x.reshape(x.shape[1:]), e)
+        a, ne = S.sync_tree(t, e, ep, mesh=mesh, shardings=None,
+                            gamma=0.9, inside_manual=True)
+        return (jax.tree.map(lambda x: x[None], a),
+                jax.tree.map(lambda x: x[None], ne))
+    pod = jax.tree.map(lambda _: Spec("pod"), tree)
+    smapped = compat.shard_map(inner, mesh, in_specs=(pod, pod),
+                               out_specs=(pod, pod),
+                               manual_axes=set(mesh.axis_names))
+    return jax.jit(smapped)
+
+
+fn_ring, fn_uni, fn_one = runner(ep_ring), runner(ep_uni), runner(ep_one)
+
+# --- multi-step soak: EF errors carried, params mirror accumulated -----
+err_r, err_u, err_o = errors0, errors0, errors0
+params = {k: np.zeros_like(np.asarray(tree[k])) for k in tree}
+for t in range(3):
+    g = jax.tree.map(lambda x: x * (1.0 + 0.25 * t), tree)
+    agg_r, err_r = fn_ring(g, err_r)
+    agg_u, err_u = fn_uni(g, err_u)
+    agg_o, err_o = fn_one(g, err_o)
+    for k in tree:
+        ar = np.asarray(jax.device_get(agg_r[k]))
+        au = np.asarray(jax.device_get(agg_u[k]))
+        ao = np.asarray(jax.device_get(agg_o[k]))
+        for p in range(1, P):
+            assert (ar[0] == ar[p]).all(), (k, t, "ring cross-pod drift")
+            assert (ao[0] == ao[p]).all(), (k, t, "one-shot cross-pod")
+        # deterministic accumulation: ring == one-shot == either
+        # direction, bit for bit (order cannot matter)
+        assert (ar == ao).all(), (k, t, "ring != one-shot")
+        assert (ar == au).all(), (k, t, "bidir != unidir")
+        params[k] += ar
+for k in tree:  # N steps of identical aggregates -> identical params
+    for p in range(1, P):
+        assert (params[k][0] == params[k][p]).all(), (k, "param drift")
+
+# --- HLO pins: ppermute count, direction split, analytic == traced -----
+n_ring = sum(1 for c in ep_ring.chunks if c)
+txt = fn_ring.lower(tree, errors0).compile().as_text()
+rep = hlo_cost.analyze(txt, MESH, ("pod", "data", "model"))
+got = len(re.findall(r"=\s+\S+\s+collective-permute(?:-start)?\(", txt))
+expect = sum(c * (P - 1) for c in ep_ring.chunks if c)
+assert got == expect, (got, expect)
+pairs = set(re.findall(r"source_target_pairs=\{[^}]*\}", txt))
+assert len(pairs) == (2 if P >= 3 else 1), pairs  # both DCN directions
+txt_u = fn_uni.lower(tree, errors0).compile().as_text()
+pairs_u = set(re.findall(r"source_target_pairs=\{[^}]*\}", txt_u))
+assert len(pairs_u) == 1, pairs_u                 # forward ring only
+assert len(re.findall(r"=\s+\S+\s+collective-permute(?:-start)?\(",
+                      txt_u)) == expect
+# hops split: two half-rings of ceil((P-1)/2)
+assert ring_hops(P, True) == -(-(P - 1) // 2)
+
+analytic = sig_wire_bytes(ep_ring.sig, ep_ring.levels, P)
+traced = rep.collective_bytes.get("pod", 0.0)
+# XLA promotes FULL's bf16 all-reduce to f32 on backends without native
+# bf16 reduction (this CPU container): accept the analytic total with
+# the bf16 ring-all-reduce term swapped for its f32 version (float math
+# mirrors hlo_cost; the (P-1)/P thirds are fractional at P = 3)
+full_n = ep_ring.sig[4] * 1024
+full_f32 = 2.0 * (P - 1) / P * 4 * full_n
+full_bf16 = levels[4].wire_bytes(full_n, P)
+assert (abs(traced - analytic) < 2.0
+        or abs(traced - (analytic - full_bf16 + full_f32)) < 2.0), \
+    (analytic, traced)
+for ax, b in rep.collective_bytes.items():
+    if "pod" not in ax:
+        assert b == 0.0, (ax, b)
+print("DET_OK", P, got, int(analytic))
+"""
+
+
+def _run_det(n_pods, mesh, devs, ring):
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + root
+    env["REPRO_TEST_PODS"] = str(n_pods)
+    env["REPRO_TEST_MESH"] = mesh
+    env["REPRO_TEST_DEVS"] = str(devs)
+    env["REPRO_TEST_RING"] = ring
+    r = subprocess.run([sys.executable, "-c", DET_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "DET_OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_p3_deterministic_ring_soak_auto_heuristic():
+    """P = 3 pods: the AUTO roofline heuristic rings the DCN-bound rung
+    (the 2-pod fence is gone), a multi-step EF soak keeps per-pod
+    aggregates/params bit-identical for every codec, ring == one-shot ==
+    unidirectional bit for bit, K*(P-1) ppermutes split over BOTH DCN
+    directions, analytic == traced wire bytes."""
+    _run_det(3, "3,2,2", 12, "auto")
+
+
+@pytest.mark.slow
+def test_p4_deterministic_ring_soak_forced():
+    """P = 4 pods, forced 2-chunk ring (satellite pin: a forced ring on
+    P >= 3 routes through the deterministic fold, not the legacy
+    arrival-order float fold): same bit-determinism contract, asymmetric
+    half-rings (2 forward + 1 backward hop)."""
+    _run_det(4, "4,2,1", 8, "2")

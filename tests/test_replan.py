@@ -128,6 +128,76 @@ class TestRetraceFree:
         assert float(jnp.abs(agg2["b"]).max()) > 0
 
 
+class TestSpeculativeWarm:
+    def test_warm_compile_avoids_foreground_compile(self):
+        """AOT-warming an unseen bucket signature lets the next step run
+        it WITHOUT adding a jit-cache entry (the foreground compile the
+        replan-time background warm removes)."""
+        tr, pipe = _trainer("fullsync")
+        state = tr.init_state(jax.random.PRNGKey(0))
+        sched = tr.scheduler
+        p_full = sched.full_plan()
+        state, _ = tr.step(state, next(pipe), p_full, "grad_sync")
+        warm = tr.compile_count()
+        # a different signature: everything on the INT8 rung
+        names = [l.name for l in sched.levels]
+        p_int8 = sched.plan_from_levels(
+            [names.index("INT8")] * len(sched.sizes))
+        assert not tr.step_is_warm(p_int8)
+        assert tr.warm_compile(p_int8)
+        assert tr.step_is_warm(p_int8)
+        assert tr.warm_compiles >= 1
+        state, m = tr.step(state, next(pipe), p_int8, "grad_sync")
+        assert np.isfinite(float(m["loss"]))
+        assert tr.compile_count() == warm, \
+            "warmed signature still compiled in the foreground"
+
+    def test_warm_compile_without_specs_is_noop(self):
+        tr, _ = _trainer("fullsync")
+        plan = tr.scheduler.full_plan()
+        # nothing stepped yet: no argument specs to lower against
+        assert tr.warm_compile(plan, kinds=("grad_sync",)) is False
+
+    def test_loop_defers_swap_until_warm(self):
+        """poll_replan on a cold signature keeps the old plan, launches
+        the background warm, and swaps on a later poll — the hosted-loop
+        form of the satellite."""
+        from repro.launch.train import TrainLoop
+        cfg = SMOKE_ARCHS["paper-350m"]
+        run = RunConfig(model=cfg, shape=SHAPE, total_steps=16,
+                        warmup_steps=2, lr=1e-3, ckpt_every=0,
+                        acesync=ACESyncConfig(replan_every=3,
+                                              sync_interval_init=2))
+        model = build_model(cfg, run)
+        loop = TrainLoop(model, run, mesh=None, strategy="acesync")
+        pipe = TokenPipeline(model, SHAPE, seed=0)
+        state = loop.restore_or_init(jax.random.PRNGKey(0), pipe)
+        state = loop.run_steps(state, pipe, 8, log_every=0)
+        plan0 = loop.plan
+        # hand-roll a pending replan onto a signature the cache has not
+        # seen (force every group onto SIGN1)
+        sched = loop.trainer.scheduler
+        names = [l.name for l in sched.levels]
+        assign = jnp.asarray([names.index("SIGN1")] * len(sched.sizes),
+                             jnp.int32)
+        loop._pending_replan = (assign, None, loop._host_step)
+        swapped = loop.poll_replan()
+        if not swapped:                     # cold signature: deferred
+            assert loop.plan is plan0 and loop._warming is not None
+            assert loop.poll_replan(block=True)
+        assert loop.plan is not plan0
+        assert all(i == names.index("SIGN1") for i in loop.plan.level_idx)
+        # every step kind the loop has actually scheduled is warm, and
+        # stepping them under the new plan adds no foreground compiles
+        kinds = tuple(loop.trainer._arg_specs)
+        assert kinds and loop.trainer.step_is_warm(loop.plan, kinds)
+        warm = loop.trainer.compile_count()
+        for kind in kinds:
+            state, _ = loop.trainer.step(state, next(pipe), loop.plan,
+                                         kind)
+        assert loop.trainer.compile_count() == warm
+
+
 class TestAsyncReplanLoop:
     def test_device_replan_applies_in_loop(self, tmp_path):
         """The host loop's non-blocking replan path end-to-end: the device
@@ -222,6 +292,41 @@ class TestPlanVectorParity:
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        rtol=1e-6, atol=1e-6)
 
+    def test_delta_sync_overlap_matches_barrier_apply(self):
+        """delta_sync's anchor update rung-ordered (sync_tree apply_fn
+        path, the new default) must match the whole-tree barrier path:
+        same state -> same params / anchor / EF residuals (the ROADMAP
+        'anchor path still barriers' item)."""
+        cfg = SMOKE_ARCHS["paper-350m"]
+
+        def run(overlap):
+            run_cfg = RunConfig(model=cfg, shape=SHAPE, total_steps=30,
+                                warmup_steps=2, lr=1e-3,
+                                acesync=ACESyncConfig(
+                                    overlap_apply=overlap))
+            model = build_model(cfg, run_cfg)
+            tr = Trainer(model, run_cfg, mesh=None, strategy="fedavg")
+            pipe = TokenPipeline(model, SHAPE, seed=0)
+            state = tr.init_state(jax.random.PRNGKey(0))
+            plan = tr.default_plan(bandwidth_mbps=30.0)
+            for kind in ("local", "delta_sync", "local", "delta_sync"):
+                state, m = tr.step(state, next(pipe), plan, kind)
+            return state, m
+
+        s_o, m_o = run(True)
+        s_b, m_b = run(False)
+        assert float(m_o["divergence"]) == float(m_b["divergence"])
+        for key in ("params", "anchor"):
+            for a, b in zip(jax.tree.leaves(s_o[key]),
+                            jax.tree.leaves(s_b[key])):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-6, atol=1e-6,
+                                           err_msg=key)
+        for a, b in zip(jax.tree.leaves(s_o["ace"].errors),
+                        jax.tree.leaves(s_b["ace"].errors)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-6)
+
     def test_trainer_step_parity_across_plan_forms(self):
         """trainer.step under a SyncPlan equals stepping its ExecPlan."""
         tr, pipe = _trainer()
@@ -302,10 +407,44 @@ class TestChunkGrid:
         assert ring_chunk_count(lvl, 4, 2) == 0          # ~4KB payload
         assert ring_chunk_count(lvl, 0, 2) == 0
         assert ring_chunk_count(lvl, 10 ** 4, 1) == 0    # single pod
-        # auto rings only the 2-pod (cloud-edge) regime: P >= 3 would
-        # break cross-pod bit-determinism (ring-arrival fold order)
-        assert ring_chunk_count(lvl, 10 ** 4, 4) == 0
+        # the deterministic accumulation unlocked auto rings on EVERY pod
+        # count (P >= 3 folds in exact fixed-point / canonical order, so
+        # cross-pod bit-determinism holds) — a DCN-bound rung rings on
+        # the 3- and 4-pod meshes too
+        assert ring_chunk_count(lvl, 10 ** 4, 3) >= 2
+        assert ring_chunk_count(lvl, 10 ** 4, 4) >= 2
         assert ring_chunk_count(lvl, 10 ** 4, 4, ring=2) == 2  # forced ok
+
+    def test_ring_hops_bidirectional_split(self):
+        """The bidirectional ring's critical path is two half-rings of
+        ceil((P-1)/2) hops; unidirectional keeps P-1."""
+        from repro.core.planexec import ring_hops
+        for P in range(2, 9):
+            assert ring_hops(P, bidir=False) == P - 1
+            assert ring_hops(P, bidir=True) == -(-(P - 1) // 2)
+        assert ring_hops(1) == 0
+        # per-hop wire time is P-independent, so the chosen K matches
+        # across directions once a rung rings in both
+        from repro.core.planexec import ring_chunk_count
+        lvl = self.LEVELS[0]
+        k_bi = ring_chunk_count(lvl, 64 * 1024, 4, bidir=True)
+        k_uni = ring_chunk_count(lvl, 64 * 1024, 4, bidir=False)
+        assert k_bi == k_uni >= 2
+
+    def test_bidir_in_static_key(self):
+        """Flipping the ring direction changes the lowered ppermute
+        pattern, so it must key the compiled step."""
+        plan = SyncPlan((0,), (self.LEVELS[0], self.LEVELS[2]), (0.5, 0.5),
+                        1)
+        ep_b = build_exec_plan(plan, [8 * 1024], n_pods=2, ring=4,
+                               bidir=True)
+        ep_u = build_exec_plan(plan, [8 * 1024], n_pods=2, ring=4,
+                               bidir=False)
+        assert ep_b.bidir and not ep_u.bidir
+        assert ep_b.static_key() != ep_u.static_key()
+        # aux data: a tree-map round-trips the flag
+        ep2 = jax.tree.map(lambda x: x, ep_u)
+        assert ep2.bidir == ep_u.bidir
 
     def test_heuristic_rings_dcn_bound_buckets(self):
         from repro.core.planexec import RING_MAX_CHUNKS, ring_chunk_count
