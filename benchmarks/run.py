@@ -14,10 +14,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                 ".."))
 
-# --multipod simulates a (2, 16-ish) pod mesh with 8 virtual host devices;
+# --multipod / --hierarchy simulate pod meshes with 8 virtual host devices;
 # XLA locks the device count at first use, so this must precede the jax
 # import (same trick as tests/test_multipod.py, in-process).
-if "--multipod" in sys.argv and "xla_force_host_platform_device_count" \
+if ("--multipod" in sys.argv or "--hierarchy" in sys.argv) \
+        and "xla_force_host_platform_device_count" \
         not in os.environ.get("XLA_FLAGS", ""):
     os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
                                + " --xla_force_host_platform_device_count=8"
@@ -268,12 +269,17 @@ def bench_steptime(out_path=None, steps=24, warmup=6, multipod=False,
         # best-of-3 timed windows: the CPU-sim box is shared and a single
         # short window can eat a scheduler stall; the best window is the
         # least-perturbed estimate of the steady-state step time
+        sess.loop.poll_replan(block=True)
         windows = []
         for _ in range(3):
             t0 = time.perf_counter()
             sess.run(steps, log_every=0)
             windows.append(time.perf_counter() - t0)
         dt = min(windows)
+        # join any background AOT warm thread before the session is
+        # dropped (a daemon thread killed mid-XLA-compile aborts the
+        # interpreter at teardown)
+        sess.loop.poll_replan(block=True)
         compiles_after = tr.compile_count()
         sched = tr.scheduler
         plan = sess.loop.plan
@@ -336,6 +342,136 @@ def bench_steptime(out_path=None, steps=24, warmup=6, multipod=False,
     return records
 
 
+def bench_hierarchy(out_path=None, steps=24, warmup=6,
+                    fail_on_recompile=False):
+    """Heterogeneous-fleet benchmark of the two-tier sync topology.
+
+    Runs a simulated (2, 2, 2) ``("pod", "edge", "data")`` mesh — a fleet
+    of 4 members in 2 clusters of 2 — under a 16-device flapping 5-200
+    Mbps telemetry trace, three ways: dense ``fullsync``, flat ``acesync``
+    (``hier_mode=-1`` pins every rung to the one-tier fleet exchange), and
+    ``acesync_hier`` (live :class:`~repro.hierarchy.ClusterState`
+    re-clustering on the replan cadence, bottleneck-cluster byte budget,
+    roofline-picked intra-cluster aggregation feeding the compressed
+    cross-tier ring).  Records cross-tier + intra-tier wire bytes,
+    steps/s, cluster-assignment churn, replan-to-apply latencies, and the
+    steady-state compile count — which must stay at ZERO new entries while
+    telemetry-driven replans re-cluster mid-run (CI gates on it with
+    ``--fail-on-recompile``).  Written to
+    benchmarks/results/BENCH_hierarchy.json and mirrored at the repo
+    root."""
+    import tempfile
+    from repro.configs.base import ACESyncConfig
+    from repro.launch.mesh import make_mesh
+    from repro.launch.session import TrainSession
+
+    mesh = make_mesh((2, 2, 2), ("pod", "edge", "data"))
+    variants = [
+        ("fullsync", "fullsync", {}),
+        ("acesync_flat", "acesync", dict(hier_mode=-1)),
+        ("acesync_hier", "acesync_hier", {}),
+    ]
+    records = []
+    for name, strategy, ace_kw in variants:
+        ace = ACESyncConfig(replan_every=6, sync_interval_init=2, **ace_kw)
+        sess = TrainSession.from_config(
+            "paper-350m", strategy=strategy, mesh=mesh, seq_len=64,
+            batch=4, steps=400, warmup_steps=10, ckpt_every=0,
+            n_edge_devices=16, ckpt_dir=tempfile.mkdtemp(), acesync=ace)
+        sess.run(warmup, log_every=0)            # compile + first replans
+        tr = sess.trainer
+        # stabilise the signature cache (same contract as bench_steptime):
+        # steady-state replans — which keep re-clustering the fleet — must
+        # add zero compiled variants before the timed window opens
+        stabilise_rounds = 0
+        for _ in range(6):
+            before = tr.compile_count()
+            sess.run(6, log_every=0)
+            if tr.compile_count() == before:
+                break
+            stabilise_rounds += 1
+        # land any in-flight replan + background AOT warm-up before the
+        # timed window opens (a compile thread would steal the timed CPU)
+        sess.loop.poll_replan(block=True)
+        compiles_before = tr.compile_count()
+        bytes_before = sess.comm_bytes
+        t0 = time.perf_counter()
+        sess.run(steps, log_every=0)
+        dt = time.perf_counter() - t0
+        # join any warm thread the timed window launched: a daemon thread
+        # killed mid-XLA-compile aborts the interpreter at teardown
+        sess.loop.poll_replan(block=True)
+        sched = tr.scheduler
+        plan = sess.loop.plan
+        cs = sess.loop.clusters
+        lat = sess.loop.replan_latencies
+        rec = {
+            "name": name,
+            "strategy": strategy,
+            "fleet": {"n_pods": tr.n_pods, "n_edge": tr.n_edge,
+                      "n_cross": sched.n_cross,
+                      "hier_enabled": sched.hier_enabled},
+            "steps_per_sec": round(steps / dt, 3),
+            "cross_wire_bytes_timed": sess.comm_bytes - bytes_before,
+            "cross_wire_bytes_per_sync": sched.plan_wire_bytes(plan),
+            "intra_wire_bytes_per_sync": sched.plan_intra_bytes(plan),
+            "bucket_sig": list(plan.bucket_sig or ()),
+            "hier_grid": list(plan.hier or ()),
+            "cluster_updates": cs.updates,
+            "cluster_churn": cs.churn,
+            "cluster_reclusters": cs.reclusters,
+            "replans_applied": len(lat),
+            "replan_to_apply_latency_steps":
+                (sum(lat) / len(lat) if lat else None),
+            "compile_count_warm": compiles_before,
+            "stabilise_rounds": stabilise_rounds,
+            "new_compiles_during_timed_steps":
+                tr.compile_count() - compiles_before,
+            "warm_compiles": tr.warm_compiles,
+            "final_loss": round(sess.losses[-1], 4),
+        }
+        records.append(rec)
+        row(f"hierarchy_{name}", dt / steps * 1e6,
+            f"{rec['steps_per_sec']}steps_s;"
+            f"cross={rec['cross_wire_bytes_per_sync']/1e3:.0f}KB;"
+            f"churn={rec['cluster_churn']};"
+            f"recompiles={rec['new_compiles_during_timed_steps']}")
+    by = {r["name"]: r for r in records}
+    reduction = (1.0 - by["acesync_hier"]["cross_wire_bytes_per_sync"]
+                 / max(by["acesync_flat"]["cross_wire_bytes_per_sync"], 1))
+    payload = {"backend": jax.default_backend(),
+               "timed_steps": steps,
+               "cross_tier_reduction_vs_flat_acesync": round(reduction, 4),
+               "records": records}
+    out = out_path or os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "results",
+        "BENCH_hierarchy.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {out}", flush=True)
+    root_out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "..", "BENCH_hierarchy.json")
+    with open(root_out, "w") as f:
+        json.dump(payload, f, indent=1)
+    row("hierarchy_cross_tier_reduction", 0.0,
+        f"hier_vs_flat={100 * reduction:.1f}%")
+    bad = [r["name"] for r in records
+           if r["new_compiles_during_timed_steps"] > 0]
+    if bad:
+        msg = f"steady-state recompiles in: {bad}"
+        if fail_on_recompile:
+            raise SystemExit(msg)
+        print(f"WARNING: {msg}", flush=True)
+    if reduction <= 0:
+        msg = (f"two-tier topology did not cut cross-tier bytes "
+               f"(reduction={reduction:.4f})")
+        if fail_on_recompile:  # CI strict mode gates the headline claim too
+            raise SystemExit(msg)
+        print(f"WARNING: {msg}", flush=True)
+    return records
+
+
 def bench_decode_step():
     from repro.configs import SMOKE_ARCHS
     from repro.configs.base import ShapeConfig
@@ -386,6 +522,10 @@ def main() -> None:
     if "--steptime" in sys.argv:
         bench_steptime(multipod="--multipod" in sys.argv,
                        fail_on_recompile="--fail-on-recompile" in sys.argv)
+        return
+    if "--hierarchy" in sys.argv:
+        bench_hierarchy(
+            fail_on_recompile="--fail-on-recompile" in sys.argv)
         return
     bench_compression()
     bench_kernels()

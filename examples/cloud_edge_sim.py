@@ -1,17 +1,42 @@
-"""The paper's cloud-edge experiment in miniature: 64 heterogeneous edge
-devices (5-200 Mbps, 10-300 ms), 4 synchronization strategies, communication
-+ quality comparison — the Table 1 / Figure 2 reproduction.
+"""The paper's cloud-edge experiment in miniature: heterogeneous edge
+devices (5-200 Mbps, 10-300 ms), multiple synchronization strategies,
+communication + quality comparison.
+
+Two modes:
+
+  * default — the Table 1 / Figure 2 reproduction (64 edge devices, 4
+    strategies, STAR-topology comm accounting);
+  * ``--hierarchy`` — the two-tier fleet: a simulated ("pod", "edge",
+    "data") mesh where live telemetry clustering (ClusterState) maps 16
+    edge devices onto 2 clusters of 2 fleet members, intra-cluster
+    aggregation feeds the compressed cross-tier ring, and the report
+    compares cross-tier wire bytes for flat vs hierarchical ACE-Sync
+    (writes benchmarks/results/BENCH_hierarchy.json).
 
 Run:  PYTHONPATH=src python examples/cloud_edge_sim.py [--steps 120]
+      PYTHONPATH=src python examples/cloud_edge_sim.py --hierarchy
 """
 import argparse
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks import table1
-
 ap = argparse.ArgumentParser()
 ap.add_argument("--steps", type=int, default=120)
+ap.add_argument("--hierarchy", action="store_true",
+                help="run the two-tier cluster fleet instead of Table 1")
 args = ap.parse_args()
-table1.main(args.steps)
+
+if args.hierarchy:
+    # the simulated fleet needs 8 virtual host devices; XLA locks the
+    # device count at first use, so set this before importing jax
+    if "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                                   + " --xla_force_host_platform_device_"
+                                     "count=8").strip()
+    from benchmarks import run as bench
+    bench.bench_hierarchy(steps=max(args.steps // 5, 6))
+else:
+    from benchmarks import table1
+    table1.main(args.steps)

@@ -1,12 +1,14 @@
 """Pluggable wire-format codecs (see codecs/base.py for the contract)."""
-from repro.codecs.base import (POD_AXIS, Codec, build_codec, codec_for_level,
-                               get_codec, list_codecs, n_blocks, pack_bits,
-                               pack_payload, plan_wire_bytes, register_codec,
-                               unpack_bits, unpack_payload)
+from repro.codecs.base import (EDGE_AXIS, POD_AXIS, Codec, build_codec,
+                               codec_for_level, get_codec, list_codecs,
+                               n_blocks, pack_bits, pack_payload,
+                               plan_intra_bytes, plan_wire_bytes,
+                               register_codec, unpack_bits, unpack_payload)
 from repro.codecs import builtin as _builtin  # noqa: F401 - registers codecs
 
 __all__ = [
-    "POD_AXIS", "Codec", "build_codec", "codec_for_level", "get_codec",
-    "list_codecs", "n_blocks", "pack_bits", "pack_payload",
-    "plan_wire_bytes", "register_codec", "unpack_bits", "unpack_payload",
+    "EDGE_AXIS", "POD_AXIS", "Codec", "build_codec", "codec_for_level",
+    "get_codec", "list_codecs", "n_blocks", "pack_bits", "pack_payload",
+    "plan_intra_bytes", "plan_wire_bytes", "register_codec", "unpack_bits",
+    "unpack_payload",
 ]

@@ -56,6 +56,9 @@ from repro.kernels.decode import (FIXED_POINT_BITS, fixed_point,
 
 #: the bandwidth-constrained mesh axis payloads cross (see core/sync.py).
 POD_AXIS = "pod"
+#: the fast intra-cluster mesh axis of the two-tier topology (optional —
+#: only present on hierarchical meshes; see core/sync.py).
+EDGE_AXIS = "edge"
 
 
 # ---------------------------------------------------------------------------
@@ -146,6 +149,16 @@ class Codec:
     #: peer payloads and fold them in canonical pod order 0..P-1 — the
     #: exact float association of the one-shot all_gather fold.
     canonical_fold: bool = False
+    #: whether the two-tier exchange applies (``ef_sync_hier``): the rung
+    #: payload is re-encoded from the intra-cluster aggregate and shipped
+    #: once per CLUSTER over the slow tier instead of once per device.
+    #: True only for dense quantisers (int8/int4) whose re-encode of an
+    #: aggregate is as faithful as of a single contribution.  Sparse /
+    #: sign codecs would sparsify the cluster aggregate UNCOMPENSATED on
+    #: tier 2 (the residual must stay device-local for EF correctness),
+    #: and FULL's psum already spans the whole fleet in one collective —
+    #: all keep ``False`` (README: codec-author note).
+    supports_hier: bool = False
 
     # ---- accounting -----------------------------------------------------
     def payload_bytes(self, n: int, block: int = BLOCK) -> int:
@@ -492,6 +505,59 @@ class Codec:
             agg = own * omega_own
         return agg, new_e
 
+    # ---- two-tier sync round (hierarchical meshes) ----------------------
+    def ef_sync_hier(self, flat: jax.Array, e_flat: jax.Array,
+                     omega_intra: jax.Array, omega_own: jax.Array, *,
+                     gamma: float, n_cross: int, n_edge: int,
+                     intra_mode: int, n_chunks: int = 0,
+                     block: int = BLOCK, cross_axis: str = POD_AXIS,
+                     intra_axis: str = EDGE_AXIS,
+                     use_pallas: bool = False, bidir: bool = True,
+                     deterministic: Optional[bool] = None,
+                     fixed_bits: int = FIXED_POINT_BITS
+                     ) -> Tuple[jax.Array, jax.Array]:
+        """Two-tier EF sync: cheap intra-cluster aggregation over the fast
+        ``intra_axis`` feeding ONE rung payload per cluster over the slow
+        ``cross_axis`` — cross-tier bytes shrink from ``(C*E-1) x payload``
+        to ``(C-1) x payload`` for an ``(n_cross, n_edge)`` fleet.
+
+        Tier 1 runs the INTRA codec's ``ef_sync`` over ``intra_axis``
+        (FULL bf16-psum or INT8 gather+fold, picked statically by the
+        roofline — ``planexec.hier_rung_mode``) with the per-member omega
+        weights; its device-local residual carries the EF compensation.
+        The cluster aggregate ``A_c`` is bit-identical across members
+        (deterministic fold), so tier 2's input is pod-uniform: ``A_c``
+        is re-encoded with the rung codec (``gamma=0`` — NO cluster-level
+        error feedback, which would break pod-uniformity when devices are
+        re-clustered mid-run) and circulated with the existing ring /
+        one-shot machinery over ``cross_axis`` with UNIT weights, since
+        omega was already applied at tier 1.  The fleet aggregate
+        ``sum_c sum_m own_m * omega_m`` matches the flat path's weighting
+        exactly; only dense quantisers set ``supports_hier`` because
+        tier 2's (small, bounded) re-quantisation error is uncompensated.
+        """
+        from repro.core.planexec import INTRA_INT8
+        intra = build_codec("int8" if intra_mode == INTRA_INT8 else "full")
+        agg_c, new_e = intra.ef_sync(
+            flat, e_flat, omega_intra, omega_own, gamma=gamma,
+            n_pods=n_edge, block=block, axis=intra_axis,
+            use_pallas=use_pallas, deterministic=deterministic,
+            fixed_bits=fixed_bits)
+        zeros = jnp.zeros_like(agg_c)
+        unit = jnp.ones((n_cross,), agg_c.dtype)
+        if n_chunks and self.supports_ring and n_cross > 1:
+            agg, _ = self.ef_sync_ring(
+                agg_c, zeros, unit, 1.0, gamma=0.0, n_pods=n_cross,
+                n_chunks=n_chunks, block=block, axis=cross_axis,
+                use_pallas=use_pallas, bidir=bidir,
+                deterministic=deterministic, fixed_bits=fixed_bits)
+        else:
+            agg, _ = self.ef_sync(
+                agg_c, zeros, unit, 1.0, gamma=0.0, n_pods=n_cross,
+                block=block, axis=cross_axis, use_pallas=use_pallas,
+                deterministic=deterministic, fixed_bits=fixed_bits)
+        return agg, new_e
+
     def __repr__(self) -> str:  # pragma: no cover - debugging nicety
         return f"<{type(self).__name__} {self.name!r}>"
 
@@ -568,16 +634,22 @@ def codec_for_level(level) -> Codec:
 
 
 def plan_wire_bytes(plan, sizes: Sequence[int], n_pods: int,
-                    block: int = BLOCK, use_sig: bool = True) -> int:
-    """Analytic per-device wire bytes for a plan, priced the way
-    ``core/sync.sync_tree`` actually transmits it: block-aligned leaves
-    repacked into one per-rung buffer and one collective, per-leaf block
-    padding included.  When the plan carries its padded bucket signature
-    (``SyncPlan.bucket_sig``, attached by the Scheduler for plans the
-    retrace-free exchange pads to size classes), that signature is priced
-    — the exact bytes the executed exchange moves.  ``use_sig=False``
-    forces the unpadded (exact-bucket) total, the analytic floor the
-    padding overhead is measured against."""
+                    block: int = BLOCK, use_sig: bool = True,
+                    n_cross: Optional[int] = None) -> int:
+    """Analytic per-device wire bytes for a plan over the SLOW tier,
+    priced the way ``core/sync.sync_tree`` actually transmits it:
+    block-aligned leaves repacked into one per-rung buffer and one
+    collective, per-leaf block padding included.  When the plan carries
+    its padded bucket signature (``SyncPlan.bucket_sig``, attached by the
+    Scheduler for plans the retrace-free exchange pads to size classes),
+    that signature is priced — the exact bytes the executed exchange
+    moves.  ``use_sig=False`` forces the unpadded (exact-bucket) total,
+    the analytic floor the padding overhead is measured against.
+
+    When the plan carries a two-tier grid (``SyncPlan.hier``), hier rungs
+    cross the slow tier once per CLUSTER: they are priced at ``n_cross``
+    participants instead of ``n_pods`` (the fast intra-cluster tier is
+    priced separately by :func:`plan_intra_bytes`)."""
     from repro.core.planexec import bucket_signature, sig_wire_bytes
     sig = getattr(plan, "bucket_sig", None) if use_sig else None
     if sig is not None and getattr(plan, "bucket_block", block) != block:
@@ -585,4 +657,23 @@ def plan_wire_bytes(plan, sizes: Sequence[int], n_pods: int,
     if sig is None:
         sig = bucket_signature(plan.level_idx, sizes, len(plan.levels),
                                block)
-    return sig_wire_bytes(sig, plan.levels, n_pods, block)
+    hier = getattr(plan, "hier", None)
+    return sig_wire_bytes(sig, plan.levels, n_pods, block,
+                          hier=hier, n_cross=n_cross)
+
+
+def plan_intra_bytes(plan, sizes: Sequence[int], n_edge: int,
+                     block: int = BLOCK) -> int:
+    """Analytic per-device FAST-tier (intra-cluster) wire bytes for a
+    plan's hier rungs — zero for flat plans or single-member clusters."""
+    from repro.core.planexec import bucket_signature, sig_intra_bytes
+    hier = getattr(plan, "hier", None)
+    if not hier or n_edge <= 1:
+        return 0
+    sig = getattr(plan, "bucket_sig", None)
+    if sig is not None and getattr(plan, "bucket_block", block) != block:
+        sig = None
+    if sig is None:
+        sig = bucket_signature(plan.level_idx, sizes, len(plan.levels),
+                               block)
+    return sig_intra_bytes(sig, plan.levels, n_edge, block, hier=hier)

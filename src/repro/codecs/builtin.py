@@ -100,6 +100,7 @@ class Int8Codec(Codec):
     """Dense blockwise-absmax int8 (+ f32 scale per 1024-block)."""
     name = "int8"
     value_bits = 8
+    supports_hier = True  # dense quantiser: tier-2 re-encode is faithful
 
     def payload_bytes(self, n: int, block: int = BLOCK) -> int:
         nb = n_blocks(n, block)
@@ -246,6 +247,7 @@ class Int4Codec(Codec):
     """Dense packed int4: two nibbles per byte + blockwise absmax scale."""
     name = "int4"
     value_bits = 4
+    supports_hier = True  # dense quantiser: tier-2 re-encode is faithful
 
     def payload_bytes(self, n: int, block: int = BLOCK) -> int:
         nb = n_blocks(n, block)

@@ -192,6 +192,14 @@ class ACESyncConfig:
     importance_hidden: int = 32        # attention estimator width
     importance_lr: float = 1e-3
     n_clusters: int = 4                # device clustering
+    # two-tier exchange on hierarchical meshes (core/planexec.py):
+    # 0 = roofline auto-picks the intra stage per rung, -1 = force flat,
+    # 1/2 = force full-precision / INT8 intra aggregation (tests, benches)
+    hier_mode: int = 0
+    # ClusterState hysteresis: a device only migrates clusters when the
+    # new centroid is at least this fraction closer than its current one
+    # (repro/hierarchy — keeps assignments from flapping under jitter)
+    cluster_hysteresis: float = 0.15
     # padded-size ladder of the retrace-free exchange (core/planexec.py):
     # adaptive plans round per-rung bucket sizes up to geometric classes so
     # steady-state replans reuse the compiled step.  Growth 2.0 = power-of-

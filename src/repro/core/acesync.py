@@ -76,11 +76,11 @@ def sync_gradients(grads, state: ACEState, plan: Union[SyncPlan, ExecPlan],
     exchanges."""
     # --- per-group stats for the importance estimator ---
     mean_abs, var, nrm = S.grad_group_stats(grads)
-    if mesh is not None and S.POD_AXIS in mesh.axis_names \
-            and mesh.shape[S.POD_AXIS] > 1:
-        mean_abs = jax.lax.pmean(mean_abs, S.POD_AXIS)
-        var = jax.lax.pmean(var, S.POD_AXIS)
-        nrm = jax.lax.pmean(nrm, S.POD_AXIS)
+    if S._pod_info(mesh) > 1:
+        axes = S.fleet_axes(mesh)
+        mean_abs = jax.lax.pmean(mean_abs, axes)
+        var = jax.lax.pmean(var, axes)
+        nrm = jax.lax.pmean(nrm, axes)
     ist = imp.update_stats(state.importance, mean_abs, var, nrm)
     # online supervision: the observed (normalised) gradient-norm momentum is
     # the ground-truth importance signal for this window

@@ -13,20 +13,54 @@ from typing import List, Sequence, Tuple
 import numpy as np
 
 
-def kmeans(x: np.ndarray, k: int, iters: int = 50,
-           seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
-    """x: (N, F). Returns (assignments (N,), centroids (k, F))."""
+def _sort_rank(x: np.ndarray) -> np.ndarray:
+    """Lexicographic rank of each row — a permutation-invariant tiebreak.
+    Two permutations of the same profile set rank every (identical) row
+    the same way, so anything seeded through the ranks is stable under
+    input reordering."""
+    order = np.lexsort(x.T[::-1])          # sort by col 0, then 1, ...
+    rank = np.empty(x.shape[0], np.int64)
+    rank[order] = np.arange(x.shape[0])
+    return rank
+
+
+def _argbest(score: np.ndarray, rank: np.ndarray) -> int:
+    """Index of the max score, ties broken by lexicographic row rank (NOT
+    input position — the input order must never matter)."""
+    best = score.max()
+    tied = np.flatnonzero(score >= best - 1e-12)
+    return int(tied[np.argmin(rank[tied])])
+
+
+def kmeans(x: np.ndarray, k: int, iters: int = 50, seed: int = 0,
+           init: np.ndarray = None) -> Tuple[np.ndarray, np.ndarray]:
+    """x: (N, F). Returns (assignments (N,), centroids (k, F)).
+
+    Deterministic farthest-point (kmeans++-style maxmin) init, sort-stable:
+    the first centroid is the lexicographically smallest row and each next
+    one the point farthest from the chosen set, so the SAME profile set in
+    ANY order yields the same centroids and the same partition (``seed``
+    is accepted for API compatibility but unused).  ``init`` warm-starts
+    Lloyd's iterations from previous centroids (the ClusterState re-cluster
+    path), skipping the init scan.  A cluster that loses all members is
+    re-seeded from the point worst served by the surviving centroids
+    instead of keeping its stale centroid forever."""
+    x = np.asarray(x, np.float64)
     n = x.shape[0]
     k = min(k, n)
-    rng = np.random.RandomState(seed)
-    # k-means++ init
-    cent = [x[rng.randint(n)]]
-    for _ in range(1, k):
-        d2 = np.min([np.sum((x - c) ** 2, axis=1) for c in cent], axis=0)
-        p = d2 / max(d2.sum(), 1e-12)
-        cent.append(x[rng.choice(n, p=p)])
-    cent = np.stack(cent)
-    assign = np.zeros(n, np.int64)
+    rank = _sort_rank(x)
+    if init is not None and init.shape == (k, x.shape[1]):
+        cent = np.array(init, np.float64)
+    else:
+        # maxmin init: lexicographically-first row, then repeatedly the
+        # point with the largest distance to its nearest chosen centroid
+        cent = [x[_argbest(np.zeros(n), rank)]]
+        for _ in range(1, k):
+            d2 = np.min([np.sum((x - c) ** 2, axis=1) for c in cent],
+                        axis=0)
+            cent.append(x[_argbest(d2, rank)])
+        cent = np.stack(cent)
+    assign = np.full(n, -1, np.int64)
     for _ in range(iters):
         d = ((x[:, None, :] - cent[None]) ** 2).sum(-1)
         new_assign = d.argmin(1)
@@ -37,6 +71,11 @@ def kmeans(x: np.ndarray, k: int, iters: int = 50,
             m = assign == j
             if m.any():
                 cent[j] = x[m].mean(0)
+            else:
+                # empty cluster: re-seed from the farthest point (the one
+                # worst represented by the current centroids), then let
+                # the next iteration re-assign around it
+                cent[j] = x[_argbest(d.min(1), rank)]
     return assign, cent
 
 

@@ -13,7 +13,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.sync import POD_AXIS
+from repro.core.sync import POD_AXIS, _pod_info, fleet_axes
 
 N_PROJ = 8
 
@@ -50,9 +50,8 @@ def pod_divergence(params, mesh, seed: int = 17) -> jax.Array:
     """D_k estimate for the calling pod (inside the per-pod shard_map).
     Returns a scalar; identical-across-pods reference is the pod-mean."""
     proj = project_params(params, seed)
-    if mesh is not None and POD_AXIS in mesh.axis_names \
-            and mesh.shape[POD_AXIS] > 1:
-        mean = jax.lax.pmean(proj, POD_AXIS)
+    if _pod_info(mesh) > 1:
+        mean = jax.lax.pmean(proj, fleet_axes(mesh))
     else:
         mean = proj
     return jnp.sqrt(jnp.sum((proj - mean) ** 2))

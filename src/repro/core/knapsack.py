@@ -31,12 +31,29 @@ from __future__ import annotations
 
 import heapq
 import math
-from typing import Callable, List, Sequence, Tuple
+from typing import Callable, List, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.compression import BLOCK, Level
+
+#: accounting pod count: one count for every level, or one per level —
+#: the hierarchical scheduler prices hier-capable rungs at the cluster
+#: count (they cross the slow tier once per cluster) and flat rungs at
+#: the fleet count (see Scheduler.level_acct).
+PodCounts = Union[int, Sequence[int]]
+
+
+def _per_level_pods(n_pods: PodCounts, n_levels: int) -> List[int]:
+    """Broadcast an int accounting pod count to one per level."""
+    if isinstance(n_pods, (int, np.integer)):
+        return [int(n_pods)] * n_levels
+    acct = [int(p) for p in n_pods]
+    if len(acct) != n_levels:
+        raise ValueError(f"per-level pod counts: expected {n_levels} "
+                         f"entries, got {len(acct)}")
+    return acct
 
 
 def level_value(level: Level) -> float:
@@ -54,15 +71,19 @@ def per_element_cost(level: Level, n_pods: int, block: int = BLOCK) -> float:
     return level.wire_bytes(block, max(n_pods, 2), block) / block
 
 
-def effective_ladder(levels: Sequence[Level], n_pods: int) -> List[int]:
+def effective_ladder(levels: Sequence[Level],
+                     n_pods: PodCounts) -> List[int]:
     """Rung indices ordered by per-element cost ascending (SKIP first),
     with dominated rungs pruned: the greedy's optimality argument needs a
     ladder monotone in (bytes -> value).  With the widened codec ladder
     that can fail (e.g. packed INT4 is cheaper AND higher-value than
     TOPK25), so drop any rung whose value does not strictly improve on a
-    cheaper rung — upgrading to it would never be the right move."""
+    cheaper rung — upgrading to it would never be the right move.
+    Per-level pod counts fold the two-tier discount into the ordering
+    (a hier rung's slow-tier cost shrinks by fleet/clusters)."""
+    acct = _per_level_pods(n_pods, len(levels))
     order = sorted(range(len(levels)),
-                   key=lambda j: per_element_cost(levels[j], n_pods))
+                   key=lambda j: per_element_cost(levels[j], acct[j]))
     ladder = []
     for j in order:
         if not ladder or level_value(levels[j]) > \
@@ -77,7 +98,7 @@ def _item_gain(importance: float, size: int, dv: float) -> float:
 
 def solve(importance: Sequence[float], sizes: Sequence[int],
           levels: Sequence[Level], budget_bytes: float,
-          n_pods: int) -> List[int]:
+          n_pods: PodCounts) -> List[int]:
     """-> per-group level index. Greedy incremental knapsack, one
     heap/pointer sweep.
 
@@ -90,18 +111,17 @@ def solve(importance: Sequence[float], sizes: Sequence[int],
     G = len(importance)
     assert len(sizes) == G
     levels = list(levels)
-    order = effective_ladder(levels, n_pods)
+    acct = _per_level_pods(n_pods, len(levels))
+    order = effective_ladder(levels, acct)
     # NOTE: the solver prices each group's bytes independently.  Since the
     # plan-as-data exchange block-aligns every leaf, per-group pricing is
     # EXACT for unpadded buckets and a lower bound under size-class
     # padding (codecs.plan_wire_bytes prices the executed signature) — the
     # greedy can never exceed the analytic budget it was given.
-    choice = [order[0]] * G          # start everything at the cheapest level
-    spent = sum(levels[choice[i]].wire_bytes(sizes[i], n_pods)
-                for i in range(G))
-
-    wb = [[levels[j].wire_bytes(sizes[i], n_pods) for j in order]
+    wb = [[levels[j].wire_bytes(sizes[i], acct[j]) for j in order]
           for i in range(G)]
+    choice = [order[0]] * G          # start everything at the cheapest level
+    spent = sum(wb[i][0] for i in range(G))
     val = [level_value(levels[j]) for j in order]
 
     heap: List[Tuple[float, int, int, int]] = []
@@ -153,7 +173,7 @@ def _group_hull(wb_row: np.ndarray, vals: np.ndarray) -> List[int]:
 
 
 def make_device_solver(sizes: Sequence[int], levels: Sequence[Level],
-                       n_pods: int, block: int = BLOCK
+                       n_pods: PodCounts, block: int = BLOCK
                        ) -> Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]:
     """Build the jittable device knapsack for a fixed (sizes, ladder).
 
@@ -171,13 +191,14 @@ def make_device_solver(sizes: Sequence[int], levels: Sequence[Level],
     still count against the budget — both make the device plan
     conservative, never over budget.
     """
-    order = effective_ladder(list(levels), n_pods)
+    acct = _per_level_pods(n_pods, len(levels))
+    order = effective_ladder(list(levels), acct)
     G, Lp = len(sizes), len(order)
     if Lp == 1 or G == 0:
         base_choice = jnp.full((G,), order[0] if order else 0, jnp.int32)
         return lambda importance, budget_bytes: base_choice
 
-    wb = np.asarray([[levels[j].wire_bytes(int(n), n_pods) for j in order]
+    wb = np.asarray([[levels[j].wire_bytes(int(n), acct[j]) for j in order]
                      for n in sizes], np.float64)          # (G, Lp)
     base = float(wb[:, 0].sum())
     vals = np.asarray([level_value(levels[j]) for j in order])
@@ -223,6 +244,7 @@ def make_device_solver(sizes: Sequence[int], levels: Sequence[Level],
 
 
 def plan_bytes(choice: Sequence[int], sizes: Sequence[int],
-               levels: Sequence[Level], n_pods: int) -> int:
-    return int(sum(levels[c].wire_bytes(n, n_pods)
+               levels: Sequence[Level], n_pods: PodCounts) -> int:
+    acct = _per_level_pods(n_pods, len(levels))
+    return int(sum(levels[c].wire_bytes(n, acct[c])
                    for c, n in zip(choice, sizes)))

@@ -50,7 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.compression import BLOCK, Level
-from repro.launch.mesh import DCN_BW, HBM_BW
+from repro.launch.mesh import DCN_BW, HBM_BW, ICI_BW
 
 #: default geometric growth of the padded-size ladder.  2.0 gives pure
 #: power-of-two classes (fewest signatures, up to 2x wire padding); the
@@ -259,37 +259,144 @@ def ring_override(ring_chunks: int) -> Optional[int]:
     return None if ring_chunks == 0 else int(ring_chunks)
 
 
+# ---------------------------------------------------------------------------
+# two-tier (hierarchical) exchange: per-rung tier choice
+# ---------------------------------------------------------------------------
+
+#: hier grid entries: 0 = flat (single-tier) exchange; 1 = two-tier with a
+#: full-precision (bf16 psum) intra-cluster stage; 2 = two-tier with an
+#: INT8 gather+fold intra-cluster stage.
+INTRA_FULL = 1
+INTRA_INT8 = 2
+
+
+def hier_override(hier_mode_cfg: int) -> Optional[int]:
+    """Translate ``ACESyncConfig.hier_mode`` (0 = roofline auto, -1 =
+    never two-tier, 1/2 = force full/INT8 intra stage) into the ``hier``
+    argument of :func:`hier_rung_mode` / :func:`exec_grid` (None = auto,
+    <= 0 = force flat, 1/2 = force)."""
+    return None if hier_mode_cfg == 0 else int(hier_mode_cfg)
+
+
+def hier_rung_mode(level: Level, nb: int, n_cross: int, n_edge: int,
+                   block: int = BLOCK, hier: Optional[int] = None) -> int:
+    """Tier choice for one rung on a (n_cross clusters) x (n_edge members)
+    fleet: 0 = flat, :data:`INTRA_FULL` / :data:`INTRA_INT8` = two-tier.
+
+    A hier-capable rung (``codec.supports_hier`` — dense formats whose
+    cluster aggregate re-encodes losslessly enough without a second error-
+    feedback stage) ALWAYS goes two-tier on a hierarchical fleet: its
+    cross-tier volume drops from (C*E - 1) to (C - 1) payloads per device
+    regardless of rung size.  The roofline only picks the INTRA stage —
+    full-precision (bf16 psum on the fast links, lossless tier-1) while
+    its ICI time hides under the DCN transfer of the cross tier, INT8
+    gather+fold once the edge group is wide enough that a dense bf16
+    intra stage would dominate the wall clock.  Like the ring chunk grid,
+    the choice is a deterministic function of (signature, mesh constants)
+    — replans that keep the signature keep the tier grid, and the step
+    stays retrace-free.
+
+    ``hier``: None = the heuristic; <= 0 = force flat; 1/2 = force the
+    full/INT8 intra stage on every hier-capable rung (tests, benches).
+    """
+    codec = level.codec
+    if (n_edge <= 1 or n_cross <= 1 or nb <= 0
+            or not getattr(codec, "supports_hier", False)):
+        return 0
+    if hier is not None:
+        if hier <= 0:
+            return 0
+        return INTRA_INT8 if hier >= 2 else INTRA_FULL
+    from repro.codecs import build_codec
+    n = nb * block
+    cross_t = (n_cross - 1) * codec.payload_bytes(n, block) / DCN_BW
+    intra_full_t = build_codec("full").wire_bytes(n, n_edge, block) / ICI_BW
+    return INTRA_FULL if intra_full_t <= cross_t else INTRA_INT8
+
+
 def exec_grid(level_idx: Sequence[int], sizes: Sequence[int],
               levels: Sequence[Level], n_pods: int, block: int = BLOCK,
               growth: Optional[float] = None,
-              ring: Optional[int] = None, bidir: bool = True
-              ) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
-    """(sig, chunks) of the executed exchange: the class-padded signature
-    with each ringing rung rounded up to a chunk multiple.  The ONE place
-    the executed static shape is decided — the Scheduler's plan pricing
-    and ``build_exec_plan`` both call it, so analytic bytes match the
-    traced collectives chunk padding included."""
+              ring: Optional[int] = None, bidir: bool = True,
+              n_edge: int = 1, hier: Optional[int] = None
+              ) -> Tuple[Tuple[int, ...], Tuple[int, ...],
+                         Tuple[int, ...]]:
+    """(sig, chunks, hier) of the executed exchange: the class-padded
+    signature with each ringing rung rounded up to a chunk multiple, plus
+    the per-rung tier grid (:func:`hier_rung_mode`).  The ONE place the
+    executed static shape is decided — the Scheduler's plan pricing and
+    ``build_exec_plan`` both call it, so analytic bytes match the traced
+    collectives, chunk padding and tier split included.
+
+    ``n_pods`` is the FLEET size (clusters x edge members); ``n_edge`` > 1
+    makes it a hierarchical fleet of ``n_pods // n_edge`` clusters.  Two-
+    tier rungs ring over the CROSS axis (cluster count); flat rungs on a
+    hierarchical fleet gather over the combined (pod, edge) axis in one
+    shot — ``ppermute`` cannot span a tuple axis, so they never ring."""
     sig = list(bucket_signature(level_idx, sizes, len(levels), block,
                                 growth))
-    chunks = []
+    n_edge = max(int(n_edge), 1)
+    n_cross = max(n_pods // n_edge, 1)
+    chunks, hgrid = [], []
     for r, nb in enumerate(sig):
-        k = ring_chunk_count(levels[r], nb, n_pods, block, ring, bidir)
+        h = hier_rung_mode(levels[r], nb, n_cross, n_edge, block, hier)
+        if h:
+            k = ring_chunk_count(levels[r], nb, n_cross, block, ring,
+                                 bidir)
+        elif n_edge > 1:
+            k = 0
+        else:
+            k = ring_chunk_count(levels[r], nb, n_pods, block, ring,
+                                 bidir)
         if k > 1 and nb % k:
             sig[r] = nb = ((nb + k - 1) // k) * k
         chunks.append(k)
-    return tuple(sig), tuple(chunks)
+        hgrid.append(h)
+    return tuple(sig), tuple(chunks), tuple(hgrid)
 
 
 def sig_wire_bytes(sig: Sequence[int], levels: Sequence[Level],
-                   n_pods: int, block: int = BLOCK) -> int:
+                   n_pods: int, block: int = BLOCK,
+                   hier: Optional[Sequence[int]] = None,
+                   n_cross: Optional[int] = None) -> int:
     """Per-device wire bytes of an executed exchange with bucket signature
-    ``sig`` — what the collectives actually move, padding included.  The
-    ring path moves exactly the all_gather receive volume (K chunks x
-    (P-1) hops x chunk payload), so chunking never changes the per-rung
-    pricing — only the chunk-multiple rounding in :func:`exec_grid`
-    (already folded into ``sig``) does."""
-    return int(sum(levels[r].wire_bytes(S * block, n_pods, block)
-                   for r, S in enumerate(sig) if S))
+    ``sig`` over the bandwidth-constrained (cross) tier — what the slow-
+    tier collectives actually move, padding included.  The ring path moves
+    exactly the all_gather receive volume (K chunks x (P-1) hops x chunk
+    payload), so chunking never changes the per-rung pricing — only the
+    chunk-multiple rounding in :func:`exec_grid` (already folded into
+    ``sig``) does.  With a ``hier`` tier grid, two-tier rungs cross the
+    slow tier once per CLUSTER (``n_cross`` peers) instead of once per
+    fleet member — the headline wire-byte cut of the hierarchy."""
+    total = 0
+    for r, S in enumerate(sig):
+        if not S:
+            continue
+        pods = n_pods
+        if hier and r < len(hier) and hier[r] and n_cross:
+            pods = n_cross
+        total += levels[r].wire_bytes(S * block, pods, block)
+    return int(total)
+
+
+def sig_intra_bytes(sig: Sequence[int], levels: Sequence[Level],
+                    n_edge: int, block: int = BLOCK,
+                    hier: Optional[Sequence[int]] = None) -> int:
+    """Fast-tier (intra-cluster) per-device wire bytes of a hierarchical
+    exchange: the tier-1 aggregation volume of each two-tier rung, priced
+    by the intra codec the tier grid selected (bf16 psum or INT8 gather).
+    Flat rungs move nothing on the fast tier (their single collective is
+    priced by :func:`sig_wire_bytes` at the fleet count)."""
+    if not hier or n_edge <= 1:
+        return 0
+    from repro.codecs import build_codec
+    total = 0
+    for r, S in enumerate(sig):
+        if not S or not (r < len(hier) and hier[r]):
+            continue
+        name = "full" if hier[r] == INTRA_FULL else "int8"
+        total += build_codec(name).wire_bytes(S * block, n_edge, block)
+    return int(total)
 
 
 # ---------------------------------------------------------------------------
@@ -340,13 +447,14 @@ class ExecPlan:
     block: int
     total_blocks: int
     perms: Tuple[jax.Array, ...]      # int32[S_r] per rung with sig[r] > 0
-    omega: jax.Array                  # f32[n_pods] aggregation weights
+    omega: jax.Array                  # f32[n_fleet] aggregation weights
     chunks: Tuple[int, ...] = ()      # ring chunk count per rung
     bidir: bool = True                # both DCN directions at once
+    hier: Tuple[int, ...] = ()        # per-rung tier grid (0/1/2)
 
     def static_key(self) -> tuple:
         return (self.levels, self.sig, self.chunks, self.bidir,
-                self.block, self.total_blocks)
+                self.hier, self.block, self.total_blocks)
 
     def with_omega(self, omega) -> "ExecPlan":
         return replace(self, omega=jnp.asarray(omega, jnp.float32))
@@ -356,10 +464,10 @@ jax.tree_util.register_pytree_node(
     ExecPlan,
     lambda ep: ((ep.perms, ep.omega),
                 (ep.levels, ep.sig, ep.block, ep.total_blocks, ep.chunks,
-                 ep.bidir)),
+                 ep.bidir, ep.hier)),
     lambda aux, ch: ExecPlan(levels=aux[0], sig=aux[1], block=aux[2],
                              total_blocks=aux[3], chunks=aux[4],
-                             bidir=aux[5], perms=tuple(ch[0]),
+                             bidir=aux[5], hier=aux[6], perms=tuple(ch[0]),
                              omega=ch[1]),
 )
 
@@ -368,6 +476,7 @@ def build_exec_plan(plan, sizes: Optional[Sequence[int]] = None, *,
                     block: int = BLOCK, growth: Optional[float] = None,
                     omega=None, n_pods: int = 1,
                     ring: Optional[int] = None, bidir: bool = True,
+                    n_edge: int = 1, hier: Optional[int] = None,
                     layout: Optional[LeafLayout] = None) -> ExecPlan:
     """Lower a :class:`SyncPlan` to an :class:`ExecPlan`.
 
@@ -395,8 +504,9 @@ def build_exec_plan(plan, sizes: Optional[Sequence[int]] = None, *,
     L = len(plan.levels)
     nbs, starts = layout.nbs, layout.starts
     NB = layout.total_blocks
-    sig, chunks = exec_grid(level_idx, layout.sizes, plan.levels, n_pods,
-                            block, growth, ring, bidir)
+    sig, chunks, hgrid = exec_grid(level_idx, layout.sizes, plan.levels,
+                                   n_pods, block, growth, ring, bidir,
+                                   n_edge=n_edge, hier=hier)
     member = [[] for _ in range(L)]
     for i, li in enumerate(level_idx):
         if nbs[i]:
@@ -417,4 +527,5 @@ def build_exec_plan(plan, sizes: Optional[Sequence[int]] = None, *,
     om = plan.omega if omega is None else omega
     return ExecPlan(levels=tuple(plan.levels), sig=sig, block=block,
                     total_blocks=NB, perms=tuple(perms), chunks=chunks,
-                    bidir=bidir, omega=jnp.asarray(om, jnp.float32))
+                    bidir=bidir, hier=hgrid,
+                    omega=jnp.asarray(om, jnp.float32))

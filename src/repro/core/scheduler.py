@@ -27,6 +27,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.codecs import plan_intra_bytes as _bucketed_intra_bytes
 from repro.codecs import plan_wire_bytes as _bucketed_plan_bytes
 from repro.configs.base import ACESyncConfig
 from repro.core import knapsack
@@ -78,6 +79,7 @@ class SyncPlan:
     bucket_block: Optional[int] = None    # block size bucket_sig counts in
     adaptive: bool = False
     ring_chunks: Optional[Tuple[int, ...]] = None  # per-rung chunk grid
+    hier: Optional[Tuple[int, ...]] = None         # per-rung tier grid
 
     def signature(self) -> tuple:
         """Hashable key of the full assignment (legacy; the compiled step
@@ -92,37 +94,66 @@ class Scheduler:
     """Host-side policy engine: telemetry + importance -> SyncPlan."""
 
     def __init__(self, cfg: ACESyncConfig, group_sizes: Sequence[int],
-                 n_pods: int):
+                 n_pods: int, n_edge: int = 1):
         self.cfg = cfg
         self.sizes = list(group_sizes)
+        # n_pods is the FLEET size (every device the flat exchange spans);
+        # n_edge > 1 makes it a hierarchical fleet of n_pods // n_edge
+        # clusters whose hier-capable rungs cross the slow tier once per
+        # CLUSTER (see planexec.exec_grid)
         self.n_pods = n_pods
+        self.n_edge = max(int(n_edge), 1)
+        self.n_cross = max(n_pods // self.n_edge, 1)
         # knapsack/accounting always price levels as if >=2 peers exchange
         # (a 1-pod run would otherwise see zero cost everywhere and the
         # solver would degenerate to all-SKIP)
         self.acct_pods = max(n_pods, 2)
+        self.acct_cross = max(self.n_cross, 2)
         self.levels = levels_from_config(cfg)
         self.full_level = next(l for l in self.levels if l.is_full)
         self.sync_interval = cfg.sync_interval_init
         self._full_bytes = sum(
             self.full_level.wire_bytes(n, self.acct_pods)
             for n in self.sizes)
+        self._full_bytes_cross = sum(
+            self.full_level.wire_bytes(n, self.acct_cross)
+            for n in self.sizes)
+        # per-level accounting pod counts: on a hierarchical fleet, hier-
+        # capable rungs cross the slow tier at the cluster count, so the
+        # knapsack prices them at acct_cross — compression choices track
+        # the bytes the cross tier actually moves
+        if self.hier_enabled:
+            self.level_acct = [
+                self.acct_cross if getattr(lv.codec, "supports_hier", False)
+                else self.acct_pods for lv in self.levels]
+        else:
+            self.level_acct = [self.acct_pods] * len(self.levels)
         self._device_solver = None
+
+    @property
+    def hier_enabled(self) -> bool:
+        """Whether plans get a two-tier grid: hierarchical fleet (> 1
+        member per cluster, > 1 cluster) and not forced flat by config."""
+        return (self.n_edge > 1 and self.n_cross > 1
+                and getattr(self.cfg, "hier_mode", 0) >= 0)
 
     def _finalize(self, plan: SyncPlan, adaptive: bool) -> SyncPlan:
         """Attach the bucket signature the executed exchange moves (padded
         size classes for adaptive plans, exact sizes otherwise — plus the
-        ring chunk grid's chunk-multiple rounding, via the same
-        ``planexec.exec_grid`` the trainer lowers with, so the priced
-        bytes track the executed collectives)."""
+        ring chunk grid's chunk-multiple rounding and the two-tier grid,
+        via the same ``planexec.exec_grid`` the trainer lowers with, so
+        the priced bytes track the executed collectives)."""
         plan.adaptive = adaptive
-        sig, chunks = planexec.exec_grid(
+        sig, chunks, hier = planexec.exec_grid(
             plan.level_idx, self.sizes, plan.levels, self.n_pods,
             block=self.cfg.topk_block,
             growth=self.pad_growth if adaptive else None,
             ring=planexec.ring_override(self.cfg.ring_chunks),
-            bidir=self.cfg.ring_bidir)
+            bidir=self.cfg.ring_bidir, n_edge=self.n_edge,
+            hier=planexec.hier_override(getattr(self.cfg, "hier_mode", 0)))
         plan.bucket_sig = sig
         plan.ring_chunks = chunks
+        plan.hier = hier
         plan.bucket_block = self.cfg.topk_block
         return plan
 
@@ -152,9 +183,9 @@ class Scheduler:
     def plan(self, importance: Sequence[float], bandwidth_mbps: float,
              omega: Optional[Sequence[float]] = None) -> SyncPlan:
         """ACE-Sync adaptive plan: knapsack under the eq-(5) budget."""
-        budget = byte_budget(self.cfg, bandwidth_mbps, self._full_bytes)
+        budget = self.budget_for(bandwidth_mbps)
         choice = knapsack.solve(list(importance), self.sizes, self.levels,
-                                budget, self.acct_pods)
+                                budget, self.level_acct)
         return self._finalize(
             SyncPlan(tuple(choice), tuple(self.levels),
                      self._omega(omega), self.sync_interval), adaptive=True)
@@ -182,13 +213,20 @@ class Scheduler:
         ``fn(importance f32[G], budget_bytes) -> int32[G]`` (cached)."""
         if self._device_solver is None:
             self._device_solver = knapsack.make_device_solver(
-                self.sizes, self.levels, self.acct_pods,
+                self.sizes, self.levels, self.level_acct,
                 block=self.cfg.topk_block)
         return self._device_solver
 
     def budget_for(self, bandwidth_mbps: float) -> float:
-        """Eq-(5) byte budget against this scheduler's full-sync volume."""
-        return byte_budget(self.cfg, bandwidth_mbps, self._full_bytes)
+        """Eq-(5) byte budget against this scheduler's full-sync volume.
+
+        On a hierarchical fleet the budget is priced against the CROSS-
+        tier full volume: the 5-200 Mbps WAN links eq (5) models are the
+        per-cluster uplinks, and hier-capable rungs are knapsack-priced
+        at the cluster count — same envelope, same currency."""
+        full = (self._full_bytes_cross if self.hier_enabled
+                else self._full_bytes)
+        return byte_budget(self.cfg, bandwidth_mbps, full)
 
     def adapt_interval(self, divergence: float, div_ref: float) -> int:
         """Paper eq (9) control: grow H when divergence is small, shrink
@@ -205,21 +243,35 @@ class Scheduler:
     def _omega(self, omega) -> Tuple[float, ...]:
         if omega is None:
             return tuple([1.0 / self.n_pods] * self.n_pods)
-        s = sum(omega)
+        s = float(sum(omega))
+        if not math.isfinite(s) or s <= 0.0:
+            raise ValueError(
+                f"reliability weights must have a positive finite sum, "
+                f"got sum={s!r} over {len(tuple(omega))} weights — all "
+                f"reliability scores underflowed?")
         return tuple(w / s for w in omega)
 
     def plan_wire_bytes(self, plan: SyncPlan,
                         n_pods: Optional[int] = None,
                         padded: bool = True) -> int:
-        """Bytes a sync round under ``plan`` actually moves per device:
-        bucketed codec pricing on the plan's executed bucket signature
-        (same-level groups share one buffer/collective in core/sync.py;
-        size-class padding included for adaptive plans), the same
-        accounting Table 1 and the dry-run byte assertions use.
-        ``padded=False`` prices the unpadded analytic floor."""
+        """Bytes a sync round under ``plan`` actually moves per device
+        over the SLOW tier: bucketed codec pricing on the plan's executed
+        bucket signature (same-level groups share one buffer/collective
+        in core/sync.py; size-class padding included for adaptive plans),
+        the same accounting Table 1 and the dry-run byte assertions use.
+        Two-tier rungs are priced at the cluster count.  ``padded=False``
+        prices the unpadded analytic floor; an explicit ``n_pods``
+        prices every rung at that count (star/what-if accounting)."""
         return _bucketed_plan_bytes(
             plan, self.sizes, self.acct_pods if n_pods is None else n_pods,
-            self.cfg.topk_block, use_sig=padded)
+            self.cfg.topk_block, use_sig=padded,
+            n_cross=self.acct_cross if n_pods is None else None)
+
+    def plan_intra_bytes(self, plan: SyncPlan) -> int:
+        """Fast-tier (intra-cluster) bytes of the plan's two-tier rungs —
+        zero for flat plans."""
+        return _bucketed_intra_bytes(plan, self.sizes, self.n_edge,
+                                     self.cfg.topk_block)
 
     def fullsync_wire_bytes(self) -> int:
         return self._full_bytes

@@ -52,7 +52,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.codecs import POD_AXIS, plan_wire_bytes
+from repro.codecs import EDGE_AXIS, POD_AXIS, plan_wire_bytes
 from repro.core import compression as C
 from repro.core.planexec import ExecPlan, build_exec_plan, n_blocks
 from repro.kernels.decode import FIXED_POINT_BITS
@@ -116,9 +116,37 @@ def group_sizes(param_specs) -> List[int]:
 
 
 def _pod_info(mesh) -> int:
+    """FLEET size: every device one flat exchange spans — the pod axis
+    times the (optional) fast intra-cluster edge axis."""
     if mesh is None or POD_AXIS not in mesh.axis_names:
         return 1
-    return mesh.shape[POD_AXIS]
+    n = mesh.shape[POD_AXIS]
+    if EDGE_AXIS in mesh.axis_names:
+        n *= mesh.shape[EDGE_AXIS]
+    return n
+
+
+def fleet_axes(mesh) -> Tuple[str, ...]:
+    """The mesh axes one flat fleet collective spans: ``("pod",)`` on a
+    flat mesh, ``("pod", "edge")`` on a hierarchical one, ``()`` without
+    a pod axis.  ``pmean``/``psum`` over the tuple reduce across the
+    whole fleet; the tuple-axis ``all_gather`` order is pod-major,
+    matching the ``pod * n_edge + edge`` fleet slot indexing."""
+    if mesh is None or POD_AXIS not in mesh.axis_names:
+        return ()
+    if EDGE_AXIS in mesh.axis_names:
+        return (POD_AXIS, EDGE_AXIS)
+    return (POD_AXIS,)
+
+
+def _tier_info(mesh) -> Tuple[int, int]:
+    """(n_cross, n_edge) of the two-tier topology: cluster count on the
+    slow pod axis x members per cluster on the fast edge axis.  A flat
+    mesh is (n_pods, 1)."""
+    if mesh is None or POD_AXIS not in mesh.axis_names:
+        return 1, 1
+    n_edge = mesh.shape[EDGE_AXIS] if EDGE_AXIS in mesh.axis_names else 1
+    return mesh.shape[POD_AXIS], n_edge
 
 
 def _uses_nested(mesh, inside_manual: bool) -> bool:
@@ -136,7 +164,7 @@ def _local_shape(shape, spec, mesh) -> Tuple[int, ...]:
         if ax is None or d >= len(out):
             continue
         for a in ((ax,) if isinstance(ax, str) else tuple(ax)):
-            if a != POD_AXIS:
+            if a not in (POD_AXIS, EDGE_AXIS):
                 out[d] //= mesh.shape[a]
     return tuple(out)
 
@@ -175,28 +203,43 @@ def _leaf_blocks(leaves, block: int) -> jax.Array:
 
 
 def _rung_exchange(codec, bucket, ebucket, omega, omega_own, *, chunks,
-                   bidir, gamma, n_pods, block, use_pallas, fixed_bits):
-    """One rung's EF + compress + exchange round: the chunked ring
-    pipeline when the plan's chunk grid says so (``chunks > 0``; see
+                   bidir, gamma, n_pods, block, use_pallas, fixed_bits,
+                   hier=0, n_cross=1, n_edge=1, omega_intra=None):
+    """One rung's EF + compress + exchange round: the two-tier path when
+    the plan's tier grid says so (``hier > 0`` — intra-cluster
+    aggregation over the fast edge axis feeding one payload per cluster
+    over the pod axis, ``Codec.ef_sync_hier``), the chunked ring
+    pipeline when the chunk grid says so (``chunks > 0``; see
     ``planexec.ring_chunk_count``), the one-shot ``all_gather`` path
-    otherwise.  Both paths accumulate deterministically (fixed-point /
-    integer / canonical-order — the codec's choice) whenever >= 3 pods
-    exchange, so per-pod aggregates are bit-identical on any mesh and
-    ring <-> one-shot replans never move the numerics."""
+    otherwise.  Flat rungs on a hierarchical fleet gather over the
+    combined ``(pod, edge)`` tuple axis — gathered pod-major, matching
+    the fleet indexing of ``omega``.  All paths accumulate
+    deterministically (fixed-point / integer / canonical-order — the
+    codec's choice) whenever >= 3 peers exchange, so per-device
+    aggregates are bit-identical on any mesh and ring <-> one-shot <->
+    two-tier replans never move the numerics."""
+    if hier and n_edge > 1:
+        return codec.ef_sync_hier(
+            bucket, ebucket, omega_intra, omega_own, gamma=gamma,
+            n_cross=n_cross, n_edge=n_edge, intra_mode=hier,
+            n_chunks=chunks, block=block, cross_axis=POD_AXIS,
+            intra_axis=EDGE_AXIS, use_pallas=use_pallas, bidir=bidir,
+            fixed_bits=fixed_bits)
+    axis = (POD_AXIS, EDGE_AXIS) if n_edge > 1 else POD_AXIS
     if chunks and n_pods > 1:
         return codec.ef_sync_ring(
             bucket, ebucket, omega, omega_own, gamma=gamma,
-            n_pods=n_pods, n_chunks=chunks, block=block, axis=POD_AXIS,
+            n_pods=n_pods, n_chunks=chunks, block=block, axis=axis,
             use_pallas=use_pallas, bidir=bidir, fixed_bits=fixed_bits)
     return codec.ef_sync(
         bucket, ebucket, omega, omega_own, gamma=gamma, n_pods=n_pods,
-        block=block, axis=POD_AXIS, use_pallas=use_pallas,
+        block=block, axis=axis, use_pallas=use_pallas,
         fixed_bits=fixed_bits)
 
 
-def _repack_sync_local(gs, es, perms, omega, omega_own, aux, scalars, *,
-                       ep: ExecPlan, gamma, n_pods, use_pallas,
-                       fixed_bits, apply_fn=None):
+def _repack_sync_local(gs, es, perms, omega, omega_own, omega_intra, aux,
+                       scalars, *, ep: ExecPlan, gamma, n_pods, n_cross,
+                       n_edge, use_pallas, fixed_bits, apply_fn=None):
     """Fully local per-device sync of the whole tree through the plan's
     gather/scatter repacking.
 
@@ -241,7 +284,9 @@ def _repack_sync_local(gs, es, perms, omega, omega_own, aux, scalars, *,
             codec, fb[perm].reshape(-1), eb[perm].reshape(-1), omega,
             omega_own, chunks=ep.chunks[r] if ep.chunks else 0,
             bidir=ep.bidir, gamma=gamma, n_pods=n_pods, block=block,
-            use_pallas=use_pallas, fixed_bits=fixed_bits)
+            use_pallas=use_pallas, fixed_bits=fixed_bits,
+            hier=ep.hier[r] if ep.hier else 0, n_cross=n_cross,
+            n_edge=n_edge, omega_intra=omega_intra)
         err = err.at[perm].set(b_err.reshape(S, block))
         if apply_fn is None:
             agg = agg.at[perm].set(b_agg.reshape(S, block))
@@ -276,7 +321,8 @@ def _repack_sync_local(gs, es, perms, omega, omega_own, aux, scalars, *,
 
 
 def _auto_axes(mesh):
-    return tuple(a for a in mesh.axis_names if a != POD_AXIS)
+    return tuple(a for a in mesh.axis_names
+                 if a not in (POD_AXIS, EDGE_AXIS))
 
 
 def sync_tree(tree, errors, plan: Union[SyncPlan, ExecPlan], *, mesh,
@@ -328,6 +374,7 @@ def sync_tree(tree, errors, plan: Union[SyncPlan, ExecPlan], *, mesh,
     if use_pallas is None:
         use_pallas = ops.default_use_pallas()
     n_pods = _pod_info(mesh)
+    n_cross, n_edge = _tier_info(mesh)
 
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     e_leaves = treedef.flatten_up_to(errors)
@@ -344,23 +391,35 @@ def sync_tree(tree, errors, plan: Union[SyncPlan, ExecPlan], *, mesh,
         else:
             lsz = [math.prod(l.shape) for l in leaves]
         ep = build_exec_plan(plan, lsz, block=block, growth=None,
-                             n_pods=n_pods, ring=ring, bidir=bidir)
+                             n_pods=n_pods, ring=ring, bidir=bidir,
+                             n_edge=n_edge)
     else:
         ep = plan
 
     omega = ep.omega
     if n_pods == 1 and omega.shape[0] == 1:
         omega = jnp.ones((1,), jnp.float32)  # single pod: identity weight
-    # own pod's aggregation weight, computed at the per-pod level (axis_index
-    # may not re-bind "pod" inside the nested fully-manual shard_map)
-    if n_pods > 1:
+    # own device's aggregation weight and its cluster's (E,) omega slice,
+    # computed at the per-pod level (axis_index may not re-bind "pod"/
+    # "edge" inside the nested fully-manual shard_map).  Fleet indexing is
+    # pod-major — slot = pod * n_edge + edge — matching the tuple-axis
+    # all_gather order flat rungs fold in.
+    if n_edge > 1:
+        pod_i = jax.lax.axis_index(POD_AXIS)
+        fleet_i = pod_i * n_edge + jax.lax.axis_index(EDGE_AXIS)
+        omega_own = omega[fleet_i]
+        omega_intra = omega.reshape(n_cross, n_edge)[pod_i]
+    elif n_pods > 1:
         omega_own = omega[jax.lax.axis_index(POD_AXIS)]
+        omega_intra = omega[:1]          # no fast tier: unused
     else:
         omega_own = omega[0]
+        omega_intra = omega[:1]
 
     fn = functools.partial(_repack_sync_local, ep=ep, gamma=gamma,
-                           n_pods=n_pods, use_pallas=use_pallas,
-                           fixed_bits=fixed_bits, apply_fn=apply_fn)
+                           n_pods=n_pods, n_cross=n_cross, n_edge=n_edge,
+                           use_pallas=use_pallas, fixed_bits=fixed_bits,
+                           apply_fn=apply_fn)
     gs, es = tuple(leaves), tuple(e_leaves)
     aux = tuple(tuple(treedef.flatten_up_to(a)) for a in apply_aux)
     scalars = tuple(apply_scalars)
@@ -368,8 +427,8 @@ def sync_tree(tree, errors, plan: Union[SyncPlan, ExecPlan], *, mesh,
         aspecs = []
         for s in s_leaves:
             aspec = norm_spec(s if s is not None else P(), mesh)
-            # drop the pod axis from specs (manual outside already)
-            aspecs.append(P(*[None if ax == POD_AXIS else ax
+            # drop the pod/edge axes from specs (manual outside already)
+            aspecs.append(P(*[None if ax in (POD_AXIS, EDGE_AXIS) else ax
                               for ax in aspec]))
         aspecs = tuple(aspecs)
         pspecs = tuple(P(None) for _ in ep.perms)
@@ -379,19 +438,20 @@ def sync_tree(tree, errors, plan: Union[SyncPlan, ExecPlan], *, mesh,
                     else aspecs)
         inner = compat.shard_map(
             fn, mesh,
-            in_specs=(aspecs, aspecs, pspecs, P(None), P(), aux_specs,
-                      scalar_specs),
+            in_specs=(aspecs, aspecs, pspecs, P(None), P(), P(None),
+                      aux_specs, scalar_specs),
             out_specs=(out_main, aspecs),
             manual_axes=set(_auto_axes(mesh)),
             # surrounding per-pod shard_map (if any) provides the mesh
             infer_mesh=inside_manual)
-        aggs, news = inner(gs, es, ep.perms, omega, omega_own, aux,
-                           scalars)
+        aggs, news = inner(gs, es, ep.perms, omega, omega_own,
+                           omega_intra, aux, scalars)
     else:
         # no mesh, or old-jax fully-manual region (leaves replicated
         # over data/model there): device-local math, pod collectives
         # still bound by the enclosing manual region
-        aggs, news = fn(gs, es, ep.perms, omega, omega_own, aux, scalars)
+        aggs, news = fn(gs, es, ep.perms, omega, omega_own, omega_intra,
+                        aux, scalars)
     news_tree = jax.tree_util.tree_unflatten(treedef, list(news))
     if apply_fn is not None:
         out_trees = tuple(jax.tree_util.tree_unflatten(treedef, list(a))

@@ -55,18 +55,26 @@ from repro.optim import adamw
 from repro.strategies import SyncStrategy, resolve_strategy
 
 POD = S.POD_AXIS
+EDGE = S.EDGE_AXIS
 
 
 def _n_pods(mesh: Optional[Mesh]) -> int:
-    if mesh is None or POD not in mesh.axis_names:
+    """FLEET size: pod axis x the optional intra-cluster edge axis."""
+    return S._pod_info(mesh)
+
+
+def _n_edge(mesh: Optional[Mesh]) -> int:
+    if mesh is None or EDGE not in mesh.axis_names:
         return 1
-    return mesh.shape[POD]
+    return mesh.shape[EDGE]
 
 
-def _pod_prefix(spec: P, rank: int) -> P:
-    """P("pod", *spec) padded with None to the leaf rank."""
+def _pod_prefix(spec: P, rank: int, axes=POD) -> P:
+    """P(axes, *spec) padded with None to the leaf rank — the fleet
+    replica dim is sharded over ("pod", "edge") on hierarchical meshes
+    (pod-major, matching the fleet slot indexing)."""
     rest = list(spec) + [None] * (rank - 1 - len(spec))
-    return P(POD, *rest[: rank - 1])
+    return P(axes, *rest[: rank - 1])
 
 
 def _array_spec(x):
@@ -90,13 +98,21 @@ class Trainer:
         self.mesh = mesh
         self.strategy = resolve_strategy(strategy)
         self.strategy_name = self.strategy.name
+        # n_pods is the FLEET size (pod x edge); a hierarchical mesh adds
+        # the fast intra-cluster "edge" axis and hier-capable rungs sync
+        # two-tier (intra aggregation + one payload per cluster crossing
+        # the slow pod axis — see core/sync.py)
         self.n_pods = _n_pods(mesh)
+        self.n_edge = _n_edge(mesh)
+        self.fleet_axes = S.fleet_axes(mesh) or (POD,)
+        self._fleet_dim = (self.fleet_axes if len(self.fleet_axes) > 1
+                           else self.fleet_axes[0])
         self.param_specs = model.param_specs()
         self.param_shardings = model.param_shardings()
         self.metas = S.group_metas(self.param_specs)
         self.scheduler = Scheduler(run.acesync,
                                    [m.size for m in self.metas],
-                                   self.n_pods)
+                                   self.n_pods, n_edge=self.n_edge)
         # per-group element counts of the layout the exchange runs on
         # (local shard sizes under the nested data/model-manual region),
         # and the block layout derived from them — both computed ONCE here
@@ -153,7 +169,8 @@ class Trainer:
 
         def leaf_spec(tmpl_spec, leaf):
             return sharding_for(mesh, _pod_prefix(tmpl_spec,
-                                                  len(leaf.shape)),
+                                                  len(leaf.shape),
+                                                  self._fleet_dim),
                                 shape=leaf.shape)
 
         params_sh = jax.tree.map(
@@ -164,7 +181,8 @@ class Trainer:
         specs = self.state_specs()
 
         def other(leaf):
-            return sharding_for(mesh, _pod_prefix(P(), len(leaf.shape)),
+            return sharding_for(mesh, _pod_prefix(P(), len(leaf.shape),
+                                                  self._fleet_dim),
                                 shape=leaf.shape)
 
         sh = {"params": params_sh, "m": params_sh, "v": params_sh,
@@ -195,7 +213,7 @@ class Trainer:
         return jax.tree.map(lambda x: x[None], tree)
 
     def _pmean(self, x):
-        return jax.lax.pmean(x, POD) if self.n_pods > 1 else x
+        return jax.lax.pmean(x, self.fleet_axes) if self.n_pods > 1 else x
 
     def _grad_step(self, params, batch):
         run = self.run
@@ -320,8 +338,11 @@ class Trainer:
         def avg(p):
             if self.n_pods > 1:
                 idx = jax.lax.axis_index(POD)
+                if self.n_edge > 1:
+                    idx = idx * self.n_edge + jax.lax.axis_index(EDGE)
                 return jax.lax.psum(
-                    p.astype(jnp.float32) * omega[idx], POD).astype(p.dtype)
+                    p.astype(jnp.float32) * omega[idx],
+                    self.fleet_axes).astype(p.dtype)
             return p
 
         new_params = jax.tree.map(avg, st["params"])
@@ -356,7 +377,10 @@ class Trainer:
                                  growth=growth, n_pods=self.n_pods,
                                  ring=planexec.ring_override(
                                      cfg.ring_chunks),
-                                 bidir=cfg.ring_bidir)
+                                 bidir=cfg.ring_bidir,
+                                 n_edge=self.n_edge,
+                                 hier=planexec.hier_override(
+                                     getattr(cfg, "hier_mode", 0)))
             # bounded: adaptive runs see a fresh assignment nearly every
             # replan, and each entry holds O(total_blocks) device perms —
             # evict oldest-first, rebuilding is a cheap numpy pass.  The
@@ -393,13 +417,15 @@ class Trainer:
             fn = jax.jit(wrapped_sp, donate_argnums=(0,))
         else:
             state_specs = self.state_specs()
-            state_in = jax.tree.map(lambda l: P(POD), state_specs)
+            fleet = self._fleet_dim
+            state_in = jax.tree.map(lambda l: P(fleet), state_specs)
             # plan vectors (gather perms + omega) ride replicated into the
             # per-pod manual region
             plan_in = jax.tree.map(lambda _: P(), ep)
-            # modern jax: manual over "pod" only, data/model auto under XLA
-            # SPMD; old jax: fully manual, data/model-replicated compute
-            manual = compat.manual_axes_for(mesh, {POD})
+            # modern jax: manual over the fleet axes only, data/model auto
+            # under XLA SPMD; old jax: fully manual, data/model-replicated
+            # compute
+            manual = compat.manual_axes_for(mesh, set(self.fleet_axes))
 
             def wrapped(state, batch, plan_vec):
                 with use_shard_ctx(mesh, exclude=tuple(manual)):
@@ -407,7 +433,7 @@ class Trainer:
 
             smapped = compat.shard_map(
                 wrapped, mesh,
-                in_specs=(state_in, P(POD), plan_in),
+                in_specs=(state_in, P(fleet), plan_in),
                 out_specs=(state_in, P()),
                 manual_axes=manual)
             fn = jax.jit(smapped, donate_argnums=(0,))
@@ -419,8 +445,25 @@ class Trainer:
     def _record_specs(self, kind: str, state, batch):
         """Remember the (state, batch) avals + shardings of this step
         kind once — what warm_compile AOT-lowers against (shapes never
-        change within a run)."""
+        change within a run).  The batch arrives as an UNCOMMITTED host
+        array the live dispatch auto-shards; recording its single-device
+        placement verbatim would make every mesh AOT lowering fail on
+        "incompatible devices" against the mesh-sharded state, so on a
+        pod mesh the batch spec carries the fleet sharding the
+        shard_mapped step actually consumes."""
         if kind in self._arg_specs:
+            return
+        if self.mesh is not None and POD in self.mesh.axis_names:
+            # Steady-state shardings, not the live arrays': the step's
+            # out_specs pin every state leaf to P(fleet), so leaves still
+            # carrying their init-time data/model device_put layout (or an
+            # uncommitted batch's single-device placement) would bake a
+            # lowering the post-first-step state can never dispatch into.
+            sh = NamedSharding(self.mesh, P(self._fleet_dim))
+            spec = lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                                  sharding=sh)
+            self._arg_specs[kind] = (jax.tree.map(spec, state),
+                                     jax.tree.map(spec, batch))
             return
         self._arg_specs[kind] = (jax.tree.map(_array_spec, state),
                                  jax.tree.map(_array_spec, batch))
@@ -533,9 +576,11 @@ class Trainer:
                 continue
             fn = self.jit_step(ep, kind)
             try:
+                # plan vectors ride replicated on the mesh — lowering with
+                # their live (single-device, committed) placements would
+                # conflict with the mesh-sharded state
                 compiled = fn.lower(
-                    specs[0], specs[1],
-                    jax.tree.map(_array_spec, ep)).compile()
+                    specs[0], specs[1], self.plan_arg_specs(ep)).compile()
             except Exception:   # pragma: no cover - defensive: a failed
                 ok = False      # warm-up degrades to a foreground compile
                 continue

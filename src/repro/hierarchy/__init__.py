@@ -1,0 +1,13 @@
+"""Hierarchical cloud-edge coordination (paper component 3).
+
+Host-side control layer of the two-tier topology: live device clustering
+over nonstationary telemetry (``ClusterState``), per-cluster policies,
+and the fleet-slot reliability weights omega that flow into the knapsack
+and ``SyncPlan``/``ExecPlan`` as device data.  The execution-side
+counterpart is ``core/sync.py``'s two-tier exchange (intra-cluster
+aggregation over the fast "edge" mesh axis feeding the compressed
+cross-tier ring over "pod").
+"""
+from repro.hierarchy.cluster import ClusterPolicy, ClusterState
+
+__all__ = ["ClusterPolicy", "ClusterState"]

@@ -33,6 +33,7 @@ train end-to-end on CPU (see examples/train_lm.py).
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import threading
 import time
@@ -45,15 +46,15 @@ from repro.configs import ARCHS, SMOKE_ARCHS, SHAPES
 from repro.configs.base import RunConfig, ShapeConfig
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core import acesync
-from repro.core.clustering import cluster_devices, reliability_weights
 from repro.core.trainer import Trainer
 from repro.data.pipeline import TokenPipeline
 from repro.data.telemetry import make_profiles, snapshot, bandwidth_at
+from repro.hierarchy import ClusterState
 from repro.models.registry import build_model
 from repro.runtime.fault_tolerance import (HeartbeatMonitor,
                                            StragglerDetector)
 from repro.strategies import STEP_ADVANCING, SYNC_KINDS, SyncStrategy, \
-    list_strategies, mean_bandwidth, resolve_strategy
+    list_strategies, resolve_strategy
 
 
 def _device_ready(x) -> bool:
@@ -88,6 +89,15 @@ class TrainLoop:
         self.strategy = self.trainer.strategy
         self.ckpt = Checkpointer(run.ckpt_dir)
         self.profiles = make_profiles(n_edge_devices, seed)
+        sched = self.trainer.scheduler
+        # live clustering: 1:1 clusters<->cross-tier pods on a hierarchical
+        # mesh, the config's n_clusters otherwise
+        self.clusters = ClusterState(
+            n_edge_devices,
+            sched.n_cross if sched.hier_enabled else run.acesync.n_clusters,
+            hysteresis=getattr(run.acesync, "cluster_hysteresis", 0.15))
+        self._plan_takes_clusters = "clusters" in inspect.signature(
+            self.strategy.make_plan).parameters
         self.monitor = HeartbeatMonitor(max(self.trainer.n_pods, 1))
         self.straggler = StragglerDetector()
         self.history = []
@@ -108,21 +118,23 @@ class TrainLoop:
 
     # ---- policy refresh (host side, every replan_every steps) ----------
     def _policy_inputs(self, step: int):
-        """Telemetry snapshot -> (telemetry, pod omega weights)."""
-        cfg = self.run.acesync
+        """Telemetry snapshot -> (telemetry, fleet omega weights).
+
+        The live :class:`~repro.hierarchy.ClusterState` re-clusters on
+        each refresh (warm-started k-means + hysteresis, so jitter-only
+        telemetry never flaps the assignment), and the per-device
+        reliability weights come back already summed into fleet slots —
+        cluster-major on a hierarchical mesh, pod-major on a flat one.
+        Everything returned is device data; a re-cluster never adds a
+        static jit key."""
         telem = snapshot(self.profiles, step)
-        assign = cluster_devices(telem, cfg.n_clusters)
         sf = self.straggler.straggle_factors(self.monitor)
         for t, pod in zip(telem, range(len(telem))):
             t["straggle"] *= sf.get(pod % max(len(sf), 1), 1.0)
-        omega_dev = reliability_weights(telem, assign)
-        # collapse device weights to pod weights
-        n_pods = self.trainer.n_pods
-        omega = [0.0] * n_pods
-        for i, w in enumerate(omega_dev):
-            omega[i % n_pods] += w
-        tot = sum(omega)
-        return telem, tuple(w / tot for w in omega)
+        self.clusters.update(telem)
+        sched = self.trainer.scheduler
+        return telem, self.clusters.fleet_omega(
+            telem, sched.n_cross, sched.n_edge)
 
     def refresh_plan(self, state, step: int):
         cfg = self.run.acesync
@@ -137,7 +149,8 @@ class TrainLoop:
             # on the current plan until the fetch lands (poll_replan).
             # Only the estimator's scalar state enters the computation —
             # never the param-sized error buffers riding in ACEState.
-            budget = self.trainer.scheduler.budget_for(mean_bandwidth(telem))
+            budget = self.trainer.scheduler.budget_for(
+                self.strategy.budget_bandwidth(telem, self.clusters))
             ace = state["ace"]
             imp0 = jax.tree.map(lambda x: x[0], ace.importance)
             assign = _to_host_async(
@@ -155,9 +168,10 @@ class TrainLoop:
             imp0 = jax.tree.map(lambda x: x[0], ace.importance)
             imp = np.asarray(jax.device_get(acesync.scores_from(
                 imp0, ace.struct_feat[0], cfg))).tolist()
-        self._plan = self.strategy.make_plan(
-            self.trainer.scheduler, importance=imp, telemetry=telem,
-            omega=omega)
+        kw = dict(importance=imp, telemetry=telem, omega=omega)
+        if self._plan_takes_clusters:
+            kw["clusters"] = self.clusters
+        self._plan = self.strategy.make_plan(self.trainer.scheduler, **kw)
         return self._plan
 
     def _swap_plan(self, plan, launched) -> bool:

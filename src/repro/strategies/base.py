@@ -97,9 +97,23 @@ class SyncStrategy:
     def make_plan(self, scheduler: Scheduler, *,
                   importance: Optional[Sequence[float]] = None,
                   telemetry: Optional[Sequence[dict]] = None,
-                  omega: Optional[Sequence[float]] = None) -> SyncPlan:
-        """Turn (importance, telemetry, omega) into a compression plan."""
+                  omega: Optional[Sequence[float]] = None,
+                  clusters=None) -> SyncPlan:
+        """Turn (importance, telemetry, omega) into a compression plan.
+        ``clusters`` is the loop's live :class:`~repro.hierarchy.ClusterState`
+        (None outside a TrainLoop); the loop only forwards it to strategies
+        whose ``make_plan`` declares the keyword, so overrides without it
+        keep working."""
         return scheduler.full_plan(omega)
+
+    def budget_bandwidth(self, telemetry: Optional[Sequence[dict]] = None,
+                         clusters=None, default: float = 50.0) -> float:
+        """Bandwidth (Mbps) the byte budget is priced against.  The flat
+        strategies budget against the fleet mean; the hierarchical strategy
+        overrides this to the bottleneck cluster's mean (the cross-tier
+        ring is paced by its weakest pod).  ``clusters`` is the loop's
+        :class:`~repro.hierarchy.ClusterState`, when one is live."""
+        return mean_bandwidth(telemetry, default)
 
     def device_plan_fn(self, scheduler: Scheduler, cfg: ACESyncConfig):
         """Device-resident replan, if the strategy supports one: a jitted

@@ -91,6 +91,37 @@ class ACESync(_PeriodicStrategy):
 
 
 @register_strategy
+class ACESyncHier(ACESync):
+    """ACE-Sync on the two-tier topology (paper eq. 8 made live).
+
+    Identical control plane to :class:`ACESync` — importance + knapsack +
+    divergence-controlled H — but coordinated per cluster: the TrainLoop's
+    :class:`~repro.hierarchy.ClusterState` maps devices onto the
+    ``("pod","edge")`` fleet, omega arrives already slot-summed, and the
+    byte budget is priced against the *bottleneck* cluster's bandwidth
+    instead of the fleet mean, because the cross-tier ring moves at the
+    pace of its weakest pod.  The two-tier execution itself (cheap
+    intra-cluster aggregation feeding the compressed cross-tier ring) is
+    picked rung-by-rung in ``planexec.exec_grid`` whenever the mesh has an
+    "edge" axis, so this strategy also runs unchanged — as plain acesync —
+    on a flat mesh."""
+    name = "acesync_hier"
+
+    def budget_bandwidth(self, telemetry=None, clusters=None,
+                         default: float = 50.0) -> float:
+        if clusters is not None and getattr(clusters, "assignments", None):
+            return clusters.bottleneck_bandwidth(telemetry, default)
+        return mean_bandwidth(telemetry, default)
+
+    def make_plan(self, scheduler: Scheduler, *, importance=None,
+                  telemetry=None, omega=None, clusters=None) -> SyncPlan:
+        imp = (list(importance) if importance is not None
+               else [1.0] * len(scheduler.sizes))
+        bw = self.budget_bandwidth(telemetry, clusters)
+        return scheduler.plan(imp, bw, omega)
+
+
+@register_strategy
 class LocalSGD(SyncStrategy):
     """Periodic parameter averaging with a FIXED sync interval.
 
