@@ -197,6 +197,72 @@ def bench_strategy_loop(steps=12):
             f"loss={sess.losses[-1]:.3f};comm={sess.comm_bytes/1e6:.2f}MB")
 
 
+def _phase_breakdown(plan, mesh=None, iters=8):
+    """Per-phase wall time of ONE sync round of ``plan``, micro-probed as
+    separate jitted calls on the final plan's padded rung buffers:
+
+      * ``encode``  — EF + compress (the producer side the
+        backward-interleaved schedule hides behind the remaining grads);
+      * ``exchange`` — the packed one-shot pod collective (0 on a 1-pod
+        mesh: nothing crosses the DCN);
+      * ``decode``  — the receiver-side fold, one dequant+accumulate per
+        peer payload.
+
+    Returns {phase: us_per_sync}; the caller amortises by the plan's
+    sync interval.  SKIP rungs and empty buckets contribute nothing."""
+    from repro import compat
+    from repro.codecs.base import BLOCK, pack_payload
+    from repro.kernels import ops as kops
+    from jax.sharding import PartitionSpec as P
+
+    use_pallas = kops.default_use_pallas()
+    n_pods = int(mesh.shape["pod"]) if mesh is not None else 1
+    phases = {"encode": 0.0, "exchange": 0.0, "decode": 0.0}
+    r = np.random.RandomState(0)
+    for rung, nb in enumerate(plan.bucket_sig or ()):
+        lv = plan.levels[rung]
+        if not nb or lv.is_skip:
+            continue
+        codec = lv.codec
+        n = nb * BLOCK
+        flat = jnp.asarray(r.randn(n).astype(np.float32))
+        err = jnp.asarray(r.randn(n).astype(np.float32) * 0.1)
+
+        def enc(f, e, c=codec):
+            return c.ef_encode(f, e, gamma=0.9, use_pallas=use_pallas)
+        phases["encode"] += _time(jax.jit(enc), flat, err, iters=iters)
+
+        payload, _, _ = jax.jit(enc)(flat, err)
+
+        if codec.supports_ring:  # per-peer payload fold codecs
+            def dec(pl, c=codec, nb_=nb, n_=n):
+                acc = c.accum_init(nb_)
+                for _ in range(n_pods):
+                    acc = c.decode_accumulate(acc, pl,
+                                              jnp.float32(1.0 / 3),
+                                              use_pallas=use_pallas)
+                return c.accum_finalize(acc, n_, BLOCK)
+            phases["decode"] += _time(jax.jit(dec), payload, iters=iters)
+
+        if mesh is not None and n_pods > 1:
+            if codec.supports_ring:
+                wire, _ = pack_payload(payload)
+
+                def exch(w):
+                    return jax.lax.all_gather(w, "pod")
+            else:  # FULL: the exchange IS the bf16 psum, decode-free
+                wire = flat.astype(jnp.bfloat16)
+
+                def exch(w):
+                    return jax.lax.psum(w, "pod")
+            smapped = compat.shard_map(
+                exch, mesh, in_specs=P(), out_specs=P(),
+                manual_axes=set(mesh.axis_names))
+            phases["exchange"] += _time(jax.jit(smapped), wire,
+                                        iters=iters)
+    return phases
+
+
 def bench_steptime(out_path=None, steps=24, warmup=6, multipod=False,
                    fail_on_recompile=False):
     """Perf trajectory of the retrace-free replan path and the chunked
@@ -209,8 +275,13 @@ def bench_steptime(out_path=None, steps=24, warmup=6, multipod=False,
     as ``warm_compiles``), the padded-vs-analytic wire-byte overhead of
     the per-rung size classes, the chosen classes / chunk grid, and the
     bidirectional-vs-unidirectional forced-ring pair.  ``--multipod`` runs on the simulated (2, 2, 2)
-    pod mesh (8 virtual CPU devices — the mesh CI exercises with
-    ``REPRO_FORCE_INTERPRET=1``).  Written to
+    pod mesh (8 virtual CPU devices).  Run WITHOUT
+    ``REPRO_FORCE_INTERPRET`` — perf is measured on the production
+    dispatch path (pure-jnp oracle on CPU, compiled Pallas kernels on
+    accelerators); the forced Pallas INTERPRETER is a correctness
+    harness whose per-grid-step op expansion taxes exactly the codec
+    paths this bench compares (the kernel path's correctness is pinned
+    by the test suite, not timed here).  Written to
     benchmarks/results/BENCH_step_time.json and mirrored at the repo root
     (the trajectory CI uploads)."""
     import tempfile
@@ -226,10 +297,15 @@ def bench_steptime(out_path=None, steps=24, warmup=6, multipod=False,
         ("fullsync", "fullsync", 0, {}),
         ("acesync", "acesync", 6, {}),
         ("acesync", "acesync", 18, {}),
+        # the adaptive interval pinned to H=2 — twice the default sync
+        # cadence, the (harsher) workload earlier trajectory points used
+        ("acesync_h2", "acesync", 6, dict(sync_interval_init=2)),
         # the PR-3 exchange: one-shot all_gather per rung + whole-tree
-        # optimizer barrier — the baseline the ring/overlap path replaces
+        # optimizer barrier, no backward interleaving — the baseline the
+        # ring/overlap/segment-streaming path replaces
         ("acesync_oneshot_pr3", "acesync", 6,
-         dict(ring_chunks=-1, overlap_apply=False)),
+         dict(ring_chunks=-1, overlap_apply=False,
+              overlap_backward=False)),
     ]
     if multipod:
         # forced 2-chunk ring on every ring-capable rung: exercises the
@@ -247,7 +323,7 @@ def bench_steptime(out_path=None, steps=24, warmup=6, multipod=False,
     records = []
     for name, strategy, cadence, ace_kw in variants:
         ace = ACESyncConfig(replan_every=cadence if cadence else 10 ** 9,
-                            sync_interval_init=2, **ace_kw)
+                            **ace_kw)
         sess = TrainSession.from_config(
             "paper-350m", strategy=strategy, mesh=mesh, seq_len=64,
             batch=4, steps=200, warmup_steps=10, ckpt_every=0,
@@ -315,6 +391,15 @@ def bench_steptime(out_path=None, steps=24, warmup=6, multipod=False,
             "ring_chunks": list(plan.ring_chunks or ()),
             "final_loss": round(sess.losses[-1], 4),
         }
+        # per-phase sync wall time, amortised to us/step by the sync
+        # interval (fullsync syncs every step) — the breakdown behind
+        # the "encode hides behind backward" headline
+        si = max(1, int(getattr(plan, "sync_interval", 1) or 1))
+        ph = _phase_breakdown(plan, mesh=mesh)
+        rec["sync_interval"] = si
+        rec["phase_us_per_step"] = {k: round(v / si, 1)
+                                    for k, v in ph.items()}
+        rec["overlap_backward"] = ace.overlap_backward
         records.append(rec)
         row(f"steptime_{name}_replan{cadence}", dt / steps * 1e6,
             f"{rec['steps_per_sec']}steps_s;"

@@ -139,6 +139,9 @@ class Codec:
     #: (payload circulated + decode-accumulated per peer).  Codecs whose
     #: exchange is not a per-peer payload gather (FULL's psum, SKIP's
     #: nothing) have no decode to hide and stay on their one-shot path.
+    #: Doubles as the coalesced-wire capability: ``core/sync.py`` batches
+    #: the one-shot payloads of every ``supports_ring`` rung in a segment
+    #: into one ``all_gather`` (``ef_encode_wire`` + ``wire_decode_fold``).
     supports_ring: bool = True
     #: deterministic-mode strategy: False (default) means the codec's
     #: ``decode_accumulate`` with ``deterministic=True`` is ORDER-
@@ -159,6 +162,18 @@ class Codec:
     #: and FULL's psum already spans the whole fleet in one collective —
     #: all keep ``False`` (README: codec-author note).
     supports_hier: bool = False
+    #: whether ``ef_encode_gather`` fuses the rung's bucket gather into
+    #: the encode kernel (the backward-streaming one-shot path then feeds
+    #: the packed grad/error buffers + perm straight to
+    #: ``ef_sync_gather`` instead of materialising ``fb[perm]`` first).
+    #: CODEC-AUTHOR NOTE: ``ef_sync_gather`` reproduces the BASE
+    #: ``ef_sync`` (encode -> pod_exchange / own*omega_own) on gathered
+    #: rows — a codec that overrides ``ef_sync`` itself (FULL's psum,
+    #: SKIP's no-op) must either keep ``producer_fused = False`` (the
+    #: default: the gather is materialised and delegated to the codec's
+    #: own ``ef_sync``, always correct) or override ``ef_sync_gather``
+    #: too (README: "How encode hides behind backward").
+    producer_fused: bool = False
 
     # ---- accounting -----------------------------------------------------
     def payload_bytes(self, n: int, block: int = BLOCK) -> int:
@@ -210,6 +225,28 @@ class Codec:
         own = self.decode(payload, block).reshape(-1)[:n]
         return payload, own, ef - own
 
+    def ef_encode_gather(self, fb: jax.Array, eb: jax.Array,
+                         perm: jax.Array, *, gamma: float,
+                         block: int = BLOCK, use_pallas: bool = False
+                         ) -> Tuple[Dict[str, jax.Array], jax.Array,
+                                    jax.Array]:
+        """:meth:`ef_encode` of the rung bucket ``fb[perm]`` WITHOUT the
+        caller materialising the gather.
+
+        ``fb`` / ``eb``: the packed (NB+1, block) grad / error-feedback
+        buffers (zero row last, see core/sync.py); ``perm``: (S,) block
+        indices.  The default materialises the gather and delegates —
+        bit-identical to the flat path by construction.  Producer-fused
+        codecs (``producer_fused = True``) override it to read the rows
+        straight out of ``fb``/``eb`` inside the encode kernel
+        (repro/kernels ``*_gather``), so the encode's HBM traffic starts
+        the moment the backward writes the rows — nothing re-reads the
+        bucket in between.  Same per-row math either way: the two paths
+        are bit-identical (tests/test_kernels.py)."""
+        return self.ef_encode(fb[perm].reshape(-1),
+                              eb[perm].reshape(-1), gamma=gamma,
+                              block=block, use_pallas=use_pallas)
+
     # ---- pod aggregation ------------------------------------------------
     def pod_exchange(self, payload: Dict[str, jax.Array],
                      omega: jax.Array, *, n: int, block: int = BLOCK,
@@ -232,14 +269,47 @@ class Codec:
         """
         wire, meta = pack_payload(payload)
         gathered = jax.lax.all_gather(wire, axis)       # (P, payload_bytes)
-        n_peers = gathered.shape[0]
+        return self.wire_decode_fold(gathered, meta, omega, n=n,
+                                     block=block, use_pallas=use_pallas,
+                                     deterministic=deterministic,
+                                     fixed_bits=fixed_bits)
+
+    # ---- coalesced wire exchange ---------------------------------------
+    def ef_encode_wire(self, fb: jax.Array, eb: jax.Array,
+                       perm: jax.Array, *, gamma: float,
+                       block: int = BLOCK, use_pallas: bool = False
+                       ) -> Tuple[jax.Array, tuple, jax.Array]:
+        """Encode half of :meth:`ef_sync_gather`, stopped at the wire:
+        returns ``(wire, meta, new_e)`` with ``wire`` the packed uint8
+        payload buffer.  ``core/sync.py`` concatenates the wires of every
+        payload rung in a segment and issues ONE ``all_gather`` for all
+        of them — same bytes, same per-rung fold (the gathered slice of a
+        concatenation is bit-identical to gathering the piece alone), but
+        one DCN message per segment instead of one per rung.  Only
+        meaningful for payload-gather codecs (``supports_ring``); FULL's
+        psum and SKIP's no-op have no wire buffer to coalesce."""
+        payload, _own, new_e = self.ef_encode_gather(
+            fb, eb, perm, gamma=gamma, block=block, use_pallas=use_pallas)
+        wire, meta = pack_payload(payload)
+        return wire, meta, new_e
+
+    def wire_decode_fold(self, gathered: jax.Array, meta: tuple,
+                         omega: jax.Array, *, n: int, block: int = BLOCK,
+                         use_pallas: bool = False,
+                         deterministic: bool = False,
+                         fixed_bits: int = FIXED_POINT_BITS) -> jax.Array:
+        """Decode half of the one-shot exchange: fold the gathered
+        ``(P, payload_bytes)`` wire rows through the accumulation trio in
+        canonical pod order (paper eq. 8) -> dense (n,) f32.  The peer
+        fold runs one at a time so the dense transient stays at one
+        (nb, block) buffer (see :meth:`pod_exchange`)."""
         # canonical-fold codecs (top-k) are already order-deterministic
         # here — the gather order IS the canonical order, float math kept
         det = deterministic and not self.canonical_fold
         init_kw, fold_kw = self._det_kwargs(det, fixed_bits)
         nb = n_blocks(n, block)
         acc = self.accum_init(nb, block, **init_kw)
-        for p in range(n_peers):
+        for p in range(gathered.shape[0]):
             acc = self.decode_accumulate(
                 acc, unpack_payload(gathered[p], meta), omega[p],
                 block=block, use_pallas=use_pallas, **fold_kw)
@@ -494,6 +564,47 @@ class Codec:
         payload, own, new_e = self.ef_encode(flat, e_flat, gamma=gamma,
                                              block=block,
                                              use_pallas=use_pallas)
+        if n_pods > 1:
+            if deterministic is None:
+                deterministic = n_pods >= 3
+            agg = self.pod_exchange(payload, omega, n=n, block=block,
+                                    axis=axis, use_pallas=use_pallas,
+                                    deterministic=deterministic,
+                                    fixed_bits=fixed_bits)
+        else:
+            agg = own * omega_own
+        return agg, new_e
+
+    def ef_sync_gather(self, fb: jax.Array, eb: jax.Array,
+                       perm: jax.Array, omega: jax.Array,
+                       omega_own: jax.Array, *, gamma: float, n_pods: int,
+                       block: int = BLOCK, axis: str = POD_AXIS,
+                       use_pallas: bool = False,
+                       deterministic: Optional[bool] = None,
+                       fixed_bits: int = FIXED_POINT_BITS
+                       ) -> Tuple[jax.Array, jax.Array]:
+        """:meth:`ef_sync` of the rung bucket ``fb[perm]`` — the
+        backward-streaming one-shot entry point (core/sync.py hands the
+        packed buffers + perm here instead of gathering first).
+
+        For codecs that keep the base ``ef_sync`` (``producer_fused``),
+        this runs :meth:`ef_encode_gather` + the same exchange/fold, so
+        the gather fuses into the encode kernel and the collective's
+        operand cone reaches only this rung's rows — what lets XLA issue
+        the exchange while later backward segments still run
+        (tests/test_collectives.py pins the cone in HLO).  Codecs that
+        override ``ef_sync`` itself (FULL, SKIP) default to
+        materialise-and-delegate, which is always bit-identical."""
+        if not self.producer_fused:
+            return self.ef_sync(fb[perm].reshape(-1),
+                                eb[perm].reshape(-1), omega, omega_own,
+                                gamma=gamma, n_pods=n_pods, block=block,
+                                axis=axis, use_pallas=use_pallas,
+                                deterministic=deterministic,
+                                fixed_bits=fixed_bits)
+        n = perm.shape[0] * block
+        payload, own, new_e = self.ef_encode_gather(
+            fb, eb, perm, gamma=gamma, block=block, use_pallas=use_pallas)
         if n_pods > 1:
             if deterministic is None:
                 deterministic = n_pods >= 3

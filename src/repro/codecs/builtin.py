@@ -101,6 +101,7 @@ class Int8Codec(Codec):
     name = "int8"
     value_bits = 8
     supports_hier = True  # dense quantiser: tier-2 re-encode is faithful
+    producer_fused = True  # gather fuses into the encode kernel
 
     def payload_bytes(self, n: int, block: int = BLOCK) -> int:
         nb = n_blocks(n, block)
@@ -131,6 +132,18 @@ class Int8Codec(Codec):
         payload = {"q": q[:nb], "scale": s[:nb, 0]}
         return payload, ef - r, r
 
+    def ef_encode_gather(self, fb, eb, perm, *, gamma, block=BLOCK,
+                         use_pallas=False):
+        if not use_pallas or block != ops.LANES:
+            return super().ef_encode_gather(fb, eb, perm, gamma=gamma,
+                                            block=block,
+                                            use_pallas=use_pallas)
+        q, s, r = ops.gather_ef_int8(fb, eb, perm, gamma=gamma,
+                                     use_pallas=True)
+        # own (dead-code on the multi-pod path) re-derives ef lazily
+        own = (fb[perm] + gamma * eb[perm]).reshape(-1) - r
+        return {"q": q, "scale": s[:, 0]}, own, r
+
     def decode_accumulate(self, acc, payload, weight, *, block=BLOCK,
                           use_pallas=False, deterministic=False,
                           fixed_bits=FIXED_POINT_BITS):
@@ -155,6 +168,7 @@ class TopKCodec(Codec):
     name = "topk"
     value_bits = 8
     canonical_fold = True
+    producer_fused = True  # gather fuses into the selection kernel
 
     def __init__(self, ratio: float = 0.1):
         if not 0.0 < ratio < 1.0:
@@ -197,6 +211,20 @@ class TopKCodec(Codec):
         payload = self.encode(pad_to_blocks(sel, block))
         own = self.decode(payload, block).reshape(-1)[:n]
         return payload, own, (sel - own) + res
+
+    def ef_encode_gather(self, fb, eb, perm, *, gamma, block=BLOCK,
+                         use_pallas=False):
+        if not use_pallas or block != ops.LANES:
+            return super().ef_encode_gather(fb, eb, perm, gamma=gamma,
+                                            block=block,
+                                            use_pallas=use_pallas)
+        n = perm.shape[0] * block
+        k = self.block_k(block)
+        sel, res = ops.gather_ef_topk(fb, eb, perm, gamma=gamma, k=k,
+                                      use_pallas=True)
+        payload = self.encode(sel)          # sel is already (S, block)
+        own = self.decode(payload, block).reshape(-1)[:n]
+        return payload, own, (sel.reshape(-1) - own) + res
 
     def decode_accumulate(self, acc, payload, weight, *, block=BLOCK,
                           use_pallas=False, deterministic=False,
@@ -248,6 +276,7 @@ class Int4Codec(Codec):
     name = "int4"
     value_bits = 4
     supports_hier = True  # dense quantiser: tier-2 re-encode is faithful
+    producer_fused = True  # gather fuses into the encode kernel
 
     def payload_bytes(self, n: int, block: int = BLOCK) -> int:
         nb = n_blocks(n, block)
@@ -275,6 +304,17 @@ class Int4Codec(Codec):
         own = (flat + gamma * e_flat) - r  # dead-code on the multi-pod path
         return payload, own, r
 
+    def ef_encode_gather(self, fb, eb, perm, *, gamma, block=BLOCK,
+                         use_pallas=False):
+        if not use_pallas or block != ops.LANES:
+            return super().ef_encode_gather(fb, eb, perm, gamma=gamma,
+                                            block=block,
+                                            use_pallas=use_pallas)
+        p, s, r = ops.gather_ef_int4(fb, eb, perm, gamma=gamma,
+                                     use_pallas=True)
+        own = (fb[perm] + gamma * eb[perm]).reshape(-1) - r
+        return {"q": p, "scale": s[:, 0]}, own, r
+
     def decode_accumulate(self, acc, payload, weight, *, block=BLOCK,
                           use_pallas=False, deterministic=False,
                           fixed_bits=FIXED_POINT_BITS):
@@ -292,6 +332,7 @@ class SignCodec(Codec):
     """1-bit sign + per-block mean-|ef| scale, majority-vote aggregation."""
     name = "sign"
     value_bits = 1
+    producer_fused = True  # gather fuses into the encode kernel
 
     def payload_bytes(self, n: int, block: int = BLOCK) -> int:
         nb = n_blocks(n, block)
@@ -320,6 +361,18 @@ class SignCodec(Codec):
         nb = n_blocks(n, block)
         payload = {"q": pack_bits(sg[:nb] > 0), "scale": s[:nb, 0]}
         own = (flat + gamma * e_flat) - r  # dead-code on the multi-pod path
+        return payload, own, r
+
+    def ef_encode_gather(self, fb, eb, perm, *, gamma, block=BLOCK,
+                         use_pallas=False):
+        if not use_pallas or block != ops.LANES:
+            return super().ef_encode_gather(fb, eb, perm, gamma=gamma,
+                                            block=block,
+                                            use_pallas=use_pallas)
+        sg, s, r = ops.gather_ef_sign(fb, eb, perm, gamma=gamma,
+                                      use_pallas=True)
+        payload = {"q": pack_bits(sg > 0), "scale": s[:, 0]}
+        own = (fb[perm] + gamma * eb[perm]).reshape(-1) - r
         return payload, own, r
 
     # ---- ring pipeline: majority vote in the compressed domain ---------

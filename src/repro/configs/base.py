@@ -233,6 +233,18 @@ class ACESyncConfig:
     # rung's bucket as soon as that rung's exchange lands instead of
     # barriering on the whole tree (core/sync.py apply_fn path).
     overlap_apply: bool = True
+    # backward-interleaved sync: split the exchange into per-segment
+    # pieces whose packs depend only on that segment's leaves, so each
+    # piece's encode+collective issues as soon as the backward pass has
+    # produced that leaf range's gradients instead of barriering on the
+    # full grad tree (core/planexec.py segment schedule + core/sync.py
+    # streaming path).  Bit-identical to the barriered exchange — every
+    # codec is blockwise, so piece splitting never moves the numerics.
+    overlap_backward: bool = True
+    # number of backward segments: 0 = auto (planexec.auto_segments —
+    # 2 on multi-leaf models), 1 = barriered (the pre-segmentation
+    # exchange), K > 1 = force K segments.
+    backward_segments: int = 0
     # level ladder: (name, keep_ratio, value_bits) - SKIP transmits nothing.
     # Each rung resolves to a registered repro/codecs wire format by
     # semantics: dense 8/4/1-bit -> int8 / packed int4 / sign-majority-vote.

@@ -77,10 +77,11 @@ def sync_gradients(grads, state: ACEState, plan: Union[SyncPlan, ExecPlan],
     # --- per-group stats for the importance estimator ---
     mean_abs, var, nrm = S.grad_group_stats(grads)
     if S._pod_info(mesh) > 1:
+        # one fleet collective for all three (G,) stat vectors — stacked,
+        # a single pmean reduces each element exactly as three would
         axes = S.fleet_axes(mesh)
-        mean_abs = jax.lax.pmean(mean_abs, axes)
-        var = jax.lax.pmean(var, axes)
-        nrm = jax.lax.pmean(nrm, axes)
+        mean_abs, var, nrm = jax.lax.pmean(
+            jnp.stack([mean_abs, var, nrm]), axes)
     ist = imp.update_stats(state.importance, mean_abs, var, nrm)
     # online supervision: the observed (normalised) gradient-norm momentum is
     # the ground-truth importance signal for this window

@@ -430,6 +430,106 @@ def leaf_layout(sizes: Sequence[int], block: int = BLOCK) -> LeafLayout:
                       nbs=nbs, starts=tuple(starts), total_blocks=off)
 
 
+# ---------------------------------------------------------------------------
+# backward segmentation: the static per-rung layer -> segment schedule
+# ---------------------------------------------------------------------------
+
+
+def config_segments(cfg) -> int:
+    """Backward segment count a config asks for: 1 (barriered) unless
+    ``overlap_backward`` is on, else ``backward_segments`` (0 = defer to
+    :func:`auto_segments` once the layout is known).  The single source of
+    truth shared by the Trainer (lowering) and the Scheduler (plan
+    signatures) — they must agree or replans would mispredict the
+    compiled-step cache key."""
+    if not getattr(cfg, "overlap_backward", False):
+        return 1
+    return int(getattr(cfg, "backward_segments", 0))
+
+
+def auto_segments(layout: LeafLayout) -> int:
+    """Default backward segment count (``backward_segments = 0``): two
+    segments on any multi-leaf model.  Two is the sweet spot on the
+    roofline — the deep half's encode+collective issues while the shallow
+    half's backward still runs (most of the latency win of finer splits),
+    while per-piece class padding and collective launch overhead stay at
+    one extra piece per rung."""
+    return 2 if len(layout.sizes) > 1 else 1
+
+
+def segment_leaf_bounds(layout: LeafLayout, segments: int
+                        ) -> Tuple[int, ...]:
+    """Leaf-index boundaries splitting the layout into ``segments``
+    contiguous leaf ranges balanced by block count — the static backward
+    schedule.  Depends only on the layout (never the plan), so every
+    replan shares the same segmentation and the per-(segment, rung) piece
+    sizes stay a function of the bucket signature alone (retrace-free).
+
+    Returns ``segments + 1`` monotonically increasing bounds with
+    ``bounds[0] == 0`` and ``bounds[-1] == n_leaves`` (fewer when there
+    are not enough leaves to populate every segment).  Leaf order is tree
+    order: backward produces the DEEP (late) leaves' gradients first, so
+    the streaming path walks segments in reverse."""
+    n = len(layout.sizes)
+    segments = max(1, min(int(segments), max(n, 1)))
+    if segments <= 1 or n <= 1:
+        return (0, n)
+    total = max(layout.total_blocks, 1)
+    bounds = [0]
+    cum = 0
+    for i, nb in enumerate(layout.nbs):
+        cum += nb
+        # cut after leaf i once this segment holds its block-count share
+        if (len(bounds) < segments
+                and cum * segments >= len(bounds) * total
+                and i + 1 < n):
+            bounds.append(i + 1)
+    bounds.append(n)
+    return tuple(bounds)
+
+
+def seg_grids(level_idx: Sequence[int], layout: LeafLayout,
+              levels: Sequence[Level], n_pods: int,
+              growth: Optional[float], ring: Optional[int], bidir: bool,
+              n_edge: int = 1, hier: Optional[int] = None,
+              segments: int = 0):
+    """The static per-(segment, rung) executed grids of a backward-
+    segmented plan: ``(bounds, seg_nb, seg_sig, seg_chunks, seg_hier)``.
+
+    ``bounds`` of length 2 means the plan stays flat (single segment).
+    Each segment's grid is :func:`exec_grid` over its own leaf range, so
+    every piece is class-padded / chunk-gridded exactly like a flat rung
+    and small replan jitter lands in class.  NOTE the per-segment grids
+    depend on which rung each leaf is assigned to — the segmented
+    signature (``seg_sig``), not the flat ``sig``, is the compiled-step
+    identity of a segmented plan, and a replan that moves leaves across a
+    segment boundary is a NEW signature (handled by the background
+    warm-compile path, never a foreground retrace).  Shared by
+    :func:`build_exec_plan` and ``Scheduler._finalize`` so the plan the
+    scheduler prices and the plan the trainer lowers agree."""
+    if segments == 0:
+        segments = auto_segments(layout)
+    bounds = segment_leaf_bounds(layout, segments)
+    if len(bounds) <= 2:
+        return bounds, (), (), (), ()
+    nbs, starts = layout.nbs, layout.starts
+    seg_nb, seg_sig, seg_chunks, seg_hier = [], [], [], []
+    for s in range(len(bounds) - 1):
+        lo, hi = bounds[s], bounds[s + 1]
+        base = starts[lo]
+        end = starts[hi - 1] + nbs[hi - 1] if hi > lo else base
+        seg_nb.append(end - base)
+        ssig, sch, shg = exec_grid(
+            tuple(level_idx[lo:hi]), layout.sizes[lo:hi], levels,
+            n_pods, layout.block, growth, ring, bidir, n_edge=n_edge,
+            hier=hier)
+        seg_sig.append(ssig)
+        seg_chunks.append(sch)
+        seg_hier.append(shg)
+    return (bounds, tuple(seg_nb), tuple(seg_sig), tuple(seg_chunks),
+            tuple(seg_hier))
+
+
 @dataclass(frozen=True)
 class ExecPlan:
     """A SyncPlan lowered to device data + a static bucket signature.
@@ -441,20 +541,44 @@ class ExecPlan:
     is the static per-rung chunk grid of the ring exchange (0 = one-shot;
     see :func:`ring_chunk_count`); ``bidir`` selects the bidirectional
     half-ring circulation for ringing rungs (static: it changes the
-    lowered ppermute pattern)."""
+    lowered ppermute pattern).
+
+    Backward-segmented plans (``build_exec_plan(segments > 1)``)
+    additionally carry the static segment schedule: ``seg_leaves`` are
+    the leaf-index bounds (:func:`segment_leaf_bounds`), ``seg_nb`` the
+    per-segment block counts of the local layout, and ``seg_sig`` /
+    ``seg_chunks`` / ``seg_hier`` the per-(segment, rung) executed grids
+    — each piece class-padded exactly like a flat rung, so replan jitter
+    still lands in class.  ``perms`` then nests per segment (leaf order;
+    the streaming path walks them in reverse), each segment's perm
+    indices LOCAL to its own (seg_nb + 1, block) buffer — the point of
+    the whole scheme: a segment's gather depends only on that segment's
+    leaves, so its encode+collective carries no data dependence on the
+    rest of the backward pass."""
     levels: Tuple[Level, ...]
     sig: Tuple[int, ...]              # padded block count per rung
     block: int
     total_blocks: int
-    perms: Tuple[jax.Array, ...]      # int32[S_r] per rung with sig[r] > 0
+    perms: tuple                      # int32[S_r] per rung with sig[r] > 0
     omega: jax.Array                  # f32[n_fleet] aggregation weights
     chunks: Tuple[int, ...] = ()      # ring chunk count per rung
     bidir: bool = True                # both DCN directions at once
     hier: Tuple[int, ...] = ()        # per-rung tier grid (0/1/2)
+    seg_leaves: Tuple[int, ...] = ()  # leaf-index bounds (segmented only)
+    seg_nb: Tuple[int, ...] = ()      # blocks per segment (local layout)
+    seg_sig: Tuple[Tuple[int, ...], ...] = ()
+    seg_chunks: Tuple[Tuple[int, ...], ...] = ()
+    seg_hier: Tuple[Tuple[int, ...], ...] = ()
+
+    @property
+    def segmented(self) -> bool:
+        return len(self.seg_sig) > 1
 
     def static_key(self) -> tuple:
         return (self.levels, self.sig, self.chunks, self.bidir,
-                self.hier, self.block, self.total_blocks)
+                self.hier, self.block, self.total_blocks,
+                self.seg_leaves, self.seg_nb, self.seg_sig,
+                self.seg_chunks, self.seg_hier)
 
     def with_omega(self, omega) -> "ExecPlan":
         return replace(self, omega=jnp.asarray(omega, jnp.float32))
@@ -464,12 +588,41 @@ jax.tree_util.register_pytree_node(
     ExecPlan,
     lambda ep: ((ep.perms, ep.omega),
                 (ep.levels, ep.sig, ep.block, ep.total_blocks, ep.chunks,
-                 ep.bidir, ep.hier)),
+                 ep.bidir, ep.hier, ep.seg_leaves, ep.seg_nb, ep.seg_sig,
+                 ep.seg_chunks, ep.seg_hier)),
     lambda aux, ch: ExecPlan(levels=aux[0], sig=aux[1], block=aux[2],
                              total_blocks=aux[3], chunks=aux[4],
-                             bidir=aux[5], hier=aux[6], perms=tuple(ch[0]),
-                             omega=ch[1]),
+                             bidir=aux[5], hier=aux[6], seg_leaves=aux[7],
+                             seg_nb=aux[8], seg_sig=aux[9],
+                             seg_chunks=aux[10], seg_hier=aux[11],
+                             perms=tuple(ch[0]), omega=ch[1]),
 )
+
+
+def _rung_perms(level_idx, nbs, starts, sig, base: int, pad: int,
+                lo: int, hi: int, L: int) -> Tuple[jax.Array, ...]:
+    """Gather perms for leaves [lo, hi): one int32[sig[r]] per rung with a
+    non-empty bucket, indices relative to ``base`` (the range's first
+    block), pad entries pointing at the zero row ``pad``."""
+    member = [[] for _ in range(L)]
+    for i in range(lo, hi):
+        if nbs[i]:
+            member[level_idx[i]].append(
+                np.arange(starts[i] - base, starts[i] - base + nbs[i],
+                          dtype=np.int32))
+    perms = []
+    for r in range(L):
+        S = sig[r]
+        if not S:
+            continue
+        idx = (np.concatenate(member[r]) if member[r]
+               else np.zeros((0,), np.int32))
+        # pad entries gather the zero block at index ``pad`` and scatter
+        # back into it — they never touch real data
+        p = np.full((S,), pad, np.int32)
+        p[: idx.shape[0]] = idx
+        perms.append(jnp.asarray(p))
+    return tuple(perms)
 
 
 def build_exec_plan(plan, sizes: Optional[Sequence[int]] = None, *,
@@ -477,7 +630,8 @@ def build_exec_plan(plan, sizes: Optional[Sequence[int]] = None, *,
                     omega=None, n_pods: int = 1,
                     ring: Optional[int] = None, bidir: bool = True,
                     n_edge: int = 1, hier: Optional[int] = None,
-                    layout: Optional[LeafLayout] = None) -> ExecPlan:
+                    layout: Optional[LeafLayout] = None,
+                    segments: int = 1) -> ExecPlan:
     """Lower a :class:`SyncPlan` to an :class:`ExecPlan`.
 
     ``sizes`` are the per-group element counts of the layout the exchange
@@ -490,6 +644,17 @@ def build_exec_plan(plan, sizes: Optional[Sequence[int]] = None, *,
     build never rings).  The perms are numpy-built (O(total_blocks),
     trivial next to a train step) and uploaded once per distinct
     assignment.
+
+    ``segments > 1`` builds the backward-interleaved plan: leaves split
+    into contiguous ranges (:func:`segment_leaf_bounds`), each range
+    packing its OWN block buffer with segment-local perms, so a
+    segment's encode+exchange depends only on that range's gradients and
+    issues while the rest of the backward still runs (``core/sync.py``
+    streaming path).  Every per-(segment, rung) piece is class-padded and
+    chunk/tier-gridded exactly like a flat rung (:func:`exec_grid` per
+    segment), so the schedule stays a function of the bucket signature
+    only — retrace-free across replans.  Blockwise codec math makes the
+    piece split numerics-neutral: segmented == barriered bit-identical.
     """
     if layout is None:
         if sizes is None:
@@ -507,25 +672,48 @@ def build_exec_plan(plan, sizes: Optional[Sequence[int]] = None, *,
     sig, chunks, hgrid = exec_grid(level_idx, layout.sizes, plan.levels,
                                    n_pods, block, growth, ring, bidir,
                                    n_edge=n_edge, hier=hier)
-    member = [[] for _ in range(L)]
-    for i, li in enumerate(level_idx):
-        if nbs[i]:
-            member[li].append(np.arange(starts[i], starts[i] + nbs[i],
-                                        dtype=np.int32))
-    perms = []
-    for r in range(L):
-        S = sig[r]
-        if not S:
-            continue
-        idx = (np.concatenate(member[r]) if member[r]
-               else np.zeros((0,), np.int32))
-        # pad entries gather the zero block at index NB and scatter back
-        # into it — they never touch real data
-        p = np.full((S,), NB, np.int32)
-        p[: idx.shape[0]] = idx
-        perms.append(jnp.asarray(p))
     om = plan.omega if omega is None else omega
-    return ExecPlan(levels=tuple(plan.levels), sig=sig, block=block,
-                    total_blocks=NB, perms=tuple(perms), chunks=chunks,
-                    bidir=bidir, hier=hgrid,
-                    omega=jnp.asarray(om, jnp.float32))
+    kw = dict(levels=tuple(plan.levels), sig=sig, block=block,
+              total_blocks=NB, chunks=chunks, bidir=bidir, hier=hgrid,
+              omega=jnp.asarray(om, jnp.float32))
+    bounds, seg_nb, seg_sig, seg_chunks, seg_hier = seg_grids(
+        level_idx, layout, plan.levels, n_pods, growth, ring, bidir,
+        n_edge=n_edge, hier=hier, segments=segments)
+    if len(bounds) > 2:
+        seg_perms = []
+        for s in range(len(bounds) - 1):
+            lo, hi = bounds[s], bounds[s + 1]
+            base = starts[lo]
+            seg_perms.append(_rung_perms(level_idx, nbs, starts,
+                                         seg_sig[s], base, seg_nb[s],
+                                         lo, hi, L))
+        return ExecPlan(perms=tuple(seg_perms), seg_leaves=bounds,
+                        seg_nb=seg_nb, seg_sig=seg_sig,
+                        seg_chunks=seg_chunks, seg_hier=seg_hier, **kw)
+    return ExecPlan(perms=_rung_perms(level_idx, nbs, starts, sig, 0, NB,
+                                      0, len(level_idx), L), **kw)
+
+
+def exec_wire_bytes(ep: ExecPlan, n_pods: int,
+                    n_cross: Optional[int] = None) -> int:
+    """Analytic per-device slow-tier wire bytes of the exchange ``ep``
+    actually executes — per-(segment, rung) pieces for segmented plans,
+    the flat rung grid otherwise.  This is what the traced collectives
+    move, piece class padding included (the segmented counterpart of
+    :func:`sig_wire_bytes` over ``SyncPlan.bucket_sig``)."""
+    if ep.segmented:
+        return sum(sig_wire_bytes(s, ep.levels, n_pods, ep.block, hier=h,
+                                  n_cross=n_cross)
+                   for s, h in zip(ep.seg_sig, ep.seg_hier))
+    return sig_wire_bytes(ep.sig, ep.levels, n_pods, ep.block,
+                          hier=ep.hier, n_cross=n_cross)
+
+
+def exec_intra_bytes(ep: ExecPlan, n_edge: int) -> int:
+    """Fast-tier counterpart of :func:`exec_wire_bytes` (zero for flat
+    fleets)."""
+    if ep.segmented:
+        return sum(sig_intra_bytes(s, ep.levels, n_edge, ep.block, hier=h)
+                   for s, h in zip(ep.seg_sig, ep.seg_hier))
+    return sig_intra_bytes(ep.sig, ep.levels, n_edge, ep.block,
+                           hier=ep.hier)

@@ -80,6 +80,11 @@ class SyncPlan:
     adaptive: bool = False
     ring_chunks: Optional[Tuple[int, ...]] = None  # per-rung chunk grid
     hier: Optional[Tuple[int, ...]] = None         # per-rung tier grid
+    # per-(segment, rung) signature of a backward-segmented plan — the
+    # compiled-step identity when ``overlap_backward`` streams the
+    # exchange (None/() for flat plans).  Two plans sharing bucket_sig
+    # but not seg_sig still lower to DIFFERENT compiled steps.
+    seg_sig: Optional[Tuple[Tuple[int, ...], ...]] = None
 
     def signature(self) -> tuple:
         """Hashable key of the full assignment (legacy; the compiled step
@@ -128,6 +133,7 @@ class Scheduler:
                 else self.acct_pods for lv in self.levels]
         else:
             self.level_acct = [self.acct_pods] * len(self.levels)
+        self._layout = planexec.leaf_layout(self.sizes, cfg.topk_block)
         self._device_solver = None
 
     @property
@@ -155,6 +161,20 @@ class Scheduler:
         plan.ring_chunks = chunks
         plan.hier = hier
         plan.bucket_block = self.cfg.topk_block
+        segments = planexec.config_segments(self.cfg)
+        if segments != 1:
+            # backward-segmented lowering: attach the per-(segment, rung)
+            # signature — the identity the trainer's compiled-step cache
+            # actually keys on (see planexec.seg_grids)
+            _, _, seg_sig, _, _ = planexec.seg_grids(
+                plan.level_idx, self._layout, plan.levels, self.n_pods,
+                self.pad_growth if adaptive else None,
+                planexec.ring_override(self.cfg.ring_chunks),
+                self.cfg.ring_bidir, n_edge=self.n_edge,
+                hier=planexec.hier_override(
+                    getattr(self.cfg, "hier_mode", 0)),
+                segments=segments)
+            plan.seg_sig = seg_sig or None
         return plan
 
     @property

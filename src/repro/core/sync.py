@@ -202,39 +202,151 @@ def _leaf_blocks(leaves, block: int) -> jax.Array:
     return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
 
 
-def _rung_exchange(codec, bucket, ebucket, omega, omega_own, *, chunks,
+def _rung_exchange(codec, fb, eb, perm, omega, omega_own, *, chunks,
                    bidir, gamma, n_pods, block, use_pallas, fixed_bits,
                    hier=0, n_cross=1, n_edge=1, omega_intra=None):
-    """One rung's EF + compress + exchange round: the two-tier path when
-    the plan's tier grid says so (``hier > 0`` — intra-cluster
+    """One rung's gather + EF + compress + exchange round: the two-tier
+    path when the plan's tier grid says so (``hier > 0`` — intra-cluster
     aggregation over the fast edge axis feeding one payload per cluster
     over the pod axis, ``Codec.ef_sync_hier``), the chunked ring
     pipeline when the chunk grid says so (``chunks > 0``; see
-    ``planexec.ring_chunk_count``), the one-shot ``all_gather`` path
-    otherwise.  Flat rungs on a hierarchical fleet gather over the
-    combined ``(pod, edge)`` tuple axis — gathered pod-major, matching
-    the fleet indexing of ``omega``.  All paths accumulate
-    deterministically (fixed-point / integer / canonical-order — the
-    codec's choice) whenever >= 3 peers exchange, so per-device
-    aggregates are bit-identical on any mesh and ring <-> one-shot <->
-    two-tier replans never move the numerics."""
+    ``planexec.ring_chunk_count``), the one-shot path otherwise.
+
+    The rung bucket is ``fb[perm]`` of the packed (NB+1, block)
+    grad/error buffers.  The one-shot path hands the buffers + perm to
+    ``Codec.ef_sync_gather``, so producer-fused codecs run the gather
+    INSIDE the encode kernel — the encode reads each row straight out of
+    the buffer the backward wrote, nothing rematerialises the bucket in
+    between (the segment-streaming win: the collective's operand cone is
+    exactly this range's rows).  The ring and two-tier paths chunk /
+    re-encode whole-bucket payloads, so they materialise the gather up
+    front as before.  All paths accumulate deterministically
+    (fixed-point / integer / canonical-order — the codec's choice)
+    whenever >= 3 peers exchange, so per-device aggregates are
+    bit-identical on any mesh and ring <-> one-shot <-> two-tier replans
+    never move the numerics."""
     if hier and n_edge > 1:
         return codec.ef_sync_hier(
-            bucket, ebucket, omega_intra, omega_own, gamma=gamma,
-            n_cross=n_cross, n_edge=n_edge, intra_mode=hier,
-            n_chunks=chunks, block=block, cross_axis=POD_AXIS,
-            intra_axis=EDGE_AXIS, use_pallas=use_pallas, bidir=bidir,
-            fixed_bits=fixed_bits)
+            fb[perm].reshape(-1), eb[perm].reshape(-1), omega_intra,
+            omega_own, gamma=gamma, n_cross=n_cross, n_edge=n_edge,
+            intra_mode=hier, n_chunks=chunks, block=block,
+            cross_axis=POD_AXIS, intra_axis=EDGE_AXIS,
+            use_pallas=use_pallas, bidir=bidir, fixed_bits=fixed_bits)
     axis = (POD_AXIS, EDGE_AXIS) if n_edge > 1 else POD_AXIS
     if chunks and n_pods > 1:
         return codec.ef_sync_ring(
-            bucket, ebucket, omega, omega_own, gamma=gamma,
-            n_pods=n_pods, n_chunks=chunks, block=block, axis=axis,
-            use_pallas=use_pallas, bidir=bidir, fixed_bits=fixed_bits)
-    return codec.ef_sync(
-        bucket, ebucket, omega, omega_own, gamma=gamma, n_pods=n_pods,
+            fb[perm].reshape(-1), eb[perm].reshape(-1), omega, omega_own,
+            gamma=gamma, n_pods=n_pods, n_chunks=chunks, block=block,
+            axis=axis, use_pallas=use_pallas, bidir=bidir,
+            fixed_bits=fixed_bits)
+    return codec.ef_sync_gather(
+        fb, eb, perm, omega, omega_own, gamma=gamma, n_pods=n_pods,
         block=block, axis=axis, use_pallas=use_pallas,
         fixed_bits=fixed_bits)
+
+
+def _range_sync(gs, es, aux, perms, sig, chunks, hgrid, NB, *, levels,
+                block, omega, omega_own, omega_intra, scalars, bidir,
+                gamma, n_pods, n_cross, n_edge, use_pallas, fixed_bits,
+                apply_fn):
+    """One leaf range's pack + per-rung exchange + scatter + unpack.
+
+    The whole tree is one range on the barriered path; the backward-
+    streaming path calls this once per segment — crucially the packed
+    buffers here are built ONLY from this range's leaves, so the rung
+    collectives below carry no data dependence on any other segment's
+    gradients and XLA's scheduler issues them while the rest of the
+    backward still runs.  Returns ``(aggs | aux_outs, errs)`` as leaf
+    tuples for the range."""
+    fb = _leaf_blocks(gs, block)
+    eb = _leaf_blocks(es, block)
+    assert fb.shape[0] == NB, \
+        f"leaf layout has {fb.shape[0]} blocks, plan was built for {NB}"
+    zrow = jnp.zeros((1, block), jnp.float32)
+    fb = jnp.concatenate([fb, zrow])
+    eb = jnp.concatenate([eb, zrow])
+    abufs = [jnp.concatenate([_leaf_blocks(a, block), zrow]) for a in aux]
+    agg = None if apply_fn is not None \
+        else jnp.zeros((NB + 1, block), jnp.float32)
+    err = jnp.zeros((NB + 1, block), jnp.float32)
+    # Encode pass: every payload-gather rung (one-shot multi-pod path)
+    # stops at its packed uint8 wire buffer; the wires are concatenated
+    # into ONE all_gather per range instead of one per rung — same bytes,
+    # same per-rung fold (slicing a gathered concatenation is
+    # bit-identical to gathering the piece), but the sync round's
+    # collective latency stops scaling with the rung count, on the CPU
+    # sim and the DCN alike.  Ring / two-tier / single-pod rungs keep
+    # their own exchange paths.
+    axis = (POD_AXIS, EDGE_AXIS) if n_edge > 1 else POD_AXIS
+    staged, wire_parts, woff = [], [], 0
+    pi = 0
+    for r, S in enumerate(sig):
+        if not S:
+            continue
+        perm = perms[pi]
+        pi += 1
+        codec = levels[r].codec
+        chunks_r = chunks[r] if chunks else 0
+        hier_r = hgrid[r] if hgrid else 0
+        if (n_pods > 1 and codec.supports_ring
+                and not (hier_r and n_edge > 1)
+                and not (chunks_r and n_pods > 1)):
+            wire, meta, new_e = codec.ef_encode_wire(
+                fb, eb, perm, gamma=gamma, block=block,
+                use_pallas=use_pallas)
+            staged.append((S, perm, codec, (meta, woff, wire.shape[0],
+                                            new_e)))
+            wire_parts.append(wire)
+            woff += wire.shape[0]
+        else:
+            b_out = _rung_exchange(
+                codec, fb, eb, perm, omega,
+                omega_own, chunks=chunks_r,
+                bidir=bidir, gamma=gamma, n_pods=n_pods, block=block,
+                use_pallas=use_pallas, fixed_bits=fixed_bits,
+                hier=hier_r, n_cross=n_cross,
+                n_edge=n_edge, omega_intra=omega_intra)
+            staged.append((S, perm, None, b_out))
+    gathered = None
+    if wire_parts:
+        coal = wire_parts[0] if len(wire_parts) == 1 \
+            else jnp.concatenate(wire_parts)
+        gathered = jax.lax.all_gather(coal, axis)
+    # Decode + scatter pass, in rung order (the perms are disjoint).
+    for S, perm, codec, payload in staged:
+        if codec is None:
+            b_agg, b_err = payload
+        else:
+            meta, o, nbytes, b_err = payload
+            b_agg = codec.wire_decode_fold(
+                gathered[:, o:o + nbytes], meta, omega, n=S * block,
+                block=block, use_pallas=use_pallas,
+                deterministic=n_pods >= 3, fixed_bits=fixed_bits)
+        err = err.at[perm].set(b_err.reshape(S, block))
+        if apply_fn is None:
+            agg = agg.at[perm].set(b_agg.reshape(S, block))
+        else:
+            rows = apply_fn(b_agg.reshape(S, block),
+                            tuple(ab[perm] for ab in abufs), scalars)
+            abufs = [ab.at[perm].set(nr)
+                     for ab, nr in zip(abufs, rows)]
+
+    def unpack(flat_buf, like):
+        outs, boff = [], 0
+        for leaf in like:
+            n = math.prod(leaf.shape)
+            o = boff * block
+            outs.append(flat_buf[o:o + n].reshape(leaf.shape)
+                        .astype(leaf.dtype))
+            boff += n_blocks(n, block)
+        return tuple(outs)
+
+    errs = unpack(err[:NB].reshape(-1), es)
+    if apply_fn is None:
+        return unpack(agg[:NB].reshape(-1), gs), errs
+    outs = tuple(unpack(ab[:NB].reshape(-1), a)
+                 for ab, a in zip(abufs, aux))
+    return outs, errs
 
 
 def _repack_sync_local(gs, es, perms, omega, omega_own, omega_intra, aux,
@@ -259,60 +371,44 @@ def _repack_sync_local(gs, es, perms, omega, omega_own, omega_intra, aux,
     rung r+1's collective, so XLA overlaps the apply with the next rung's
     DCN transfer instead of barriering on the whole tree.  Returns
     ``(aux_out_tuples, errs)`` instead of ``(aggs, errs)``.
-    """
-    block = ep.block
-    fb = _leaf_blocks(gs, block)
-    eb = _leaf_blocks(es, block)
-    NB = ep.total_blocks
-    assert fb.shape[0] == NB, \
-        f"leaf layout has {fb.shape[0]} blocks, plan was built for {NB}"
-    zrow = jnp.zeros((1, block), jnp.float32)
-    fb = jnp.concatenate([fb, zrow])
-    eb = jnp.concatenate([eb, zrow])
-    abufs = [jnp.concatenate([_leaf_blocks(a, block), zrow]) for a in aux]
-    agg = None if apply_fn is not None \
-        else jnp.zeros((NB + 1, block), jnp.float32)
-    err = jnp.zeros((NB + 1, block), jnp.float32)
-    pi = 0
-    for r, S in enumerate(ep.sig):
-        if not S:
-            continue
-        perm = perms[pi]
-        pi += 1
-        codec = ep.levels[r].codec
-        b_agg, b_err = _rung_exchange(
-            codec, fb[perm].reshape(-1), eb[perm].reshape(-1), omega,
-            omega_own, chunks=ep.chunks[r] if ep.chunks else 0,
-            bidir=ep.bidir, gamma=gamma, n_pods=n_pods, block=block,
-            use_pallas=use_pallas, fixed_bits=fixed_bits,
-            hier=ep.hier[r] if ep.hier else 0, n_cross=n_cross,
-            n_edge=n_edge, omega_intra=omega_intra)
-        err = err.at[perm].set(b_err.reshape(S, block))
-        if apply_fn is None:
-            agg = agg.at[perm].set(b_agg.reshape(S, block))
-        else:
-            rows = apply_fn(b_agg.reshape(S, block),
-                            tuple(ab[perm] for ab in abufs), scalars)
-            abufs = [ab.at[perm].set(nr)
-                     for ab, nr in zip(abufs, rows)]
-    err = err[:NB].reshape(-1)
 
-    def unpack(flat_buf, like):
-        outs, boff = [], 0
-        for leaf in like:
-            n = math.prod(leaf.shape)
-            o = boff * block
-            outs.append(flat_buf[o:o + n].reshape(leaf.shape)
-                        .astype(leaf.dtype))
-            boff += n_blocks(n, block)
-        return tuple(outs)
-
-    errs = unpack(err, es)
+    Backward-interleaved streaming: a segmented plan
+    (``ep.segmented`` — see ``planexec.build_exec_plan(segments > 1)``)
+    runs one :func:`_range_sync` per leaf segment, walked in REVERSE leaf
+    order (backward produces the deep leaves' gradients first).  Each
+    segment packs its OWN buffers from only its leaves, so a segment's
+    encode+collective is issued by XLA's scheduler as soon as that leaf
+    range's gradients materialise in the backward pass — the exchange of
+    the deep half hides behind the backward (and the apply) of the
+    shallow half.  Blockwise codec math makes the piece split exact:
+    segmented == barriered bit-identical (tests/test_multipod.py soaks
+    this on the P = 2 and P = 3 meshes)."""
+    kw = dict(levels=ep.levels, block=ep.block, omega=omega,
+              omega_own=omega_own, omega_intra=omega_intra,
+              scalars=scalars, bidir=ep.bidir, gamma=gamma,
+              n_pods=n_pods, n_cross=n_cross, n_edge=n_edge,
+              use_pallas=use_pallas, fixed_bits=fixed_bits,
+              apply_fn=apply_fn)
+    if not ep.segmented:
+        return _range_sync(gs, es, aux, perms, ep.sig, ep.chunks,
+                           ep.hier, ep.total_blocks, **kw)
+    S = len(ep.seg_sig)
+    outs: list = [None] * S
+    errs: list = [None] * S
+    for s in reversed(range(S)):
+        lo, hi = ep.seg_leaves[s], ep.seg_leaves[s + 1]
+        outs[s], errs[s] = _range_sync(
+            gs[lo:hi], es[lo:hi], tuple(a[lo:hi] for a in aux),
+            perms[s], ep.seg_sig[s], ep.seg_chunks[s], ep.seg_hier[s],
+            ep.seg_nb[s], **kw)
+    err_leaves = tuple(e for seg in errs for e in seg)
     if apply_fn is None:
-        return unpack(agg[:NB].reshape(-1), gs), errs
-    outs = tuple(unpack(ab[:NB].reshape(-1), a)
-                 for ab, a in zip(abufs, aux))
-    return outs, errs
+        return tuple(g for seg in outs for g in seg), err_leaves
+    # per-aux leaf tuples reassembled across segments, leaf order
+    n_aux = len(aux)
+    aux_outs = tuple(tuple(o for seg in outs for o in seg[a])
+                     for a in range(n_aux))
+    return aux_outs, err_leaves
 
 
 # ---------------------------------------------------------------------------
@@ -431,7 +527,9 @@ def sync_tree(tree, errors, plan: Union[SyncPlan, ExecPlan], *, mesh,
             aspecs.append(P(*[None if ax in (POD_AXIS, EDGE_AXIS) else ax
                               for ax in aspec]))
         aspecs = tuple(aspecs)
-        pspecs = tuple(P(None) for _ in ep.perms)
+        # mirror the perm structure (flat per-rung, or nested per-segment
+        # for backward-streaming plans): every perm rides replicated
+        pspecs = jax.tree.map(lambda _: P(None), ep.perms)
         aux_specs = tuple(aspecs for _ in aux)
         scalar_specs = tuple(P() for _ in scalars)
         out_main = (tuple(aspecs for _ in aux) if apply_fn is not None

@@ -222,7 +222,16 @@ class Trainer:
             return self.model.loss(p, batch)
 
         loss, grads = jax.value_and_grad(loss_fn)(params)
-        grads, gnorm = adamw.clip_by_global_norm(grads, run.grad_clip)
+        if run.grad_clip > 0:
+            grads, gnorm = adamw.clip_by_global_norm(grads, run.grad_clip)
+        else:
+            # grad_clip <= 0 disables clipping.  The global-norm scale
+            # couples every grad leaf to the whole backward pass, which
+            # serializes the backward-interleaved exchange: no segment's
+            # collective can issue before the last backward op.  The norm
+            # itself is still recorded (metrics only — outputs never gate
+            # the rung collectives).
+            gnorm = adamw.global_norm(grads)
         return loss, grads, gnorm
 
     def _optimize(self, params, grads, m, v, step):
@@ -373,6 +382,10 @@ class Trainer:
         if ep is None:
             cfg = self.run.acesync
             growth = self.scheduler.pad_growth if plan.adaptive else None
+            # backward-interleaved streaming: segment the exchange so each
+            # piece's encode+collective issues as soon as its leaf range's
+            # grads materialise in backward (0 = planexec.auto_segments)
+            segments = planexec.config_segments(cfg)
             ep = build_exec_plan(plan, layout=self.leaf_layout,
                                  growth=growth, n_pods=self.n_pods,
                                  ring=planexec.ring_override(
@@ -380,7 +393,8 @@ class Trainer:
                                  bidir=cfg.ring_bidir,
                                  n_edge=self.n_edge,
                                  hier=planexec.hier_override(
-                                     getattr(cfg, "hier_mode", 0)))
+                                     getattr(cfg, "hier_mode", 0)),
+                                 segments=segments)
             # bounded: adaptive runs see a fresh assignment nearly every
             # replan, and each entry holds O(total_blocks) device perms —
             # evict oldest-first, rebuilding is a cheap numpy pass.  The

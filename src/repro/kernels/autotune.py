@@ -1,0 +1,141 @@
+"""Disk-cached block-size autotuning for the fused gather+encode kernels.
+
+The gather kernels (``quantize_int8_gather`` / ``ef_int4_gather`` /
+``ef_sign_gather`` / ``ef_topk_gather``) tile the gathered bucket
+rows-per-grid-step.  The best tile height trades scalar-prefetch index-map
+gathers (``rows == 1``: Pallas pipelines one (1, LANES) row per step
+straight out of HBM) against in-kernel dynamic-slice gathers
+(``rows > 1``: fewer grid steps, more work per step) — which side wins
+depends on the codec's arithmetic intensity, the bucket's row count and
+the backend generation, so it is MEASURED once per
+``(codec, size-class, backend)`` and remembered:
+
+  * in-process: a plain dict memo (the sync path asks per rung per trace);
+  * across processes: a JSON file at ``$REPRO_AUTOTUNE_CACHE`` (default
+    ``~/.cache/repro/autotune.json``) keyed
+    ``codec|size-class|backend|jax-version``.  A backend or jax upgrade
+    changes the key, so stale tunings are simply never read again — no
+    explicit invalidation pass.  Buckets within 2x of each other share a
+    power-of-two size class (:func:`sig_class`), so a replan that grows a
+    rung re-uses the neighbouring tuning instead of re-benchmarking.
+
+Interpret mode (CPU backend, or ``REPRO_FORCE_INTERPRET=1``) ALWAYS
+returns :data:`DEFAULT_ROWS` and never reads or writes the cache file:
+interpreted timings are meaningless, and CI runs must stay
+byte-deterministic with no filesystem side effects
+(tests/test_kernels.py pins the no-write contract).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+
+#: deterministic fallback tile height (also the interpret-mode choice).
+DEFAULT_ROWS = 1
+#: tile heights the measurement sweeps (divisors of the kernel ROWS=8).
+ROW_CANDIDATES = (1, 2, 4, 8)
+CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+
+_MEM: dict = {}
+
+
+def cache_path() -> str:
+    """Where the cross-process tuning cache lives."""
+    p = os.environ.get(CACHE_ENV)
+    if p:
+        return p
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "autotune.json")
+
+
+def sig_class(n_rows: int) -> int:
+    """Power-of-two size class: buckets within 2x share one tuning."""
+    c = 1
+    while c < n_rows:
+        c *= 2
+    return c
+
+
+def _key(codec: str, n_rows: int, backend: str) -> str:
+    return f"{codec}|{sig_class(n_rows)}|{backend}|{jax.__version__}"
+
+
+def _load() -> dict:
+    try:
+        with open(cache_path()) as f:
+            d = json.load(f)
+        return d if isinstance(d, dict) else {}
+    except (OSError, ValueError):
+        return {}
+
+
+def _store(key: str, rows: int) -> None:
+    path = cache_path()
+    try:
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        disk = _load()
+        disk[key] = rows
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(disk, f, indent=0, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass  # the cache is best-effort; the tuning still holds in-process
+
+
+def clear_memo() -> None:
+    """Drop the in-process memo (tests)."""
+    _MEM.clear()
+
+
+def _measure(bench, n_rows: int) -> int:
+    best, best_t = DEFAULT_ROWS, None
+    for rows in ROW_CANDIDATES:
+        if rows > max(1, n_rows):
+            break
+        try:
+            t = bench(rows)
+        except Exception:
+            continue  # a candidate that fails to lower just loses
+        if best_t is None or t < best_t:
+            best, best_t = rows, t
+    return best
+
+
+def block_rows(codec: str, n_rows: int, bench=None) -> int:
+    """Rows-per-grid-step for ``codec``'s gather kernel on an
+    ``n_rows``-row bucket.
+
+    ``bench(rows) -> seconds`` wall-times one candidate on the live
+    backend (the caller builds it against representative shapes; see
+    ``repro.kernels.ops._gather_bench``).  ``bench=None`` resolves from
+    the caches only, falling back to :data:`DEFAULT_ROWS` — measured
+    results are only ever written to disk when a measurement actually
+    ran, so a cache-miss lookup never pollutes the file with defaults.
+    """
+    from repro.kernels import ops
+    if ops.interpret_mode():
+        return DEFAULT_ROWS
+    backend = jax.default_backend()
+    key = _key(codec, n_rows, backend)
+    rows = _MEM.get(key)
+    if rows is not None:
+        return rows
+    disk = _load().get(key)
+    if disk is not None:
+        try:
+            rows = int(disk)
+        except (TypeError, ValueError):
+            rows = None
+        if rows in ROW_CANDIDATES:
+            _MEM[key] = rows
+            return rows
+    rows = DEFAULT_ROWS if bench is None else _measure(bench, n_rows)
+    _MEM[key] = rows
+    if bench is not None:
+        _store(key, rows)
+    return rows

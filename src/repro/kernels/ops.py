@@ -27,8 +27,9 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
-from repro.kernels.topk_compress import ef_topk_select, LANES, ROWS
+from repro.kernels import autotune, ref
+from repro.kernels.topk_compress import (ef_topk_gather, ef_topk_select,
+                                         LANES, ROWS)
 from repro.kernels.decode import (dequant_accum_int4_fp_fused,
                                   dequant_accum_int4_fused,
                                   dequant_accum_int8_fp_fused,
@@ -37,8 +38,9 @@ from repro.kernels.decode import (dequant_accum_int4_fp_fused,
                                   sign_vote_accum_fused,
                                   topk_scatter_accum_fused)
 from repro.kernels.quantize import (quantize_int8_fused, dequantize_int8,
-                                    ef_int4_fused)
-from repro.kernels.sign import ef_sign_fused
+                                    ef_int4_fused, ef_int4_gather,
+                                    quantize_int8_gather)
+from repro.kernels.sign import ef_sign_fused, ef_sign_gather
 
 FORCE_INTERPRET_ENV = "REPRO_FORCE_INTERPRET"
 
@@ -240,3 +242,117 @@ def ef_sign(g_flat, e_flat, *, gamma: float, use_pallas: bool = True):
     else:
         sg, s, r = ref.ef_sign_ref(g2, e2, gamma=gamma)
     return sg, s, r.reshape(-1)[:n], n
+
+
+# ---------------------------------------------------------------------------
+# producer-fused gather + encode (the backward-streaming sync hot path)
+# ---------------------------------------------------------------------------
+# These read a rung's rows straight out of the packed (NB+1, LANES)
+# grad / error buffers through the plan's gather perm — the gathered
+# bucket never materialises between the backward pass and the encode.
+# The rows-per-grid-step tile height comes from the autotune cache
+# (repro/kernels/autotune.py), measured once per (codec, size-class,
+# backend); interpret mode always takes the deterministic default and
+# never touches the cache file.
+
+
+def _pad_perm(perm, rows: int, zero_idx: int):
+    """Pad the gather perm to a ``rows`` multiple with the zero-row
+    index (padded tail rows encode zeros and are sliced off)."""
+    S = perm.shape[0]
+    pad = (-S) % rows
+    if pad:
+        perm = jnp.concatenate(
+            [perm, jnp.full((pad,), zero_idx, perm.dtype)])
+    return perm, S
+
+
+def _gather_bench(kern, nbp1: int, S: int, **kw):
+    """Autotune measurement closure: wall-time ``kern`` at a candidate
+    tile height on representative synthetic shapes.  Runs EAGERLY on
+    the live backend (only ever invoked outside interpret mode — on
+    accelerators, where the compiled kernels are real)."""
+    import time
+
+    def bench(rows: int) -> float:
+        fb = jax.random.normal(jax.random.PRNGKey(0), (nbp1, LANES),
+                               jnp.float32)
+        eb = fb * 0.5
+        sp = ((S + rows - 1) // rows) * rows
+        perm = (jnp.arange(sp, dtype=jnp.int32) % max(1, nbp1 - 1))
+        out = kern(fb, eb, perm, rows=rows, **kw)   # compile + warm
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            out = kern(fb, eb, perm, rows=rows, **kw)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / 3
+
+    return bench
+
+
+def _gather_rows(codec: str, kern, fb, perm, **kw) -> int:
+    bench = None
+    if not interpret_mode():
+        bench = _gather_bench(kern, int(fb.shape[0]), int(perm.shape[0]),
+                              **kw)
+    return autotune.block_rows(codec, int(perm.shape[0]), bench=bench)
+
+
+def gather_ef_int8(fb, eb, perm, *, gamma: float, use_pallas: bool = True):
+    """Fused gather + EF + int8 encode of one rung's rows.
+    Returns (q (S, LANES) int8, scales (S, 1) f32, residual (S*LANES,))."""
+    if not use_pallas:
+        q, s, r = ref.quantize_int8_gather_ref(fb, eb, perm, gamma=gamma)
+        return q, s, r.reshape(-1)
+    rows = _gather_rows("int8", quantize_int8_gather, fb, perm,
+                        gamma=gamma, interpret=False)
+    p2, S = _pad_perm(perm, rows, fb.shape[0] - 1)
+    q, s, r = quantize_int8_gather(fb, eb, p2, gamma=gamma, rows=rows,
+                                   interpret=interpret_mode())
+    return q[:S], s[:S], r[:S].reshape(-1)
+
+
+def gather_ef_int4(fb, eb, perm, *, gamma: float, use_pallas: bool = True):
+    """Fused gather + EF + packed-int4 encode of one rung's rows.
+    Returns (packed (S, LANES//2) uint8, scales (S, 1) f32,
+    residual (S*LANES,))."""
+    if not use_pallas:
+        p, s, r = ref.ef_int4_gather_ref(fb, eb, perm, gamma=gamma)
+        return p, s, r.reshape(-1)
+    rows = _gather_rows("int4", ef_int4_gather, fb, perm,
+                        gamma=gamma, interpret=False)
+    p2, S = _pad_perm(perm, rows, fb.shape[0] - 1)
+    p, s, r = ef_int4_gather(fb, eb, p2, gamma=gamma, rows=rows,
+                             interpret=interpret_mode())
+    return p[:S], s[:S], r[:S].reshape(-1)
+
+
+def gather_ef_sign(fb, eb, perm, *, gamma: float, use_pallas: bool = True):
+    """Fused gather + EF + 1-bit sign encode of one rung's rows.
+    Returns (sign (S, LANES) int8, scales (S, 1) f32,
+    residual (S*LANES,))."""
+    if not use_pallas:
+        sg, s, r = ref.ef_sign_gather_ref(fb, eb, perm, gamma=gamma)
+        return sg, s, r.reshape(-1)
+    rows = _gather_rows("sign", ef_sign_gather, fb, perm,
+                        gamma=gamma, interpret=False)
+    p2, S = _pad_perm(perm, rows, fb.shape[0] - 1)
+    sg, s, r = ef_sign_gather(fb, eb, p2, gamma=gamma, rows=rows,
+                              interpret=interpret_mode())
+    return sg[:S], s[:S], r[:S].reshape(-1)
+
+
+def gather_ef_topk(fb, eb, perm, *, gamma: float, k: int,
+                   use_pallas: bool = True):
+    """Fused gather + EF + block top-k selection of one rung's rows.
+    Returns (selected_dense (S, LANES) f32, residual (S*LANES,))."""
+    if not use_pallas:
+        sel, res = ref.ef_topk_gather_ref(fb, eb, perm, gamma=gamma, k=k)
+        return sel, res.reshape(-1)
+    rows = _gather_rows("topk", ef_topk_gather, fb, perm,
+                        gamma=gamma, k=k, interpret=False)
+    p2, S = _pad_perm(perm, rows, fb.shape[0] - 1)
+    sel, res = ef_topk_gather(fb, eb, p2, gamma=gamma, k=k, rows=rows,
+                              interpret=interpret_mode())
+    return sel[:S], res[:S].reshape(-1)

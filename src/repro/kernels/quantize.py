@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.topk_compress import gather_ef_call
+
 ROWS = 8
 LANES = 1024
 
@@ -60,6 +62,25 @@ def quantize_int8_fused(x, *, interpret: bool = False):
         interpret=interpret,
     )(x)
     return q, s, r
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "rows", "interpret"))
+def quantize_int8_gather(fb, eb, perm, *, gamma: float, rows: int = 1,
+                         interpret: bool = False):
+    """Producer-fused gather + EF + int8 quantise: the rung's rows are
+    read straight out of the (NB+1, LANES) grad / error buffers through
+    ``perm`` — the gathered bucket never materialises in HBM.  Returns
+    (q (S, LANES) int8, scales (S, 1) f32, residual (S, LANES) f32),
+    per-row bit-exact to :func:`quantize_int8_fused` on ``ef``."""
+
+    def body(g, e):
+        ef = g.astype(jnp.float32) + gamma * e.astype(jnp.float32)
+        q, scale = _quant_body(ef)
+        return q, scale, ef - q * scale
+
+    out_defs = [(LANES, jnp.int8), (1, jnp.float32), (LANES, jnp.float32)]
+    return gather_ef_call(body, fb, eb, perm, out_defs, rows=rows,
+                          interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -124,6 +145,24 @@ def ef_int4_fused(g, e, *, gamma: float, interpret: bool = False):
         interpret=interpret,
     )(g, e)
     return p, s, r
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "rows", "interpret"))
+def ef_int4_gather(fb, eb, perm, *, gamma: float, rows: int = 1,
+                   interpret: bool = False):
+    """Producer-fused gather + EF + packed-int4 quantise through ``perm``.
+    Returns (packed (S, LANES//2) uint8, scales (S, 1) f32, residual
+    (S, LANES) f32), per-row bit-exact to :func:`ef_int4_fused`."""
+
+    def body(g, e):
+        ef = g.astype(jnp.float32) + gamma * e.astype(jnp.float32)
+        q, scale = _int4_body(ef)
+        return pack_nibbles(q), scale, ef - q * scale
+
+    out_defs = [(LANES // 2, jnp.uint8), (1, jnp.float32),
+                (LANES, jnp.float32)]
+    return gather_ef_call(body, fb, eb, perm, out_defs, rows=rows,
+                          interpret=interpret)
 
 
 def _dequant_kernel(q_ref, s_ref, out_ref):

@@ -39,6 +39,43 @@ def ef_sign_ref(g, e, *, gamma: float):
     return sign.astype(jnp.int8), scale, ef - sign * scale
 
 
+# ---- producer-fused gather + encode oracles -------------------------------
+# Ground truth for the `*_gather` kernels: the gather is materialised
+# (fb[perm]) and the flat encode body applied — the SAME f32 per-row math
+# the fused kernels run on un-materialised rows, so kernel vs oracle is a
+# bit-parity assertion, not an allclose (tests/test_kernels.py).
+
+
+def _gather_ef(fb, eb, perm, gamma: float):
+    return (fb[perm].astype(jnp.float32) +
+            gamma * eb[perm].astype(jnp.float32))
+
+
+def quantize_int8_gather_ref(fb, eb, perm, *, gamma: float):
+    ef = _gather_ef(fb, eb, perm, gamma)
+    q, scale = _quant_body(ef)
+    return q.astype(jnp.int8), scale, ef - q * scale
+
+
+def ef_int4_gather_ref(fb, eb, perm, *, gamma: float):
+    ef = _gather_ef(fb, eb, perm, gamma)
+    q, scale = _int4_body(ef)
+    return pack_nibbles(q), scale, ef - q * scale
+
+
+def ef_sign_gather_ref(fb, eb, perm, *, gamma: float):
+    ef = _gather_ef(fb, eb, perm, gamma)
+    sign, scale = _sign_body(ef)
+    return sign.astype(jnp.int8), scale, ef - sign * scale
+
+
+def ef_topk_gather_ref(fb, eb, perm, *, gamma: float, k: int):
+    ef = _gather_ef(fb, eb, perm, gamma)
+    mask, _ = _select_body(ef, k)
+    sel = ef * mask
+    return sel, ef - sel
+
+
 def dequant_accum_int8_ref(acc, q, s, w):
     return acc + w * (q.astype(jnp.float32) * s)
 

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.topk_compress import LANES, ROWS
+from repro.kernels.topk_compress import LANES, ROWS, gather_ef_call
 
 
 def _sign_body(x):
@@ -66,3 +66,21 @@ def ef_sign_fused(g, e, *, gamma: float, interpret: bool = False):
         interpret=interpret,
     )(g, e)
     return sign, s, r
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "rows", "interpret"))
+def ef_sign_gather(fb, eb, perm, *, gamma: float, rows: int = 1,
+                   interpret: bool = False):
+    """Producer-fused gather + EF + 1-bit sign compression through
+    ``perm``.  Returns (sign (S, LANES) int8, scales (S, 1) f32,
+    residual (S, LANES) f32), per-row bit-exact to
+    :func:`ef_sign_fused`."""
+
+    def body(g, e):
+        ef = g.astype(jnp.float32) + gamma * e.astype(jnp.float32)
+        sign, scale = _sign_body(ef)
+        return sign, scale, ef - sign * scale
+
+    out_defs = [(LANES, jnp.int8), (1, jnp.float32), (LANES, jnp.float32)]
+    return gather_ef_call(body, fb, eb, perm, out_defs, rows=rows,
+                          interpret=interpret)

@@ -29,10 +29,79 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 ROWS = 8          # sublane tile height (rows of independent 1024-blocks)
 LANES = 1024      # block width (multiple of 128 lanes)
 BISECT_ITERS = 16
+
+
+# ---------------------------------------------------------------------------
+# producer-fused gather plumbing (shared by every gather+encode kernel)
+# ---------------------------------------------------------------------------
+
+
+def gather_ef_call(body, fb, eb, perm, out_defs, *, rows: int,
+                   interpret: bool = False):
+    """Run a per-row encode ``body`` directly on gathered bucket rows.
+
+    ``fb`` / ``eb``: the packed (NB+1, LANES) grad / error-feedback
+    buffers (zero row last); ``perm``: (S,) int32 block indices, S a
+    multiple of ``rows``.  ``body(g, e) -> tuple`` maps (r, LANES) f32
+    row tiles to the per-row encode outputs; ``out_defs`` lists each
+    output's ``(width, dtype)`` (outputs are (S, width)).
+
+    The gather never materialises in HBM.  Two lowerings, picked by the
+    autotuner (``repro.kernels.autotune.block_rows``):
+
+      * ``rows == 1``: the perm rides in scalar-prefetch memory and the
+        input index map reads block ``perm[i]`` per grid step — Pallas's
+        pipeline does the gather while fetching the tile;
+      * ``rows > 1``: the whole buffer is the block and the kernel
+        dynamic-slices ``rows`` indexed rows per step — fewer grid
+        steps, more work (and VMEM) per step.
+
+    Both produce bit-identical outputs (same per-row math, same f32
+    order); only wall time differs.
+    """
+    S = perm.shape[0]
+    assert S % rows == 0, (S, rows)
+    nbp1, lanes = fb.shape
+
+    def kernel_r1(p_ref, g_ref, e_ref, *out_refs):
+        outs = body(g_ref[...], e_ref[...])
+        for ref, o in zip(out_refs, outs):
+            ref[...] = o.astype(ref.dtype)
+
+    def kernel_rn(p_ref, g_ref, e_ref, *out_refs):
+        i = pl.program_id(0)
+        for r in range(rows):
+            idx = p_ref[i * rows + r]
+            g = pl.load(g_ref, (pl.dslice(idx, 1), slice(None)))
+            e = pl.load(e_ref, (pl.dslice(idx, 1), slice(None)))
+            outs = body(g, e)
+            for ref, o in zip(out_refs, outs):
+                pl.store(ref, (pl.dslice(r, 1), slice(None)),
+                         o.astype(ref.dtype))
+
+    if rows == 1:
+        in_specs = [pl.BlockSpec((1, lanes), lambda i, p: (p[i], 0))] * 2
+        out_specs = [pl.BlockSpec((1, w), lambda i, p: (i, 0))
+                     for w, _ in out_defs]
+        grid, kernel = (S,), kernel_r1
+    else:
+        in_specs = [pl.BlockSpec((nbp1, lanes), lambda i, p: (0, 0))] * 2
+        out_specs = [pl.BlockSpec((rows, w), lambda i, p: (i, 0))
+                     for w, _ in out_defs]
+        grid, kernel = (S // rows,), kernel_rn
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=grid, in_specs=in_specs,
+        out_specs=out_specs)
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((S, w), dt) for w, dt in out_defs],
+        interpret=interpret,
+    )(perm.astype(jnp.int32), fb, eb)
 
 
 def _select_body(ef, k):
@@ -83,3 +152,23 @@ def ef_topk_select(g, e, *, gamma: float, k: int, interpret: bool = False):
         interpret=interpret,
     )(g, e)
     return out[0], out[1]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("gamma", "k", "rows", "interpret"))
+def ef_topk_gather(fb, eb, perm, *, gamma: float, k: int, rows: int = 1,
+                   interpret: bool = False):
+    """Producer-fused gather + EF + top-k selection: reads the rung's
+    rows straight out of the (NB+1, LANES) buffers through ``perm``.
+    Returns (selected_dense, residual), both (S, LANES) f32 — bit-exact
+    to :func:`ef_topk_select` on the gathered rows."""
+
+    def body(g, e):
+        ef = g.astype(jnp.float32) + gamma * e.astype(jnp.float32)
+        mask, _ = _select_body(ef, k)
+        sel = ef * mask
+        return sel, ef - sel
+
+    out_defs = [(LANES, jnp.float32), (LANES, jnp.float32)]
+    return gather_ef_call(body, fb, eb, perm, out_defs, rows=rows,
+                          interpret=interpret)

@@ -391,3 +391,173 @@ def test_p4_deterministic_ring_soak_forced():
     arrival-order float fold): same bit-determinism contract, asymmetric
     half-rings (2 forward + 1 backward hop)."""
     _run_det(4, "4,2,1", 8, "2")
+
+
+# Backward-interleaved streaming: the structural pin.  A segment's
+# collective must be issuable BEFORE the rest of the backward finishes —
+# i.e. its transitive operand cone in the lowered HLO excludes the
+# shallow layers' gradient ops.  We mark the shallowest layer with
+# jnp.sin: reverse-mode emits `cosine` only in THAT layer's grad path,
+# so "cone contains cosine" == "depends on the final backward segment".
+CONE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import re
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core import sync as S
+from repro.core.compression import Level
+from repro.core.planexec import build_exec_plan
+from repro.core.scheduler import SyncPlan
+from repro.launch.mesh import make_mesh
+
+# pod-only 2-device mesh: every collective in the module is a pod
+# collective, no axis bookkeeping needed
+mesh = make_mesh((2, 1, 1), ("pod", "data", "model"))
+# 6 chained (D, D) layers; the FIRST (shallowest) applies sin, so its
+# backward — and ONLY its backward — emits a `cosine` op.  Reverse-mode
+# produces the DEEP grads first, cos-free.
+D = 32
+levels = (Level("INT8", 1.0, 8), Level("INT4", 1.0, 4))
+idx = (0, 1, 0, 1, 0, 1)
+sizes = [D * D] * 6
+plan = SyncPlan(idx, levels, (0.5, 0.5), 1)
+ep_seg = build_exec_plan(plan, sizes, n_pods=2, segments=2)
+ep_flat = build_exec_plan(plan, sizes, n_pods=2, segments=1)
+assert ep_seg.segmented and not ep_flat.segmented
+
+r = np.random.RandomState(3)
+params = {f"p{i}": jnp.asarray(r.randn(D, D).astype(np.float32) / D)
+          for i in range(6)}
+errors = jax.tree.map(jnp.zeros_like, params)
+x = jnp.asarray(r.randn(8, D).astype(np.float32))
+
+
+def make_fn(ep):
+    def inner(ps, es, xb):
+        def loss(ps):
+            h = jnp.sin(xb @ ps["p0"])
+            for i in range(1, 6):
+                h = h @ ps[f"p{i}"]
+            return jnp.mean(h * h)
+        grads = jax.grad(loss)(ps)
+        return S.sync_tree(grads, es, ep, mesh=mesh, shardings=None,
+                           gamma=1.0, inside_manual=True)
+    pp = jax.tree.map(lambda _: P(), params)
+    smapped = compat.shard_map(inner, mesh, in_specs=(pp, pp, P()),
+                               out_specs=(pp, pp),
+                               manual_axes=set(mesh.axis_names))
+    return jax.jit(smapped)
+
+
+COLL = re.compile(r"=\s+\S+\s+(all-gather|all-reduce|all-to-all|"
+                  r"reduce-scatter|collective-permute)(-start)?\(")
+TOK = re.compile(r"%[\w.\-]+")
+
+
+def cone_report(txt):
+    # Def-use graph over %name tokens, scoped per computation (names are
+    # only unique within one); a reference to another computation
+    # (calls=/to_apply=/...) pulls in everything defined inside it.
+    # Returns, per collective, whether its transitive cone has a cosine.
+    comp_names = set(m.group(1) for m in re.finditer(
+        r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(", txt, re.M))
+    deps, is_cos, comp_defs, colls = {}, set(), {}, []
+    comp = None
+    for line in txt.splitlines():
+        m = re.match(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(", line)
+        if m and line.rstrip().endswith("{"):
+            comp = m.group(1)
+            comp_defs.setdefault(comp, [])
+            continue
+        if " = " not in line or comp is None:
+            continue
+        lhs, rhs = line.split(" = ", 1)
+        dm = TOK.search(lhs)
+        if not dm:
+            continue
+        node = (comp, dm.group(0))
+        deps[node] = [("COMP", t) if t in comp_names else (comp, t)
+                      for t in TOK.findall(rhs)]
+        comp_defs[comp].append(node)
+        if re.search(r"\bcosine\(", rhs):
+            is_cos.add(node)
+        if COLL.search(line):
+            colls.append(node)
+    for c, defs in comp_defs.items():
+        deps[("COMP", c)] = defs
+    memo = {}
+    def has_cos(n):
+        if n in memo:
+            return memo[n]
+        memo[n] = False  # cycle guard (while bodies)
+        memo[n] = n in is_cos or any(has_cos(d) for d in deps.get(n, ()))
+        return memo[n]
+    assert is_cos, "no cosine in HLO -- marker layer missing?"
+    assert colls, "no collectives found"
+    return [has_cos(c) for c in colls]
+
+
+fn_seg, fn_flat = make_fn(ep_seg), make_fn(ep_flat)
+
+# streaming must be free: segment-streamed == barriered bit for bit
+agg_s, err_s = fn_seg(params, errors, x)
+agg_f, err_f = fn_flat(params, errors, x)
+for k in params:
+    assert (np.asarray(agg_s[k]) == np.asarray(agg_f[k])).all(), k
+    assert (np.asarray(err_s[k]) == np.asarray(err_f[k])).all(), k
+
+# ... and with NONZERO error buffers: zero errors vacuously mask the EF
+# combine (gamma * e contributes nothing), so run the same parity check
+# mid-soak, where the residual path carries live ulp-sensitive state.
+errors_nz = jax.tree.map(
+    lambda p: jnp.asarray(0.3 * r.randn(*p.shape).astype(np.float32)),
+    params)
+agg_s, err_s = fn_seg(params, errors_nz, x)
+agg_f, err_f = fn_flat(params, errors_nz, x)
+for k in params:
+    assert (np.asarray(agg_s[k]) == np.asarray(agg_f[k])).all(), (k, "nz")
+    assert (np.asarray(err_s[k]) == np.asarray(err_f[k])).all(), (k, "nz")
+
+rep_seg = cone_report(fn_seg.lower(params, errors, x).compile().as_text())
+rep_flat = cone_report(
+    fn_flat.lower(params, errors, x).compile().as_text())
+
+# Segmented: the deep segment's collectives issue from cos-free cones —
+# XLA may start them while the shallow backward still runs.  (At least
+# one cone DOES contain cosine: the shallow segment's own — the sanity
+# check that the marker threads through at all.)  With the coalesced
+# wire exchange each segment's payload rungs share ONE all_gather, so
+# the counts are per segment, not per rung.
+n_free = sum(1 for c in rep_seg if not c)
+assert n_free >= 1, rep_seg
+assert sum(rep_seg) >= 1, rep_seg
+assert len(rep_seg) >= 2, rep_seg
+# Barriered: the single packed buffer makes EVERY collective depend on
+# the last gradient — the false dependence this scheduling removes.
+assert all(rep_flat), rep_flat
+assert len(rep_flat) >= 1, rep_flat
+print("CONE_OK", len(rep_seg), n_free, len(rep_flat))
+"""
+
+
+@pytest.mark.slow
+def test_backward_interleaved_collective_cones_subprocess():
+    """Structural pin of the backward-interleaved schedule: with
+    segments=2, at least one rung collective's HLO operand cone excludes
+    the shallowest layer's gradient (marked via sin -> cosine), so it can
+    issue before the backward finishes; the barriered plan's collectives
+    all carry the false last-gradient dependence.  Also asserts
+    segment-streamed == barriered bit-parity on the same inputs, with
+    both zero and nonzero EF error buffers (zero errors mask the
+    residual path)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + root
+    r = subprocess.run([sys.executable, "-c", CONE_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "CONE_OK" in r.stdout

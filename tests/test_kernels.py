@@ -10,7 +10,7 @@ try:
 except ImportError:  # property tests skip, the rest of the module runs
     from hypothesis_stub import given, settings, st
 
-from repro.kernels import ops, ref
+from repro.kernels import autotune, ops, ref
 from repro.kernels.topk_compress import ef_topk_select, LANES, ROWS
 from repro.kernels.quantize import (quantize_int8_fused, dequantize_int8,
                                     ef_int4_fused, unpack_nibbles)
@@ -188,3 +188,230 @@ class TestOpsWrappers:
         back = ops.dequant_int8(q, s, n)
         np.testing.assert_allclose(np.asarray(back), np.asarray(g),
                                    atol=float(np.asarray(s).max()) * 0.51)
+
+
+def _gather_case(nbp1, S, seed, special, rows):
+    """Block buffers + padded perm for the producer-fused gather kernels.
+    ``special`` seeds a denormal row and an all-zero row (absmax == 0:
+    the scale guard must hold); the last row is the zero row the sync
+    path pads with."""
+    r = np.random.RandomState(seed)
+    fb = r.randn(nbp1, LANES).astype(np.float32)
+    eb = r.randn(nbp1, LANES).astype(np.float32)
+    if special and nbp1 > 3:
+        fb[0] *= 1e-41          # subnormal magnitudes
+        eb[0] *= 1e-41
+        fb[1] = 0.0             # absmax == 0 row
+        eb[1] = 0.0
+    fb[-1] = 0.0
+    eb[-1] = 0.0
+    perm = r.randint(0, nbp1, size=S).astype(np.int32)
+    p2, _ = ops._pad_perm(jnp.asarray(perm), rows, nbp1 - 1)
+    return jnp.asarray(fb), jnp.asarray(eb), p2
+
+
+class TestGatherKernels:
+    """Property-based bit-parity of the fused gather+encode kernels vs
+    the ref.py gather oracles, across non-multiple-of-tile perm lengths
+    and denormal/zero rows.  Both sides run UNDER JIT: in-kernel
+    ``g + gamma * e`` and jitted jnp both FMA-contract on XLA, while the
+    eager oracle does separate mul+add (1-ulp apart) — the jitted parity
+    is the one the (always-jitted) sync path relies on."""
+
+    @given(st.integers(2, 9), st.integers(1, 23),
+           st.integers(0, 10 ** 6), st.booleans(),
+           st.sampled_from((1, 2, 4, 8)))
+    @settings(max_examples=12, deadline=None)
+    def test_int8_gather_bit_parity(self, nbp1, S, seed, special, rows):
+        from repro.kernels.quantize import quantize_int8_gather
+        fb, eb, p2 = _gather_case(nbp1, S, seed, special, rows)
+        q, s, r = quantize_int8_gather(fb, eb, p2, gamma=0.9, rows=rows,
+                                       interpret=True)
+        q_r, s_r, r_r = jax.jit(
+            lambda f, e, p: ref.quantize_int8_gather_ref(f, e, p,
+                                                         gamma=0.9)
+        )(fb, eb, p2)
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(q_r))
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(s_r))
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(r_r))
+
+    @given(st.integers(2, 9), st.integers(1, 23),
+           st.integers(0, 10 ** 6), st.booleans(),
+           st.sampled_from((1, 2, 4, 8)))
+    @settings(max_examples=12, deadline=None)
+    def test_int4_gather_bit_parity(self, nbp1, S, seed, special, rows):
+        from repro.kernels.quantize import ef_int4_gather
+        fb, eb, p2 = _gather_case(nbp1, S, seed, special, rows)
+        p, s, r = ef_int4_gather(fb, eb, p2, gamma=0.7, rows=rows,
+                                 interpret=True)
+        p_r, s_r, r_r = jax.jit(
+            lambda f, e, pm: ref.ef_int4_gather_ref(f, e, pm, gamma=0.7)
+        )(fb, eb, p2)
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(p_r))
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(s_r))
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(r_r))
+
+    @given(st.integers(2, 9), st.integers(1, 23),
+           st.integers(0, 10 ** 6), st.booleans(),
+           st.sampled_from((1, 2, 4, 8)))
+    @settings(max_examples=12, deadline=None)
+    def test_sign_gather_bit_parity(self, nbp1, S, seed, special, rows):
+        from repro.kernels.sign import ef_sign_gather
+        fb, eb, p2 = _gather_case(nbp1, S, seed, special, rows)
+        sg, s, r = ef_sign_gather(fb, eb, p2, gamma=0.6, rows=rows,
+                                  interpret=True)
+        sg_r, s_r, r_r = jax.jit(
+            lambda f, e, p: ref.ef_sign_gather_ref(f, e, p, gamma=0.6)
+        )(fb, eb, p2)
+        np.testing.assert_array_equal(np.asarray(sg), np.asarray(sg_r))
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(s_r))
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(r_r))
+
+    @given(st.integers(2, 9), st.integers(1, 23),
+           st.integers(0, 10 ** 6), st.booleans(),
+           st.sampled_from((1, 2, 4, 8)))
+    @settings(max_examples=12, deadline=None)
+    def test_topk_gather_bit_parity(self, nbp1, S, seed, special, rows):
+        from repro.kernels.topk_compress import ef_topk_gather
+        fb, eb, p2 = _gather_case(nbp1, S, seed, special, rows)
+        sel, res = ef_topk_gather(fb, eb, p2, gamma=1.0, k=104,
+                                  rows=rows, interpret=True)
+        sel_r, res_r = jax.jit(
+            lambda f, e, p: ref.ef_topk_gather_ref(f, e, p, gamma=1.0,
+                                                   k=104)
+        )(fb, eb, p2)
+        np.testing.assert_array_equal(np.asarray(sel), np.asarray(sel_r))
+        np.testing.assert_array_equal(np.asarray(res), np.asarray(res_r))
+
+    # Deterministic sweep over the same case space — runs even where
+    # hypothesis is absent (the property tests then skip via the stub).
+    @pytest.mark.parametrize("rows", [1, 2, 4, 8])
+    @pytest.mark.parametrize("special", [False, True])
+    def test_gather_bit_parity_grid(self, rows, special):
+        from repro.kernels.quantize import (ef_int4_gather,
+                                            quantize_int8_gather)
+        from repro.kernels.sign import ef_sign_gather
+        from repro.kernels.topk_compress import ef_topk_gather
+        for nbp1, S, seed in [(2, 1, 0), (5, 7, 1), (9, 23, 2),
+                              (6, 13, 3)]:
+            fb, eb, p2 = _gather_case(nbp1, S, seed, special, rows)
+            pairs = [
+                (quantize_int8_gather(fb, eb, p2, gamma=0.9, rows=rows,
+                                      interpret=True),
+                 jax.jit(lambda f, e, p: ref.quantize_int8_gather_ref(
+                     f, e, p, gamma=0.9))(fb, eb, p2)),
+                (ef_int4_gather(fb, eb, p2, gamma=0.7, rows=rows,
+                                interpret=True),
+                 jax.jit(lambda f, e, p: ref.ef_int4_gather_ref(
+                     f, e, p, gamma=0.7))(fb, eb, p2)),
+                (ef_sign_gather(fb, eb, p2, gamma=0.6, rows=rows,
+                                interpret=True),
+                 jax.jit(lambda f, e, p: ref.ef_sign_gather_ref(
+                     f, e, p, gamma=0.6))(fb, eb, p2)),
+                (ef_topk_gather(fb, eb, p2, gamma=1.0, k=104, rows=rows,
+                                interpret=True),
+                 jax.jit(lambda f, e, p: ref.ef_topk_gather_ref(
+                     f, e, p, gamma=1.0, k=104))(fb, eb, p2)),
+            ]
+            for got, want in pairs:
+                for a, b in zip(got, want):
+                    np.testing.assert_array_equal(np.asarray(a),
+                                                  np.asarray(b))
+
+    @given(st.integers(2, 9), st.integers(1, 23),
+           st.integers(0, 10 ** 6))
+    @settings(max_examples=10, deadline=None)
+    def test_ops_wrapper_slices_to_perm_length(self, nbp1, S, seed):
+        """The ops.gather_ef_* wrappers pad the perm to the autotuned
+        tile height and slice back: outputs are (S, ...) and match the
+        oracle on the ORIGINAL perm bit for bit."""
+        fb, eb, p2 = _gather_case(nbp1, S, seed, False, 1)
+        perm = p2[:S]
+        q, s, r = ops.gather_ef_int8(fb, eb, perm, gamma=0.9,
+                                     use_pallas=True)
+        assert q.shape == (S, LANES) and r.shape == (S * LANES,)
+        q_r, s_r, r_r = jax.jit(
+            lambda f, e, p: ref.quantize_int8_gather_ref(f, e, p,
+                                                         gamma=0.9)
+        )(fb, eb, perm)
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(q_r))
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(s_r))
+        np.testing.assert_array_equal(np.asarray(r),
+                                      np.asarray(r_r).reshape(-1))
+
+
+class TestAutotune:
+    """The block-size autotuner's determinism contract
+    (tests satellite: REPRO_FORCE_INTERPRET must force the deterministic
+    default path and never touch the cache file)."""
+
+    def _reset(self):
+        ops.interpret_mode.cache_clear()
+        ops.default_use_pallas.cache_clear()
+        autotune.clear_memo()
+
+    @pytest.fixture(autouse=True)
+    def _isolate(self, tmp_path, monkeypatch):
+        monkeypatch.setenv(autotune.CACHE_ENV,
+                           str(tmp_path / "autotune.json"))
+        self.cache = tmp_path / "autotune.json"
+        self._reset()
+        yield
+        self._reset()
+
+    def test_interpret_mode_default_rows_no_cache_write(self, monkeypatch):
+        monkeypatch.setenv(ops.FORCE_INTERPRET_ENV, "1")
+        self._reset()
+        for codec in ("int8", "int4", "sign", "topk"):
+            for n in (1, 5, 64, 1000):
+                assert autotune.block_rows(codec, n) == \
+                    autotune.DEFAULT_ROWS
+        # drive the real producer-fused path end to end
+        fb = jnp.asarray(np.random.RandomState(0)
+                         .randn(4, LANES).astype(np.float32))
+        eb = fb * 0.5
+        perm = jnp.arange(3, dtype=jnp.int32)
+        out = ops.gather_ef_int8(fb, eb, perm, gamma=1.0, use_pallas=True)
+        jax.block_until_ready(out)
+        assert not self.cache.exists(), \
+            "interpret mode must never write the autotune cache"
+
+    def test_measured_path_caches_to_disk(self, monkeypatch):
+        monkeypatch.setenv(ops.FORCE_INTERPRET_ENV, "0")
+        self._reset()
+        calls = []
+
+        def bench(rows):
+            calls.append(rows)
+            return 1.0 / rows  # taller tiles win
+        assert autotune.block_rows("int8", 64, bench=bench) == 8
+        assert calls == [1, 2, 4, 8]
+        assert self.cache.exists()
+        # memo hit: no re-measure
+        calls.clear()
+        assert autotune.block_rows("int8", 64, bench=bench) == 8
+        assert calls == []
+        # fresh process (memo cleared): served from disk, still no bench
+        autotune.clear_memo()
+        assert autotune.block_rows("int8", 64, bench=bench) == 8
+        assert calls == []
+        # same sig class shares the entry; a different class re-measures
+        assert autotune.block_rows("int8", 50, bench=bench) == 8
+        assert calls == []
+        assert autotune.block_rows("int8", 3, bench=bench) == 2
+        assert calls == [1, 2]  # candidates capped at n_rows
+
+    def test_candidates_capped_and_failures_skipped(self, monkeypatch):
+        monkeypatch.setenv(ops.FORCE_INTERPRET_ENV, "0")
+        self._reset()
+
+        def bench(rows):
+            if rows > 2:
+                raise RuntimeError("tile too tall for vmem")
+            return float(rows)
+        assert autotune.block_rows("sign", 64, bench=bench) == 1
+        # no bench at all: deterministic default, nothing persisted
+        autotune.clear_memo()
+        self.cache.unlink()
+        assert autotune.block_rows("topk", 64) == autotune.DEFAULT_ROWS
+        assert not self.cache.exists()

@@ -120,6 +120,105 @@ print("P3_SOAK_OK")
 """
 
 
+# Backward-interleaved streaming at the trainer level: a multi-step EF
+# soak with overlap_backward on vs off must land BIT-identical params on
+# every pod (the segment split is numerics-neutral by blockwise codec
+# math; anything else is a streaming bug).  The contract is pinned on
+# the kernel path (REPRO_FORCE_INTERPRET=1, matching CI): on the pure-
+# jnp oracle path XLA:CPU fuses the whole step program and its FMA
+# contraction follows the program shape, so the differently-segmented
+# on/off programs pick up ulp-level noise OUTSIDE the sync region —
+# sync_tree itself is bit-exact seg-vs-flat even with nonzero error
+# buffers (pinned in tests/test_collectives.py).  Parameterised via env
+# vars like tests/test_collectives.py's DET_SCRIPT (XLA locks the device
+# count per process).  The companion retrace contract — zero steady-state
+# recompiles across replans that change the rung schedule, including
+# segmented ones — is pinned in tests/test_replan.py.
+OVERLAP_SOAK_SCRIPT = r"""
+import os
+MESH = tuple(int(x) for x in os.environ["REPRO_TEST_MESH"].split(","))
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                           + os.environ["REPRO_TEST_DEVS"])
+import jax
+import numpy as np
+from repro.configs import SMOKE_ARCHS
+from repro.configs.base import ACESyncConfig, RunConfig, ShapeConfig
+from repro.models.registry import build_model
+from repro.core.trainer import Trainer
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh(MESH, ("pod", "data", "model"))
+shape = ShapeConfig("t", 64, 6, "train")
+cfg = SMOKE_ARCHS["paper-350m"]
+
+
+def soak(overlap):
+    run = RunConfig(model=cfg, shape=shape, total_steps=20,
+                    warmup_steps=2, lr=1e-3,
+                    acesync=ACESyncConfig(overlap_backward=overlap))
+    model = build_model(cfg, run)
+    tr = Trainer(model, run, mesh=mesh, strategy="acesync")
+    plan = tr.default_plan(bandwidth_mbps=30.0)
+    assert tr.exec_plan(plan).segmented == overlap, overlap
+    state = jax.device_put(tr.init_state(jax.random.PRNGKey(0)),
+                           tr.state_shardings())
+    fn = tr.step_fn(plan, "grad_sync")
+    for s in range(4):
+        batch = jax.device_put(
+            model.make_batch(jax.random.PRNGKey(s + 1), shape),
+            tr.batch_shardings(shape))
+        state, metrics = fn(state, batch)
+        assert np.isfinite(float(metrics["loss"])), (overlap, s)
+    return state
+
+
+st_on, st_off = soak(True), soak(False)
+n = 0
+for (path, a), (_, b) in zip(
+        jax.tree_util.tree_flatten_with_path(st_on["params"])[0],
+        jax.tree_util.tree_flatten_with_path(st_off["params"])[0]):
+    aa = np.asarray(jax.device_get(a))
+    bb = np.asarray(jax.device_get(b))
+    assert (aa == bb).all(), (path, "overlap changed the math")
+    for p in range(1, MESH[0]):
+        assert (aa[0] == aa[p]).all(), (path, "pods drifted")
+    n += 1
+assert n > 0
+print("OVERLAP_SOAK_OK", n)
+"""
+
+
+def _run_overlap_soak(mesh, devs):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    env["REPRO_TEST_MESH"] = mesh
+    env["REPRO_TEST_DEVS"] = str(devs)
+    # Pin the kernel path: the parity contract is on the production
+    # encode kernels, not the oracle path's whole-program XLA:CPU fusion
+    # (see the comment above OVERLAP_SOAK_SCRIPT).
+    env["REPRO_FORCE_INTERPRET"] = "1"
+    r = subprocess.run([sys.executable, "-c", OVERLAP_SOAK_SCRIPT],
+                       env=env, capture_output=True, text=True,
+                       timeout=900)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OVERLAP_SOAK_OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_overlap_backward_bit_parity_p2():
+    """4-step EF soak on (2,2,2): params with overlap_backward on == off,
+    bit for bit, and bit-identical across pods."""
+    _run_overlap_soak("2,2,2", 8)
+
+
+@pytest.mark.slow
+def test_overlap_backward_bit_parity_p3():
+    """Same contract on a 3-pod mesh, where every exchange folds through
+    the deterministic fixed-point path."""
+    _run_overlap_soak("3,2,2", 12)
+
+
 @pytest.mark.slow
 def test_p3_trainer_grad_sync_param_hash_soak():
     """Multi-step grad_sync on a simulated 3-pod mesh with a forced ring:
