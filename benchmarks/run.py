@@ -14,15 +14,18 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                 ".."))
 
-# --multipod / --hierarchy simulate pod meshes with 8 virtual host devices;
-# XLA locks the device count at first use, so this must precede the jax
+# --multipod / --hierarchy simulate pod meshes with 8 virtual host devices
+# (--faults needs 12: its elastic soak shrinks a (3, 2, 2) fleet); XLA
+# locks the device count at first use, so this must precede the jax
 # import (same trick as tests/test_multipod.py, in-process).
-if ("--multipod" in sys.argv or "--hierarchy" in sys.argv) \
+if ("--multipod" in sys.argv or "--hierarchy" in sys.argv
+        or "--faults" in sys.argv) \
         and "xla_force_host_platform_device_count" \
         not in os.environ.get("XLA_FLAGS", ""):
-    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                               + " --xla_force_host_platform_device_count=8"
-                               ).strip()
+    _n_sim = 12 if "--faults" in sys.argv else 8
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_n_sim}").strip()
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
@@ -557,6 +560,103 @@ def bench_hierarchy(out_path=None, steps=24, warmup=6,
     return records
 
 
+def bench_faults(out_path=None, steps=16, fail_on_recompile=False):
+    """Fault-injected elastic soak on a simulated (3, 2, 2) pod mesh (12
+    virtual CPU devices): pod 2 preempted mid-run, its heartbeats delayed
+    on return, a checkpoint bit-rotted on disk — against a fault-free
+    baseline of the same config.  Records the foreground compile count
+    delta (a membership change must add ZERO — the new-P step is AOT-
+    warmed in the background; CI gates on it with ``--fail-on-recompile``),
+    the membership events with their warm-cache provenance, checkpoint
+    integrity triage (the corrupted step must fail deep verification and
+    restore must anchor elsewhere), and wall time overhead.  Written to
+    benchmarks/results/BENCH_faults.json and mirrored at the repo root."""
+    import tempfile
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.launch.mesh import make_mesh
+    from repro.launch.session import TrainSession
+    from repro.runtime.faults import (FaultEvent, FaultSchedule, KILL_POD,
+                                      REJOIN_POD, CORRUPT_CKPT,
+                                      DELAY_HEARTBEAT)
+
+    def run_once(faults, ckpt_every=0):
+        mesh = make_mesh((3, 2, 2), ("pod", "data", "model"))
+        sess = TrainSession.from_config(
+            "paper-350m", strategy="acesync", mesh=mesh, seq_len=64,
+            batch=6, steps=steps, ckpt_every=ckpt_every,
+            ckpt_dir=tempfile.mkdtemp(), fault_schedule=faults,
+            blocking_replans=True)
+        t0 = time.perf_counter()
+        sess.run(steps, log_every=0)
+        dt = time.perf_counter() - t0
+        sess.finish()
+        return sess, dt
+
+    base, dt_base = run_once(None)
+    schedule = FaultSchedule([
+        FaultEvent(4, KILL_POD, 2),
+        FaultEvent(6, DELAY_HEARTBEAT, 1, duration=2),
+        FaultEvent(8, REJOIN_POD, 2),
+        FaultEvent(12, CORRUPT_CKPT, 0),   # bit-rots the newest ckpt (10)
+    ])
+    sess, dt_fault = run_once(schedule, ckpt_every=5)
+    loop = sess.loop
+    new_foreground = loop.compile_count() - base.loop.compile_count()
+    ck = Checkpointer(loop.ckpt.dir)
+    deep_valid = ck.valid_steps(deep=True)
+    rec = {
+        "steps": steps,
+        "baseline_steps_per_sec": round(steps / dt_base, 3),
+        "faulted_steps_per_sec": round(steps / dt_fault, 3),
+        "fault_overhead_frac": round(dt_fault / dt_base - 1.0, 4),
+        "baseline_compile_count": base.loop.compile_count(),
+        "faulted_compile_count": loop.compile_count(),
+        "new_foreground_compiles_from_faults": new_foreground,
+        "warm_compiles": loop.warm_compile_count(),
+        "membership_events": loop.membership_events,
+        "events_fired": [{"step": e.step, "kind": e.kind,
+                          "target": e.target} for e in schedule.fired],
+        "ckpt_steps_deep_valid": deep_valid,
+        "ckpt_corrupted_step_detected": 10 not in deep_valid,
+        "ckpt_restore_anchor": ck.latest_step(),
+        "final_loss": round(sess.losses[-1], 4),
+        "final_n_pods": loop.trainer.n_pods,
+    }
+    out = out_path or os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "results",
+        "BENCH_faults.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    payload = {"backend": jax.default_backend(), "record": rec}
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {out}", flush=True)
+    root_out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "..", "BENCH_faults.json")
+    with open(root_out, "w") as f:
+        json.dump(payload, f, indent=1)
+    row("faults_elastic_soak", dt_fault / steps * 1e6,
+        f"overhead={100 * rec['fault_overhead_frac']:.1f}%;"
+        f"recompiles={new_foreground};"
+        f"warm={rec['warm_compiles']}")
+    problems = []
+    if new_foreground > 0:
+        problems.append(f"membership change caused {new_foreground} "
+                        f"foreground recompiles")
+    if not all(e.get("served_from_warm_cache")
+               for e in loop.membership_events):
+        problems.append("a membership swap missed the warm AOT cache")
+    if not rec["ckpt_corrupted_step_detected"]:
+        problems.append("corrupted checkpoint passed deep verification")
+    if rec["ckpt_restore_anchor"] == 10:
+        problems.append("restore anchored on the corrupted checkpoint")
+    if problems:
+        msg = "; ".join(problems)
+        if fail_on_recompile:
+            raise SystemExit(msg)
+        print(f"WARNING: {msg}", flush=True)
+    return rec
+
+
 def bench_decode_step():
     from repro.configs import SMOKE_ARCHS
     from repro.configs.base import ShapeConfig
@@ -610,6 +710,10 @@ def main() -> None:
         return
     if "--hierarchy" in sys.argv:
         bench_hierarchy(
+            fail_on_recompile="--fail-on-recompile" in sys.argv)
+        return
+    if "--faults" in sys.argv:
+        bench_faults(
             fail_on_recompile="--fail-on-recompile" in sys.argv)
         return
     bench_compression()

@@ -8,9 +8,18 @@ Layout:  <dir>/step_<N>/
 Properties needed at scale and covered here:
   * atomic publish: data written to step_<N>.tmp, fsync'd, renamed, and the
     LATEST pointer updated last — a crash never leaves a half checkpoint
-    visible;
-  * async save: the device->host transfer happens on the caller thread
-    (cheap), serialisation runs on a background thread;
+    visible, and a leftover ``step_N.tmp`` from a killed writer is ignored
+    by every reader and cleaned by :meth:`prune`;
+  * integrity: the manifest carries a CRC-32 checksum plus shape/dtype per
+    leaf and a treedef fingerprint; :meth:`restore` verifies both and a
+    corrupt / truncated / partial checkpoint is skipped with fallback to
+    the newest step that verifies;
+  * loud async saves: serialisation runs on a background thread, but a
+    failed write is captured and re-raised on the NEXT ``save()`` /
+    ``wait()`` — a snapshot can never fail silently, and because the write
+    lands in ``.tmp`` first the previous valid checkpoint is untouched;
+  * transient-failure retries: the write sequence retries with exponential
+    backoff (NFS blips, ENOSPC races with a cleaner) before giving up;
   * elastic restore: leaves are re-sharded on load via device_put with the
     *current* mesh's shardings, so a 2-pod checkpoint restarts fine on 1 pod
     (and vice versa) as long as pod-dim leaves are broadcastable;
@@ -22,7 +31,9 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Dict, Optional
+import time
+import zlib
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -33,32 +44,88 @@ def _flatten(tree):
     return leaves, treedef
 
 
+#: chars of str(treedef) kept as the structure fingerprint (bounded so a
+#: giant model's manifest stays small; mismatches virtually always differ
+#: in the prefix — a changed dict key / NamedTuple field shows up early)
+TREEDEF_FP_CHARS = 4096
+
+
+def _treedef_fp(tree) -> str:
+    return str(jax.tree_util.tree_structure(tree))[:TREEDEF_FP_CHARS]
+
+
+def _leaf_crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint directory failed integrity verification."""
+
+
 class Checkpointer:
+    #: write attempts per snapshot before the failure is surfaced
+    RETRIES = 3
+    #: base backoff between attempts (doubles each retry)
+    BACKOFF_S = 0.05
+
     def __init__(self, directory: str):
         self.dir = directory
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        #: steps whose directories failed verification this process —
+        #: diagnostics for soak tests / benchmarks
+        self.corrupt_steps: List[int] = []
 
     # ------------------------------------------------------------------
+    def _raise_pending(self):
+        """Surface a background write failure captured since the last
+        call — a failed snapshot is loud, not silent."""
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                f"checkpoint write failed in the background: {err!r} — the "
+                f"previous valid checkpoint is untouched") from err
+
     def save(self, step: int, state, extras: Optional[Dict[str, Any]] = None,
              blocking: bool = False):
         """Snapshot ``state`` (pytree of jax.Arrays) at ``step``."""
+        self.wait()             # also re-raises a prior failed write
         leaves, treedef = _flatten(state)
         host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
         payload = {
             "step": step,
             # structure recorded as a repr fingerprint (NamedTuple nodes are
             # not proto-serialisable); restore is template-based anyway
-            "treedef_repr": str(jax.tree_util.tree_structure(state))[:4096],
+            "treedef_repr": _treedef_fp(state),
             "n_leaves": len(host_leaves),
+            "leaves": [{"shape": list(l.shape), "dtype": str(l.dtype),
+                        "crc32": _leaf_crc(l)} for l in host_leaves],
             "extras": extras or {},
         }
-        self.wait()
         self._thread = threading.Thread(
-            target=self._write, args=(step, host_leaves, payload), daemon=True)
+            target=self._write_guarded, args=(step, host_leaves, payload),
+            daemon=True)
         self._thread.start()
         if blocking:
             self.wait()
+
+    def _write_guarded(self, step: int, host_leaves, payload):
+        """Background entry point: retry transient failures with backoff,
+        capture the terminal one for the next save()/wait().  All attempts
+        write into ``.tmp`` first, so the previous valid checkpoint is
+        never touched by a failed snapshot."""
+        delay = self.BACKOFF_S
+        for attempt in range(self.RETRIES):
+            try:
+                self._write(step, host_leaves, payload)
+                return
+            except BaseException as e:  # noqa: BLE001 - re-raised on wait
+                if attempt == self.RETRIES - 1:
+                    self._error = e
+                    return
+                time.sleep(delay)
+                delay *= 2
 
     def _write(self, step: int, host_leaves, payload):
         final = os.path.join(self.dir, f"step_{step:08d}")
@@ -83,44 +150,169 @@ class Checkpointer:
     def wait(self):
         if self._thread is not None and self._thread.is_alive():
             self._thread.join()
+        self._raise_pending()
 
     # ------------------------------------------------------------------
+    # integrity
+    # ------------------------------------------------------------------
+    def _step_dirs(self) -> List[int]:
+        """Complete (non-.tmp) step directories, oldest first."""
+        out = []
+        for n in os.listdir(self.dir):
+            if not n.startswith("step_") or n.endswith(".tmp"):
+                continue
+            try:
+                out.append(int(n.split("_")[1]))
+            except (IndexError, ValueError):
+                continue
+        return sorted(out)
+
+    def _manifest(self, step: int) -> Optional[dict]:
+        p = os.path.join(self.dir, f"step_{step:08d}", "manifest.json")
+        try:
+            with open(p) as f:
+                return json.load(f)
+        except (OSError, ValueError):
+            return None
+
+    def verify(self, step: int, deep: bool = False) -> bool:
+        """Structural (and with ``deep`` checksum-level) validation of one
+        checkpoint directory: manifest parses, every leaf file exists and —
+        deep — its bytes match the recorded shape/dtype/CRC."""
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        payload = self._manifest(step)
+        if payload is None or payload.get("n_leaves") is None:
+            return False
+        n = int(payload["n_leaves"])
+        metas = payload.get("leaves")
+        for i in range(n):
+            p = os.path.join(d, f"leaf_{i}.npy")
+            if not os.path.isfile(p):
+                return False
+            if not deep:
+                continue
+            try:
+                arr = np.load(p)
+            except (OSError, ValueError):
+                return False
+            if metas is not None:
+                m = metas[i]
+                if (list(arr.shape) != list(m["shape"])
+                        or str(arr.dtype) != m["dtype"]
+                        or _leaf_crc(arr) != int(m["crc32"])):
+                    return False
+        return True
+
+    def valid_steps(self, deep: bool = False) -> List[int]:
+        """Steps whose directories pass :meth:`verify`, oldest first."""
+        return [s for s in self._step_dirs() if self.verify(s, deep=deep)]
+
     def latest_step(self) -> Optional[int]:
+        """The step LATEST points to — falling back to the newest step
+        directory that verifies when the pointer is missing, unparsable,
+        or points at a missing/corrupt directory (a crash can land between
+        the directory rename and the pointer update)."""
         p = os.path.join(self.dir, "LATEST")
-        if not os.path.exists(p):
-            return None
-        with open(p) as f:
-            name = f.read().strip()
-        if not os.path.isdir(os.path.join(self.dir, name)):
-            return None
-        return int(name.split("_")[1])
+        if os.path.exists(p):
+            try:
+                with open(p) as f:
+                    name = f.read().strip()
+                step = int(name.split("_")[1])
+                if self.verify(step):
+                    return step
+            except (OSError, IndexError, ValueError):
+                pass
+        valid = self.valid_steps()
+        return valid[-1] if valid else None
+
+    # ------------------------------------------------------------------
+    def _load_leaves(self, step: int, n_expected: int):
+        """Load + checksum-verify one checkpoint's leaves.  Raises
+        :class:`CheckpointCorruptError` on any integrity failure."""
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        payload = self._manifest(step)
+        if payload is None:
+            raise CheckpointCorruptError(f"{d}: unreadable manifest")
+        if payload["n_leaves"] != n_expected:
+            raise CheckpointCorruptError(
+                f"{d}: holds {payload['n_leaves']} leaves, template has "
+                f"{n_expected} — tree structure changed")
+        metas = payload.get("leaves")
+        arrs = []
+        for i in range(n_expected):
+            p = os.path.join(d, f"leaf_{i}.npy")
+            try:
+                arr = np.load(p)
+            except (OSError, ValueError) as e:
+                raise CheckpointCorruptError(
+                    f"{d}: leaf_{i}.npy unreadable ({e})") from e
+            if metas is not None:
+                m = metas[i]
+                if list(arr.shape) != list(m["shape"]) \
+                        or str(arr.dtype) != m["dtype"]:
+                    raise CheckpointCorruptError(
+                        f"{d}: leaf_{i}.npy is {arr.dtype}{arr.shape}, "
+                        f"manifest says {m['dtype']}{tuple(m['shape'])}")
+                if _leaf_crc(arr) != int(m["crc32"]):
+                    raise CheckpointCorruptError(
+                        f"{d}: leaf_{i}.npy checksum mismatch (bit rot or "
+                        f"truncated write)")
+            arrs.append(arr)
+        return arrs, payload
 
     def restore(self, template, step: Optional[int] = None,
                 shardings=None):
         """Load a checkpoint into the structure of ``template``.
 
+        With ``step=None`` the newest checkpoint is used, and a corrupt or
+        partial one (bad checksum, missing/truncated leaf, unreadable
+        manifest) is skipped with fallback to the next-newest step that
+        verifies.  An explicit ``step`` raises on corruption instead.
+
         ``shardings``: optional pytree of NamedShardings for elastic
         re-sharding onto the current mesh."""
-        if step is None:
-            step = self.latest_step()
-            if step is None:
-                raise FileNotFoundError(f"no checkpoint in {self.dir}")
-        d = os.path.join(self.dir, f"step_{step:08d}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            payload = json.load(f)
         leaves, treedef = _flatten(template)
-        assert payload["n_leaves"] == len(leaves), "tree structure changed"
+        if step is not None:
+            candidates = [step]
+        else:
+            candidates = list(reversed(self.valid_steps()))
+            if not candidates:
+                raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        last_err: Optional[Exception] = None
+        for s in candidates:
+            try:
+                arrs, payload = self._load_leaves(s, len(leaves))
+                break
+            except CheckpointCorruptError as e:
+                self.corrupt_steps.append(s)
+                if step is not None:
+                    raise
+                print(f"WARNING: skipping corrupt checkpoint: {e}",
+                      flush=True)
+                last_err = e
+        else:
+            raise CheckpointCorruptError(
+                f"no checkpoint in {self.dir} survived verification "
+                f"(last failure: {last_err})")
+        want_fp = _treedef_fp(template)
+        have_fp = payload.get("treedef_repr")
+        if have_fp is not None and have_fp != want_fp:
+            raise ValueError(
+                f"checkpoint step {payload['step']} was written for a "
+                f"different tree structure:\n  saved:    {have_fp[:200]}..."
+                f"\n  template: {want_fp[:200]}...\n(same leaf count, "
+                f"different treedef — restoring would silently permute "
+                f"state leaves)")
         out = []
         sh_leaves = (treedef.flatten_up_to(shardings)
                      if shardings is not None else [None] * len(leaves))
-        for i, (tmpl, sh) in enumerate(zip(leaves, sh_leaves)):
-            arr = np.load(os.path.join(d, f"leaf_{i}.npy"))
+        for i, (arr, tmpl, sh) in enumerate(zip(arrs, leaves, sh_leaves)):
             tshape = tuple(getattr(tmpl, "shape", arr.shape))
             if arr.shape != tshape:
                 # elastic pod-count change: leading replica dim broadcast/cut
                 if arr.shape[1:] == tshape[1:]:
                     if arr.shape[0] < tshape[0]:
-                        reps = [tshape[0] // arr.shape[0]] + \
+                        reps = [-(-tshape[0] // arr.shape[0])] + \
                             [1] * (arr.ndim - 1)
                         arr = np.tile(arr, reps)[: tshape[0]]
                     else:
@@ -135,10 +327,16 @@ class Checkpointer:
         return jax.tree_util.tree_unflatten(treedef, out), payload["extras"]
 
     def prune(self, keep: int = 3):
-        """Keep only the newest ``keep`` checkpoints."""
-        steps = sorted(
-            int(n.split("_")[1]) for n in os.listdir(self.dir)
-            if n.startswith("step_") and not n.endswith(".tmp"))
-        for s in steps[:-keep]:
+        """Keep only the newest ``keep`` checkpoints — but never remove
+        the step LATEST points to (restore's anchor), and clean leftover
+        ``.tmp`` directories from crashed writers."""
+        for n in os.listdir(self.dir):
+            if n.startswith("step_") and n.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.dir, n), ignore_errors=True)
+        protect = self.latest_step()
+        steps = self._step_dirs()
+        for s in steps[:-keep] if keep > 0 else steps:
+            if s == protect:
+                continue
             shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
                           ignore_errors=True)

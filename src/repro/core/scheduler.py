@@ -248,6 +248,19 @@ class Scheduler:
                 else self._full_bytes)
         return byte_budget(self.cfg, bandwidth_mbps, full)
 
+    # ------------------------------------------------------------------
+    # preemption-safe host state
+    # ------------------------------------------------------------------
+    def snapshot(self) -> dict:
+        """The scheduler's mutable host state — what a checkpoint must
+        carry for a restart to replay identically (everything else here
+        is derived from the config and group sizes at construction)."""
+        return {"sync_interval": int(self.sync_interval)}
+
+    def restore_snapshot(self, snap: dict):
+        self.sync_interval = int(snap.get("sync_interval",
+                                          self.cfg.sync_interval_init))
+
     def adapt_interval(self, divergence: float, div_ref: float) -> int:
         """Paper eq (9) control: grow H when divergence is small, shrink
         when it exceeds the threshold band."""

@@ -482,6 +482,15 @@ class Trainer:
         self._arg_specs[kind] = (jax.tree.map(_array_spec, state),
                                  jax.tree.map(_array_spec, batch))
 
+    def seed_arg_specs(self, kind: str, state_like, batch_like):
+        """Record the (state, batch) arg specs for ``kind`` WITHOUT a live
+        step — ``state_like`` / ``batch_like`` may be ShapeDtypeStruct
+        pytrees (only shape/dtype are read on a pod mesh).  The elastic
+        membership path uses this to make a freshly-built new-P trainer
+        :meth:`warm_compile`-able before it has ever stepped, so the whole
+        P-change transition compiles in the background."""
+        self._record_specs(kind, state_like, batch_like)
+
     def step(self, state, batch, plan: Union[SyncPlan, ExecPlan],
              kind: str = "grad_sync"):
         """Execute one step kind under ``plan``.  The plan rides as data;

@@ -115,3 +115,15 @@ class TokenPipeline:
 
     def restore(self, snap: dict):
         self.state = PipelineState(**snap)
+
+    # -- elastic membership ----------------------------------------------
+    def resized(self, batch_rows: int) -> "TokenPipeline":
+        """A new pipeline with the batch re-balanced to ``batch_rows``
+        (elastic pod-count change keeps rows-per-pod constant), resuming
+        at this pipeline's exact stream position — sample contents stay
+        deterministic in (seed, step, row)."""
+        shape = dataclasses.replace(self.shape, global_batch=batch_rows)
+        out = TokenPipeline(self.model, shape, seed=self.seed,
+                            mesh=self.mesh)
+        out.restore(self.snapshot())
+        return out

@@ -111,6 +111,36 @@ class ClusterState:
             return True
         return False
 
+    # ------------------------------------------------------------------ #
+    # preemption-safe host state                                         #
+    # ------------------------------------------------------------------ #
+    def snapshot(self) -> dict:
+        """JSON-able mutable state: warm-start centroids, the hysteresis
+        anchor (current assignments) and the churn counters.  Restoring
+        this after a preemption keeps the clustering trajectory — and the
+        omega weights it feeds — identical to an uninterrupted run."""
+        return {
+            "centroids": (None if self.centroids is None
+                          else [[float(v) for v in row]
+                                for row in self.centroids]),
+            "assignments": (None if self.assignments is None
+                            else list(self.assignments)),
+            "updates": self.updates,
+            "churn": self.churn,
+            "reclusters": self.reclusters,
+        }
+
+    def restore_snapshot(self, snap: dict):
+        cent = snap.get("centroids")
+        self.centroids = (None if cent is None
+                          else np.asarray(cent, dtype=np.float64))
+        assign = snap.get("assignments")
+        self.assignments = None if assign is None else [int(a)
+                                                        for a in assign]
+        self.updates = int(snap.get("updates", 0))
+        self.churn = int(snap.get("churn", 0))
+        self.reclusters = int(snap.get("reclusters", 0))
+
     def _require_assignments(self) -> List[int]:
         if self.assignments is None:
             raise RuntimeError("ClusterState.update() has not been called")

@@ -26,10 +26,22 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
-def make_mesh(shape, axes):
-    """Arbitrary mesh (tests / small simulations)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         **_axis_type_kwargs(len(axes)))
+def make_mesh(shape, axes, devices=None):
+    """Arbitrary mesh (tests / small simulations).
+
+    ``devices``: explicit device list — the elastic-membership path builds
+    a smaller mesh over the surviving subset of ``jax.devices()`` after a
+    pod drops out (jax.make_mesh always spans the full inventory)."""
+    shape, axes = tuple(shape), tuple(axes)
+    if devices is None:
+        return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
+    import numpy as np
+    need = int(np.prod(shape))
+    if len(devices) < need:
+        raise ValueError(f"mesh {shape} needs {need} devices, "
+                         f"got {len(devices)}")
+    grid = np.asarray(devices[:need], dtype=object).reshape(shape)
+    return jax.sharding.Mesh(grid, axes, **_axis_type_kwargs(len(axes)))
 
 
 # Hardware constants for the roofline analysis (TPU v5e)

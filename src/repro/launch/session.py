@@ -31,12 +31,17 @@ class TrainSession:
 
     def __init__(self, model, run: RunConfig, mesh=None,
                  strategy: Union[str, SyncStrategy] = "acesync",
-                 n_edge_devices: int = 8, seed: int = 0):
+                 n_edge_devices: int = 8, seed: int = 0,
+                 fault_schedule=None, elastic: bool = True,
+                 blocking_replans: bool = False):
         self.model = model
         self.run_config = run
         self.mesh = mesh
         self.loop = TrainLoop(model, run, mesh=mesh, strategy=strategy,
-                              n_edge_devices=n_edge_devices, seed=seed)
+                              n_edge_devices=n_edge_devices, seed=seed,
+                              fault_schedule=fault_schedule,
+                              elastic=elastic,
+                              blocking_replans=blocking_replans)
         self.pipeline = TokenPipeline(model, run.shape, seed=seed)
         self._rng = jax.random.PRNGKey(run.seed)
         self.state = None
@@ -47,6 +52,8 @@ class TrainSession:
                     mesh=None, *, smoke: bool = True, seq_len: int = 256,
                     batch: int = 8, steps: int = 100,
                     n_edge_devices: int = 8, seed: int = 0,
+                    fault_schedule=None, elastic: bool = True,
+                    blocking_replans: bool = False,
                     **run_kw) -> "TrainSession":
         """Build a session from an architecture name + strategy spec."""
         cfg = (SMOKE_ARCHS if smoke else ARCHS)[arch]
@@ -55,7 +62,9 @@ class TrainSession:
         run = RunConfig(model=cfg, shape=shape, total_steps=steps, **run_kw)
         model = build_model(cfg, run)
         return cls(model, run, mesh=mesh, strategy=strategy,
-                   n_edge_devices=n_edge_devices, seed=seed)
+                   n_edge_devices=n_edge_devices, seed=seed,
+                   fault_schedule=fault_schedule, elastic=elastic,
+                   blocking_replans=blocking_replans)
 
     # ---- lifecycle ------------------------------------------------------
     @property
@@ -83,8 +92,19 @@ class TrainSession:
         return self
 
     def finish(self):
-        """Flush pending checkpoint writes."""
+        """Flush pending checkpoint writes (re-raises a failed write)."""
         self.loop.ckpt.wait()
+
+    def save_now(self):
+        """Force a full-state checkpoint at the current step (blocking)."""
+        import jax as _jax
+        step = int(_jax.device_get(
+            _jax.tree.leaves(self.state["step"])[0].reshape(-1)[0]))
+        if self.loop._pipeline is None:
+            self.loop._pipeline = self.pipeline
+        self.loop.ckpt.save(step, self.state,
+                            extras=self.loop.ckpt_extras(), blocking=True)
+        return step
 
     # ---- results --------------------------------------------------------
     @property

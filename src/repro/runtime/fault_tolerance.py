@@ -5,13 +5,16 @@ here every decision path is implemented and unit-tested against simulated
 telemetry, and the launcher (launch/train.py) consumes them:
 
   * HeartbeatMonitor  — per-pod liveness from step-completion timestamps;
-    marks a pod dead after ``timeout_s`` silence.
+    marks a pod dead after ``timeout_s`` silence, and carries an explicit
+    register/rejoin path so a preempted pod coming back (or a pod id the
+    monitor has never seen) re-enters cleanly instead of KeyError-ing.
   * StragglerDetector — robust (median + MAD) step-time outlier detection;
     feeds the reliability weights omega (paper eq. 8) so persistent
     stragglers are down-weighted instead of stalling the ring.
-  * ElasticPlanner    — maps a failure event to a new mesh plan: drop the
-    dead pod, re-balance the batch, restart from the latest checkpoint
-    (the checkpointer re-shards pod-dim leaves automatically).
+  * ElasticPlanner    — maps a membership event (failure OR rejoin) to a
+    new mesh plan: drop/re-add the pod, re-balance the batch; the
+    launcher re-derives ring hops and re-keys the compiled step through
+    the bucket-signature path (checkpointer re-shards pod-dim leaves).
 """
 from __future__ import annotations
 
@@ -36,9 +39,40 @@ class HeartbeatMonitor:
         self.timeout_s = timeout_s
         self.pods = {i: PodStatus(i, now) for i in range(n_pods)}
 
+    def register(self, pod_id: int, now: Optional[float] = None):
+        """Explicit (re)join: a brand-new pod id gets a status record; a
+        known-dead pod is resurrected with its stale step times cleared —
+        pre-preemption timings would poison the straggler stats of the
+        restarted pod (fresh host, cold caches, different neighbours)."""
+        now = now if now is not None else time.time()
+        st = self.pods.get(pod_id)
+        if st is None:
+            self.pods[pod_id] = PodStatus(pod_id, now)
+            return
+        if not st.alive:
+            st.alive = True
+            st.step_times = []
+        st.last_seen = now
+
+    def drop(self, pod_id: int):
+        """Forget a pod entirely (it left the fleet for good)."""
+        self.pods.pop(pod_id, None)
+
+    def mark_dead(self, pod_id: int):
+        """Force-mark a pod dead (fault injection / external signal)."""
+        st = self.pods.get(pod_id)
+        if st is not None:
+            st.alive = False
+
     def beat(self, pod_id: int, step_time_s: float,
              now: Optional[float] = None):
-        st = self.pods[pod_id]
+        """Record a step completion.  Unknown or previously-dead pods are
+        routed through :meth:`register` first — a rejoined pod's beat must
+        never raise, and must not resurrect stale timing state."""
+        st = self.pods.get(pod_id)
+        if st is None or not st.alive:
+            self.register(pod_id, now)
+            st = self.pods[pod_id]
         st.last_seen = now if now is not None else time.time()
         st.step_times.append(step_time_s)
         if len(st.step_times) > 256:
@@ -59,10 +93,20 @@ class HeartbeatMonitor:
 
 
 class StragglerDetector:
-    """Median/MAD outlier detection over recent step times."""
+    """Median/MAD outlier detection over recent step times.
 
-    def __init__(self, threshold: float = 3.0):
+    ``mad_floor_frac`` guards the near-zero-MAD regime: when every pod
+    steps in statistically identical time the raw MAD collapses toward 0
+    and any ulp of jitter would divide into a huge z-score, spuriously
+    flagging healthy pods.  The deviation scale is floored at this
+    fraction of the median step time, so only pods slower by a meaningful
+    margin can be flagged at all.
+    """
+
+    def __init__(self, threshold: float = 3.0,
+                 mad_floor_frac: float = 0.01):
         self.threshold = threshold
+        self.mad_floor_frac = mad_floor_frac
 
     def straggle_factors(self, monitor: HeartbeatMonitor) -> Dict[int, float]:
         pods = monitor.alive_pods()
@@ -79,10 +123,14 @@ class StragglerDetector:
 
     def stragglers(self, monitor: HeartbeatMonitor) -> List[int]:
         f = self.straggle_factors(monitor)
+        if not f:
+            return []
         vals = np.array(list(f.values()))
-        mad = float(np.median(np.abs(vals - np.median(vals)))) + 1e-9
+        med = float(np.median(vals))
+        mad = float(np.median(np.abs(vals - med)))
+        scale = max(mad, self.mad_floor_frac * max(med, 1e-12), 1e-12)
         return [i for i, v in f.items()
-                if (v - np.median(vals)) / mad > self.threshold]
+                if (v - med) / scale > self.threshold]
 
 
 @dataclasses.dataclass
@@ -105,16 +153,26 @@ class MeshPlan:
 
 
 class ElasticPlanner:
-    """Failure event -> new mesh plan + restart decision."""
+    """Membership event -> new mesh plan + restart decision."""
 
     def __init__(self, initial: MeshPlan):
         self.plan = initial
+        self.max_pods = initial.n_pods
 
     def on_pod_failure(self, dead_pods: Sequence[int]) -> MeshPlan:
         remaining = self.plan.n_pods - len(set(dead_pods))
         if remaining < 1:
             raise RuntimeError("all pods dead")
         self.plan = MeshPlan(n_pods=remaining, data=self.plan.data,
+                             model=self.plan.model)
+        return self.plan
+
+    def on_pod_join(self, n_joining: int = 1) -> MeshPlan:
+        """A preempted pod rejoined (or capacity was added): grow the pod
+        axis again, capped at the largest fleet this planner has seen —
+        the device inventory the launcher actually holds."""
+        grown = min(self.plan.n_pods + int(n_joining), self.max_pods)
+        self.plan = MeshPlan(n_pods=grown, data=self.plan.data,
                              model=self.plan.model)
         return self.plan
 
@@ -125,3 +183,11 @@ class ElasticPlanner:
         chips = self.plan.n_pods * self.plan.data * self.plan.model
         per = max(1, global_batch // max(chips, 1))
         return per * chips
+
+    def rebalanced_rows(self, global_rows: int, old_n_pods: int) -> int:
+        """Re-balance the batch ROW count across a pod-count change,
+        keeping rows-per-pod constant (batch rows shard over the pod and
+        data axes; the model axis replicates them)."""
+        slices_old = max(old_n_pods * self.plan.data, 1)
+        per = max(1, global_rows // slices_old)
+        return per * self.plan.n_pods * self.plan.data

@@ -231,3 +231,162 @@ def test_p3_trainer_grad_sync_param_hash_soak():
                        capture_output=True, text=True, timeout=900)
     assert r.returncode == 0, r.stderr[-3000:]
     assert "P3_SOAK_OK" in r.stdout
+
+
+# Preemption soak: kill the driver at step k (checkpoints at 5/10, the
+# newest one bit-rotted on disk + a crashed writer's .tmp left behind), a
+# FRESH loop restores from the newest checkpoint that VERIFIES and
+# continues — landing params, EF residuals and plan state BIT-identical
+# to the uninterrupted run on the same mesh.  ``blocking_replans`` pins
+# replan application to fixed steps so the plan/H trajectory is a pure
+# function of the state trajectory.
+PREEMPT_SOAK_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import tempfile
+import jax, numpy as np
+from repro.configs.base import ACESyncConfig
+from repro.launch.mesh import make_mesh
+from repro.launch.session import TrainSession
+import repro.runtime.faults as F
+
+STEPS = 14
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+
+
+def mk(d):
+    return TrainSession.from_config(
+        "paper-350m", strategy="acesync", mesh=mesh, steps=STEPS,
+        seq_len=32, batch=4, ckpt_dir=d, ckpt_every=5,
+        blocking_replans=True, acesync=ACESyncConfig(replan_every=4))
+
+
+def host(tree):
+    return [np.asarray(jax.device_get(l)) for l in jax.tree.leaves(tree)]
+
+
+# run A: uninterrupted
+dA = tempfile.mkdtemp()
+a = mk(dA); a.run(STEPS, log_every=100); a.finish()
+
+# run B: preempted after step 11 (checkpoints landed at 5 and 10)
+dB = tempfile.mkdtemp()
+b1 = mk(dB); b1.run(11, log_every=100); b1.finish()
+# the preemption tore a write and bit-rotted the newest checkpoint:
+os.makedirs(os.path.join(dB, "step_00000099.tmp"))
+d10 = os.path.join(dB, "step_00000010")
+biggest = max((n for n in os.listdir(d10) if n.startswith("leaf_")),
+              key=lambda n: os.path.getsize(os.path.join(d10, n)))
+idx = int(biggest.split("_")[1].split(".")[0])
+assert F.corrupt_checkpoint_leaf(dB, idx, step=10)
+
+# fresh process-equivalent: new session over the same ckpt dir
+b2 = mk(dB)
+b2.init()
+restored = int(jax.device_get(
+    jax.tree.leaves(b2.state["step"])[0].reshape(-1)[0]))
+assert restored == 5, f"should fall back to step 5, got {restored}"
+assert 10 in b2.loop.ckpt.corrupt_steps
+b2.run(STEPS - restored, log_every=100)
+b2.finish()
+
+for la, lb in zip(host(a.state["params"]), host(b2.state["params"])):
+    assert (la == lb).all(), "params diverged after restart-replay"
+for la, lb in zip(host(a.state["ace"].errors),
+                  host(b2.state["ace"].errors)):
+    assert (la == lb).all(), "EF residuals diverged after restart-replay"
+assert a.loop._plan.level_idx == b2.loop._plan.level_idx
+assert a.loop._plan.sync_interval == b2.loop._plan.sync_interval
+assert a.loop._steps_since_sync == b2.loop._steps_since_sync
+assert (a.loop.trainer.scheduler.sync_interval
+        == b2.loop.trainer.scheduler.sync_interval)
+print("PREEMPT_SOAK_OK")
+"""
+
+
+@pytest.mark.slow
+def test_preemption_restart_replay_bit_identical():
+    """Kill at step k, restore (with fallback past a corrupt newest
+    checkpoint), continue: bit-identical params + EF residuals + plan
+    state vs the uninterrupted run."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    r = subprocess.run([sys.executable, "-c", PREEMPT_SOAK_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "PREEMPT_SOAK_OK" in r.stdout
+
+
+# Elastic soak: P=3 -> pod 2 preempted at step 4 -> P=2 -> rejoin at
+# step 8 -> P=3.  Each transition re-derives the mesh/ring through a
+# per-pod-count trainer whose step is AOT-warmed in the background, so
+# the membership change adds ZERO foreground recompiles over the
+# fault-free baseline (compile_count stays flat; the new-P signature is
+# served from the warm AOT cache).
+ELASTIC_SOAK_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=12"
+import tempfile
+import jax, numpy as np
+from repro.launch.mesh import make_mesh
+from repro.launch.session import TrainSession
+from repro.runtime.faults import FaultSchedule
+
+STEPS = 14
+
+
+def run(faults):
+    mesh = make_mesh((3, 2, 2), ("pod", "data", "model"))
+    sess = TrainSession.from_config(
+        "paper-350m", strategy="acesync", mesh=mesh, steps=STEPS,
+        seq_len=32, batch=6, ckpt_dir=tempfile.mkdtemp(), ckpt_every=0,
+        fault_schedule=faults, blocking_replans=True)
+    sess.run(STEPS, log_every=100)
+    sess.finish()
+    return sess
+
+
+base = run(None)
+base_compiles = base.loop.compile_count()
+assert base.loop.membership_events == []
+
+faults = FaultSchedule.preempt_and_rejoin(pod=2, kill_step=4,
+                                          rejoin_step=8)
+sess = run(faults)
+loop = sess.loop
+ev = loop.membership_events
+assert [e["n_pods"] for e in ev] == [2, 3], ev
+assert all(e["served_from_warm_cache"] for e in ev), ev
+# the P-change added ZERO foreground recompiles over the baseline
+assert loop.compile_count() == base_compiles, \
+    (loop.compile_count(), base_compiles)
+assert loop.warm_compile_count() >= 2
+# mesh / ring hops / scheduler re-derived for the shrunken fleet
+tr2 = loop._trainers[2]
+assert tr2.n_pods == 2 and tr2.mesh.shape["pod"] == 2
+assert tr2.scheduler.n_pods == 2
+# batch re-balanced with membership (rows-per-slice constant), and back
+assert loop.trainer.n_pods == 3
+assert loop._pipeline.shape.global_batch == 6
+assert jax.tree.leaves(sess.state["params"])[0].shape[0] == 3
+assert all(np.isfinite(l) for l in sess.losses), sess.losses
+assert len(loop.faults.peek()) == 0
+# dead pod dropped out of the heartbeat feed while preempted
+assert 2 in loop.monitor.alive_pods()
+print("ELASTIC_SOAK_OK")
+"""
+
+
+@pytest.mark.slow
+def test_elastic_membership_zero_foreground_recompiles():
+    """P=3 -> P=2 -> P=3 under an injected preempt/rejoin: compile_count
+    stays flat vs the fault-free baseline, membership swaps are served
+    from the background-warmed AOT cache, ring/mesh re-derived."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    r = subprocess.run([sys.executable, "-c", ELASTIC_SOAK_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "ELASTIC_SOAK_OK" in r.stdout

@@ -152,3 +152,194 @@ class TestFaultTolerance:
         assert new.shape == (16, 16)
         assert pl.rebalanced_batch(512) == 512 // 2 * 2 // 1 or True
         assert pl.rebalanced_batch(512) % (16 * 16) == 0
+
+
+class TestCheckpointIntegrity:
+    """Corruption detection, fallback and crash-mid-save behaviour."""
+
+    def _save_two(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        state = {"a": jnp.arange(512, dtype=jnp.float32),
+                 "b": jnp.ones((64, 8))}
+        ck.save(5, state, extras={"tag": 5}, blocking=True)
+        ck.save(10, state, extras={"tag": 10}, blocking=True)
+        tmpl = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        return ck, state, tmpl
+
+    def test_crc_detects_bitflips_and_falls_back(self, tmp_path):
+        from repro.runtime.faults import corrupt_checkpoint_leaf
+        ck, state, tmpl = self._save_two(tmp_path)
+        path = corrupt_checkpoint_leaf(str(tmp_path), leaf=0, step=10)
+        assert path and path.endswith("leaf_0.npy")
+        # shallow verify still passes (file parses); deep catches it
+        assert ck.verify(10, deep=False)
+        assert not ck.verify(10, deep=True)
+        restored, extras = ck.restore(tmpl)
+        assert extras["tag"] == 5          # fell back to the older step
+        assert 10 in ck.corrupt_steps
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.arange(512, dtype=np.float32))
+
+    def test_truncated_leaf_falls_back(self, tmp_path):
+        from repro.runtime.faults import truncate_checkpoint_leaf
+        ck, state, tmpl = self._save_two(tmp_path)
+        assert truncate_checkpoint_leaf(str(tmp_path), leaf=1, step=10)
+        _, extras = ck.restore(tmpl)
+        assert extras["tag"] == 5
+
+    def test_explicit_step_raises_on_corruption(self, tmp_path):
+        from repro.checkpoint.checkpointer import CheckpointCorruptError
+        from repro.runtime.faults import corrupt_checkpoint_leaf
+        ck, state, tmpl = self._save_two(tmp_path)
+        corrupt_checkpoint_leaf(str(tmp_path), leaf=0, step=10)
+        with pytest.raises(CheckpointCorruptError):
+            ck.restore(tmpl, step=10)
+
+    def test_crash_mid_save_tmp_ignored_and_cleaned(self, tmp_path):
+        ck, state, tmpl = self._save_two(tmp_path)
+        # a killed writer leaves step_<N>.tmp behind
+        junk = tmp_path / "step_00000015.tmp"
+        junk.mkdir()
+        (junk / "leaf_0.npy").write_bytes(b"partial")
+        assert ck.latest_step() == 10      # .tmp never visible to readers
+        _, extras = ck.restore(tmpl)
+        assert extras["tag"] == 10
+        ck.prune(keep=2)
+        assert not junk.exists()           # prune cleans crashed writers
+
+    def test_latest_pointer_lost_falls_back_to_scan(self, tmp_path):
+        ck, state, tmpl = self._save_two(tmp_path)
+        os.remove(tmp_path / "LATEST")
+        assert ck.latest_step() == 10
+        (tmp_path / "LATEST").write_text("step_garbage")
+        assert ck.latest_step() == 10
+
+    def test_prune_never_removes_latest_target(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        state = {"a": jnp.zeros(4)}
+        for s in (1, 2, 3, 4):
+            ck.save(s, state, blocking=True)
+        # LATEST pinned at an older step (e.g. newer saves raced a crash)
+        (tmp_path / "LATEST").write_text("step_00000002")
+        ck.prune(keep=1)
+        left = sorted(n for n in os.listdir(tmp_path)
+                      if n.startswith("step_"))
+        assert "step_00000002" in left     # restore's anchor survives
+        assert "step_00000004" in left     # newest kept by keep=1
+
+    def test_background_write_failure_is_loud(self, tmp_path):
+        ck = Checkpointer(str(tmp_path / "ck"))
+        blocker = tmp_path / "blocker"
+        blocker.write_text("not a directory")
+        ck.dir = str(blocker / "ck")       # every write attempt must fail
+        ck.BACKOFF_S = 0.001
+        ck.save(1, {"a": jnp.zeros(4)})
+        with pytest.raises(RuntimeError, match="failed in the background"):
+            ck.wait()
+        # error is surfaced once, then cleared
+        ck.wait()
+
+    def test_write_retries_transient_failure(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        ck.BACKOFF_S = 0.001
+        real_write, calls = ck._write, []
+
+        def flaky(step, leaves, payload):
+            calls.append(step)
+            if len(calls) < 3:
+                raise OSError("transient NFS blip")
+            return real_write(step, leaves, payload)
+
+        ck._write = flaky
+        ck.save(7, {"a": jnp.arange(4.0)}, blocking=True)  # must not raise
+        assert len(calls) == 3
+        assert ck.latest_step() == 7
+
+    def test_treedef_mismatch_raises(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        ck.save(1, {"a": jnp.zeros(4), "b": jnp.ones(4)}, blocking=True)
+        tmpl = {"x": jax.ShapeDtypeStruct((4,), jnp.float32),
+                "y": jax.ShapeDtypeStruct((4,), jnp.float32)}
+        with pytest.raises(ValueError, match="different tree structure"):
+            ck.restore(tmpl)
+
+
+class TestFaultSchedule:
+    def test_unknown_kind_rejected(self):
+        from repro.runtime.faults import FaultEvent
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultEvent(3, "meteor_strike")
+
+    def test_due_delivers_once_in_order(self):
+        from repro.runtime.faults import (FaultEvent, FaultSchedule,
+                                          KILL_POD, REJOIN_POD)
+        fs = FaultSchedule([FaultEvent(8, REJOIN_POD, 1),
+                            FaultEvent(3, KILL_POD, 1)])
+        assert fs.due(2) == []
+        ev = fs.due(5)
+        assert [e.step for e in ev] == [3]
+        assert fs.due(5) == []             # at most once
+        assert [e.step for e in fs.due(100)] == [8]
+        assert len(fs) == 0 and len(fs.fired) == 2
+
+    def test_random_schedule_deterministic_and_paired(self):
+        from repro.runtime.faults import (FaultSchedule, KILL_POD,
+                                          REJOIN_POD)
+        a = FaultSchedule.random(seed=7, n_steps=40, n_pods=4, n_kills=2,
+                                 n_corruptions=1, n_delays=1)
+        b = FaultSchedule.random(seed=7, n_steps=40, n_pods=4, n_kills=2,
+                                 n_corruptions=1, n_delays=1)
+        assert a.peek() == b.peek()
+        kills = [e for e in a if e.kind == KILL_POD]
+        joins = [e for e in a if e.kind == REJOIN_POD]
+        assert len(kills) == len(joins) == 2
+        for k, j in zip(kills, joins):
+            assert j.step > k.step         # rejoin always after the kill
+            assert k.target != 0           # coordinator pod never killed
+
+    def test_preempt_and_rejoin_validates_order(self):
+        from repro.runtime.faults import FaultSchedule
+        with pytest.raises(ValueError):
+            FaultSchedule.preempt_and_rejoin(pod=1, kill_step=9,
+                                             rejoin_step=4)
+
+
+class TestFaultToleranceElastic:
+    def test_beat_unknown_pod_registers_instead_of_keyerror(self):
+        mon = HeartbeatMonitor(2, timeout_s=10)
+        mon.beat(5, 1.0)                   # pod id never seen: must not raise
+        assert 5 in mon.alive_pods()
+
+    def test_rejoin_clears_stale_step_times(self):
+        mon = HeartbeatMonitor(2, timeout_s=10)
+        for _ in range(5):
+            mon.beat(1, 9.0)
+        mon.mark_dead(1)
+        assert 1 not in mon.alive_pods()
+        mon.beat(1, 1.0)                   # rejoin via beat
+        assert 1 in mon.alive_pods()
+        # pre-preemption timings dropped: only the fresh beat remains
+        assert mon.pods[1].step_times == [1.0]
+
+    def test_mad_floor_suppresses_jitter_stragglers(self):
+        mon = HeartbeatMonitor(4, timeout_s=1e9)
+        for i in range(32):
+            for pod in range(4):
+                # statistically identical, ulp-level jitter only
+                mon.beat(pod, 1.0 + 1e-12 * ((i + pod) % 3))
+        det = StragglerDetector(threshold=3.0)
+        assert det.stragglers(mon) == []
+
+    def test_join_grows_capped_at_max(self):
+        pl = ElasticPlanner(MeshPlan(3, 2, 2))
+        assert pl.on_pod_failure([2]).n_pods == 2
+        assert pl.on_pod_join(1).n_pods == 3
+        assert pl.on_pod_join(5).n_pods == 3   # capped at the inventory
+
+    def test_rebalanced_rows_keeps_rows_per_slice(self):
+        pl = ElasticPlanner(MeshPlan(3, 2, 1))
+        pl.on_pod_failure([2])             # 3 -> 2 pods
+        assert pl.rebalanced_rows(6, old_n_pods=3) == 4
+        pl.on_pod_join(1)                  # back to 3
+        assert pl.rebalanced_rows(4, old_n_pods=2) == 6
