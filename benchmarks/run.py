@@ -19,7 +19,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
 # locks the device count at first use, so this must precede the jax
 # import (same trick as tests/test_multipod.py, in-process).
 if ("--multipod" in sys.argv or "--hierarchy" in sys.argv
-        or "--faults" in sys.argv) \
+        or "--faults" in sys.argv or "--audit" in sys.argv) \
         and "xla_force_host_platform_device_count" \
         not in os.environ.get("XLA_FLAGS", ""):
     _n_sim = 12 if "--faults" in sys.argv else 8
@@ -699,8 +699,42 @@ def bench_roofline_summary():
         f"@{worst['roofline_frac']:.3f}")
 
 
+def bench_audit(out_path=None, fail_on_violation=False):
+    """Graph auditor over the shipped strategies on the simulated (2,2,2)
+    meshes (see ``repro.analysis``): collective schema vs the ExecPlan's
+    analytic schedule, donation aliasing, host-sync lint, recompile
+    hazards, Pallas BlockSpec sweep.  Writes AUDIT.json to
+    benchmarks/results/ and mirrors it at the repo root."""
+    from repro.analysis import run_audit
+
+    t0 = time.perf_counter()
+    report = run_audit()
+    us = (time.perf_counter() - t0) * 1e6
+    payload = report.to_dict()
+    payload["backend"] = jax.default_backend()
+    out = out_path or os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "results",
+        "AUDIT.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {out}", flush=True)
+    root_out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "..", "AUDIT.json")
+    with open(root_out, "w") as f:
+        json.dump(payload, f, indent=1)
+    row("graph_audit", us, report.summary().replace(",", ";"))
+    if not report.ok and fail_on_violation:
+        raise SystemExit(report.summary())
+    return report
+
+
 def main() -> None:
     print("name,us_per_call,derived")
+    if "--audit" in sys.argv:
+        bench_audit(
+            fail_on_violation="--fail-on-violation" in sys.argv)
+        return
     if "--codecs" in sys.argv:
         bench_codecs()
         return

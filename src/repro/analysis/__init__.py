@@ -1,0 +1,42 @@
+"""Static-analysis passes over the train step's jaxpr / compiled HLO.
+
+The graph auditor proves the hot path's contracts instead of trusting
+them: collectives match the ExecPlan's analytic schedule, donated
+buffers really alias, no host syncs hide on the non-blocking loop, the
+plan cannot widen the compiled-step cache, and every Pallas BlockSpec
+tiles its operands exactly.
+
+    from repro.analysis import run_audit
+    report = run_audit()
+    assert report.ok, report.summary()
+
+CLI: ``scripts/audit.py`` / ``python benchmarks/run.py --audit``.
+"""
+from repro.analysis.report import AuditReport, Violation
+from repro.analysis.hlo import (CollectiveRecord, CostReport, analyze,
+                                extract_collectives, permute_direction)
+from repro.analysis.collectives import audit_collectives, expected_schedule
+from repro.analysis.donation import (audit_donation,
+                                     parse_input_output_aliases)
+from repro.analysis.host_sync import (audit_hlo_callbacks, audit_host_sync,
+                                      audit_jaxpr_callbacks)
+from repro.analysis.recompile import (audit_exec_plan, audit_plan_pair,
+                                      audit_trace_constants)
+from repro.analysis.pallas_audit import (audit_kernels, capture_pallas_calls,
+                                         check_record)
+from repro.analysis.lint_rules import audit_conventions
+from repro.analysis.driver import (DEFAULT_STRATEGIES, STRATEGY_MESHES,
+                                   audit_strategy, run_audit)
+
+__all__ = [
+    "AuditReport", "Violation",
+    "CollectiveRecord", "CostReport", "analyze", "extract_collectives",
+    "permute_direction",
+    "audit_collectives", "expected_schedule",
+    "audit_donation", "parse_input_output_aliases",
+    "audit_hlo_callbacks", "audit_host_sync", "audit_jaxpr_callbacks",
+    "audit_exec_plan", "audit_plan_pair", "audit_trace_constants",
+    "audit_kernels", "capture_pallas_calls", "check_record",
+    "audit_conventions",
+    "DEFAULT_STRATEGIES", "STRATEGY_MESHES", "audit_strategy", "run_audit",
+]

@@ -1,0 +1,93 @@
+"""Donation/aliasing audit: donated buffers must alias, not copy.
+
+The train step donates the state (``donate_argnums=(0,)``) so the
+optimizer update happens in place — at 350M-parameter scale a silent copy
+doubles the state's HBM footprint and adds a full read+write per step.
+XLA records honoured donations in the executable's
+``input_output_alias`` header; a donated parameter that is missing from
+it was silently copied (dtype change, layout mismatch, or a consumer
+that outlives the write).
+
+The pass parses the compiled module header and checks every donated
+state leaf above a size floor is aliased.  Scalar leaves (step counter,
+interval state) are exempt by the floor: their copies are free and XLA
+legitimately folds some of them.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Sequence, Set, Tuple
+
+from repro.analysis.report import AuditReport
+
+PASS = "donation_alias"
+
+# leaves under this many bytes (GLOBAL, pre-sharding) are not worth an
+# alias: scalars and tiny vectors the compiler may fold
+MIN_ALIAS_BYTES = 4096
+
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{[\d,\s]*\}:\s*\(\s*(\d+)\s*,\s*\{[\d,\s]*\}\s*"
+    r"(?:,\s*(may-alias|must-alias)\s*)?\)")
+
+
+def parse_input_output_aliases(hlo_text: str) -> Set[int]:
+    """Parameter numbers the executable aliases to an output.
+
+    The header lives on the ``HloModule`` line:
+    ``input_output_alias={ {0}: (0, {}, may-alias), {1}: (1, {}, ...) }``
+    (output tuple index -> (param number, param index, kind)).
+    """
+    aliased: Set[int] = set()
+    for line in hlo_text.splitlines():
+        if "input_output_alias=" not in line:
+            continue
+        start = line.index("input_output_alias={") + len("input_output_alias=")
+        # brace-match the alias map (the module line carries other {...}
+        # attributes after it)
+        depth, j = 0, start
+        while j < len(line):
+            if line[j] == "{":
+                depth += 1
+            elif line[j] == "}":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        block = line[start:j + 1]
+        for m in _ALIAS_ENTRY_RE.finditer(block):
+            aliased.add(int(m.group(1)))
+        break
+    return aliased
+
+
+def audit_donation(compiled_text: str, donated: Sequence[Tuple[str, int]],
+                   report: AuditReport, where: str = "step",
+                   min_bytes: int = MIN_ALIAS_BYTES) -> Dict[str, object]:
+    """Check every donated leaf is aliased in the executable.
+
+    ``donated``: (leaf_path, nbytes) per donated parameter, in the jit
+    flattening order — donated argument 0's leaves are parameters
+    ``0..len(donated)-1`` of the entry computation.
+    """
+    report.ran(PASS)
+    aliased = parse_input_output_aliases(compiled_text)
+    missing: List[Tuple[int, str, int]] = []
+    for i, (path, nbytes) in enumerate(donated):
+        if nbytes < min_bytes:
+            continue
+        if i not in aliased:
+            missing.append((i, path, nbytes))
+    for i, path, nbytes in missing:
+        report.add(PASS, where,
+                   f"donated buffer '{path}' ({nbytes} B) is NOT aliased "
+                   f"in the executable — XLA made a silent copy",
+                   details={"param_number": i, "leaf": path,
+                            "nbytes": nbytes})
+    if not aliased and donated:
+        report.add(PASS, where,
+                   "executable has no input_output_alias map at all — "
+                   "donation was dropped entirely",
+                   details={"n_donated": len(donated)})
+    return {"n_donated": len(donated), "n_aliased_params": len(aliased),
+            "n_missing": len(missing)}

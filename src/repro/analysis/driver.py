@@ -1,0 +1,163 @@
+"""Audit driver: lower the real train step per strategy, run every pass.
+
+For each shipped strategy, the driver builds the smoke trainer on its
+production-shaped simulated mesh, lowers + compiles the representative
+step exactly the way :mod:`repro.launch.dryrun` and ``warm_compile`` do,
+and runs the collective-schema, donation, host-sync (HLO side) and
+recompile passes against the compiled module.  The source-level passes
+(TrainLoop host-sync lint, Pallas BlockSpec sweep, AST convention lint)
+run once, globally.
+
+Entry point: :func:`run_audit` -> :class:`AuditReport` (serialized to
+``AUDIT.json`` by ``scripts/audit.py`` / ``benchmarks/run.py --audit``).
+
+Requires >= 8 simulated devices — set
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` before jax
+imports (the CLIs do this for you).
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.analysis.report import AuditReport
+
+# (mesh shape, axis names) per shipped strategy: the smallest meshes
+# exercising every schedule feature (flat fleet ring + hier two-tier)
+STRATEGY_MESHES: Dict[str, Tuple[Tuple[int, ...], Tuple[str, ...]]] = {
+    "fullsync": ((2, 2, 2), ("pod", "data", "model")),
+    "acesync": ((2, 2, 2), ("pod", "data", "model")),
+    "acesync_hier": ((2, 2, 2), ("pod", "edge", "data")),
+}
+
+DEFAULT_STRATEGIES = tuple(STRATEGY_MESHES)
+
+AUDIT_ARCH = "paper-350m"
+AUDIT_SEQ_LEN = 64
+AUDIT_BATCH = 4
+
+
+def _require_devices(n: int) -> None:
+    import jax
+    have = len(jax.devices())
+    if have < n:
+        raise RuntimeError(
+            f"audit needs {n} simulated devices, found {have}: set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            f"before any jax import (scripts/audit.py does this)")
+
+
+def _leaf_path(path) -> str:
+    import jax
+    return jax.tree_util.keystr(path)
+
+
+def _build_step(strategy: str):
+    """Lower + compile the representative train step for ``strategy`` on
+    its audit mesh; returns (compiled_text, ep, trainer, mesh)."""
+    import jax
+    import numpy as np
+
+    from repro.configs import SMOKE_ARCHS
+    from repro.configs.base import RunConfig, ShapeConfig
+    from repro.core.trainer import Trainer
+    from repro.launch.mesh import make_mesh
+    from repro.models.registry import build_model
+
+    shape_dims, axis_names = STRATEGY_MESHES[strategy]
+    _require_devices(int(np.prod(shape_dims)))
+    mesh = make_mesh(shape_dims, axis_names)
+    cfg = SMOKE_ARCHS[AUDIT_ARCH]
+    shape = ShapeConfig("audit", AUDIT_SEQ_LEN, AUDIT_BATCH, "train")
+    run = RunConfig(model=cfg, shape=shape)
+    model = build_model(cfg, run)
+    trainer = Trainer(model, run, mesh=mesh, strategy=strategy)
+
+    plan = trainer.default_plan(bandwidth_mbps=50.0)
+    ep = trainer.exec_plan(plan)
+    kind = trainer.strategy.representative_kind
+    trainer.seed_arg_specs(kind, trainer.state_specs(),
+                           model.input_specs(shape))
+    fn = trainer.jit_step(ep, kind)
+    state_spec, batch_spec = trainer._arg_specs[kind]
+    compiled = fn.lower(state_spec, batch_spec,
+                        trainer.plan_arg_specs(ep)).compile()
+    return compiled.as_text(), ep, trainer, mesh, state_spec
+
+
+def _donated_leaves(state_spec) -> list:
+    """(path, global nbytes) per donated state leaf, in jit flatten
+    order — donated arg 0's leaves are entry parameters 0..N-1."""
+    import jax
+    import numpy as np
+    leaves = jax.tree_util.tree_flatten_with_path(state_spec)[0]
+    out = []
+    for path, leaf in leaves:
+        nbytes = int(np.prod(leaf.shape, dtype=np.int64)
+                     * np.dtype(leaf.dtype).itemsize) if leaf.shape else \
+            int(np.dtype(leaf.dtype).itemsize)
+        out.append((_leaf_path(path), nbytes))
+    return out
+
+
+def audit_strategy(strategy: str, report: AuditReport) -> dict:
+    """Compile one strategy's step and run the compiled-module passes."""
+    from repro.analysis import collectives, donation, host_sync, recompile
+
+    hlo_text, ep, trainer, mesh, state_spec = _build_step(strategy)
+    mesh_shape = tuple(mesh.shape.values())
+    axis_names = tuple(mesh.axis_names)
+    n_pods = trainer.n_pods
+    n_edge = int(mesh.shape.get("edge", 1))
+    where = f"step[{strategy}]"
+
+    info: dict = {"strategy": strategy,
+                  "mesh": dict(zip(axis_names, mesh_shape)),
+                  "n_pods": n_pods, "n_edge": n_edge}
+    info["collectives"] = collectives.audit_collectives(
+        hlo_text, ep, mesh_shape, axis_names, n_pods, n_edge, report,
+        where=where)
+    info["donation"] = donation.audit_donation(
+        hlo_text, _donated_leaves(state_spec), report, where=where)
+    host_sync.audit_hlo_callbacks(hlo_text, report, where=where)
+    info["recompile"] = recompile.audit_exec_plan(
+        ep, report, where=f"exec_plan[{strategy}]")
+    # a replan that only moves device data (omega) must keep the key
+    recompile.audit_plan_pair(
+        ep, ep.with_omega(ep.omega * 0.5), expect_same=True,
+        report=report, where=f"exec_plan[{strategy}]")
+    return info
+
+
+def run_audit(strategies: Optional[Sequence[str]] = None,
+              skip_compile: bool = False) -> AuditReport:
+    """The full audit: per-strategy compiled-module passes + the global
+    source-level passes.  ``skip_compile`` limits the run to the
+    source/kernel passes (no devices needed) — used by fast tests."""
+    report = AuditReport()
+    strategies = tuple(strategies or DEFAULT_STRATEGIES)
+
+    if not skip_compile:
+        for strategy in strategies:
+            try:
+                report.info[strategy] = audit_strategy(strategy, report)
+            except Exception as e:   # a failed lowering IS a violation
+                report.add("collective_schema", f"step[{strategy}]",
+                           f"failed to lower/compile the train step: "
+                           f"{type(e).__name__}: {e}")
+
+    # global source-level passes -------------------------------------
+    from repro.analysis import host_sync, lint_rules, pallas_audit
+
+    from repro.launch.train import TrainLoop
+    report.info["host_sync"] = host_sync.audit_host_sync(
+        TrainLoop, report, entry="run_steps", where="TrainLoop")
+
+    report.info["pallas"] = pallas_audit.audit_kernels(report)
+
+    import repro
+    # repro is a namespace package: no __file__, walk its path instead
+    src_root = os.path.abspath(next(iter(repro.__path__)))
+    report.info["lint"] = lint_rules.audit_conventions(src_root, report)
+    report.info["strategies"] = list(strategies)
+    return report

@@ -1,0 +1,251 @@
+"""Host-sync lint: no implicit device->host blocking in the hot path.
+
+The control loop's throughput contract (ROADMAP: non-blocking host loop)
+is that the steady-state step path never blocks on device data — metric
+fetches are lagged, replan polls are guarded by ``is_ready()``, and the
+only blocking fetches are the documented ones (startup, elastic
+transitions, the opt-in ``blocking_replans`` mode).
+
+This pass parses the loop class's source (AST), builds the ``self.*``
+call graph reachable from the body of the entry method's step loop, and
+flags blocking patterns — ``.item()``, ``jax.device_get``,
+``np.asarray``/``np.array`` on device values, ``block_until_ready`` —
+unless the enclosing method is (a) on the documented allowlist, (b) the
+call sits under an ``if ...blocking...`` opt-in branch, or (c) the method
+guards itself with a ``_device_ready`` readiness probe.
+
+A companion check walks a traced jaxpr for host-callback primitives
+(``pure_callback`` / ``io_callback`` / debug prints) that would stall the
+device inside the compiled step itself.
+"""
+from __future__ import annotations
+
+import ast
+import inspect
+import textwrap
+from typing import Dict, Iterable, List, Optional, Set
+
+from repro.analysis.report import AuditReport
+
+PASS = "host_sync"
+
+# methods allowed to block, with the documented reason (the audit report
+# carries the reason so the exemption stays reviewable)
+DEFAULT_ALLOWLIST: Dict[str, str] = {
+    "_flush_metrics":
+        "lagged fetch: reads metrics from >= 1 step ago, already on host",
+    "adapt_interval":
+        "lagged divergence fetch; the blocking branch is the opt-in "
+        "blocking_replans mode",
+    "refresh_plan":
+        "host-path strategies fetch importance on the replan cadence, "
+        "off the step dispatch path",
+    "restore_or_init": "startup only, before the step loop",
+    "_transfer_state":
+        "elastic membership transition: a full-fleet barrier by design",
+}
+
+_BLOCKING_ATTRS = {"device_get", "block_until_ready", "asarray", "array"}
+_GUARD_NAME = "_device_ready"
+
+
+def _attr_chain(node: ast.AST) -> str:
+    """'jax.device_get' for Attribute(Name('jax'), 'device_get') etc."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _is_blocking_call(call: ast.Call) -> Optional[str]:
+    """The blocking pattern this call matches, or None."""
+    fn = call.func
+    if isinstance(fn, ast.Attribute):
+        chain = _attr_chain(fn)
+        if fn.attr == "item" and not call.args:
+            return ".item()"
+        if fn.attr in _BLOCKING_ATTRS:
+            root = chain.split(".")[0]
+            # np.asarray / np.array / numpy.array: a device-array operand
+            # forces a synchronous transfer; jnp.asarray stays on device
+            if fn.attr in ("asarray", "array") and root not in ("np",
+                                                                "numpy"):
+                return None
+            return chain
+    return None
+
+
+class _MethodScan(ast.NodeVisitor):
+    """Per-method facts: self.* calls, blocking calls (+ their If
+    ancestors), and whether the method consults the readiness guard."""
+
+    def __init__(self) -> None:
+        self.self_calls: Set[str] = set()
+        self.blocking: List[tuple] = []   # (pattern, lineno, if_tests)
+        self.guarded = False
+        self._if_stack: List[str] = []
+
+    def visit_If(self, node: ast.If) -> None:
+        try:
+            test = ast.unparse(node.test)
+        except Exception:
+            test = ""
+        self._if_stack.append(test)
+        self.generic_visit(node)
+        self._if_stack.pop()
+
+    def visit_Call(self, node: ast.Call) -> None:
+        fn = node.func
+        if isinstance(fn, ast.Attribute) and \
+                isinstance(fn.value, ast.Name) and fn.value.id == "self":
+            self.self_calls.add(fn.attr)
+        if isinstance(fn, ast.Name) and fn.id == _GUARD_NAME:
+            self.guarded = True
+        if isinstance(fn, ast.Attribute) and fn.attr == _GUARD_NAME:
+            self.guarded = True
+        pat = _is_blocking_call(node)
+        if pat is not None:
+            self.blocking.append((pat, node.lineno,
+                                  list(self._if_stack)))
+        self.generic_visit(node)
+
+
+def _scan(nodes: Iterable[ast.AST]) -> _MethodScan:
+    scan = _MethodScan()
+    for n in nodes:
+        scan.visit(n)
+    return scan
+
+
+def _class_methods(tree: ast.Module) -> Dict[str, ast.FunctionDef]:
+    methods: Dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            methods.setdefault(node.name, node)
+    return methods
+
+
+def audit_host_sync(source, report: AuditReport, entry: str = "run_steps",
+                    allowlist: Optional[Dict[str, str]] = None,
+                    where: str = "TrainLoop") -> dict:
+    """Lint the hot path of a loop class for blocking host syncs.
+
+    ``source``: a class object or raw Python source.  The hot path is the
+    body of the for/while loops of ``entry`` plus every ``self.*`` method
+    transitively reachable from there.
+    """
+    report.ran(PASS)
+    if not isinstance(source, str):
+        source = inspect.getsource(source)
+    allowlist = DEFAULT_ALLOWLIST if allowlist is None else allowlist
+    tree = ast.parse(textwrap.dedent(source))
+    methods = _class_methods(tree)
+    entry_fn = methods.get(entry)
+    info = {"entry": entry, "n_methods": len(methods), "checked": []}
+    if entry_fn is None:
+        report.add(PASS, where, f"entry method '{entry}' not found",
+                   severity="warning")
+        return info
+
+    # the hot path starts INSIDE the entry's step loop: pre-loop code
+    # (checkpoint restore, the initial step-counter fetch) may block
+    loops = [n for n in ast.walk(entry_fn)
+             if isinstance(n, (ast.For, ast.While))]
+    seed = _scan(loops)
+    frontier = sorted(seed.self_calls)
+    reached: Set[str] = set()
+    while frontier:
+        name = frontier.pop()
+        if name in reached or name not in methods:
+            continue
+        reached.add(name)
+        sub = _scan([methods[name]])
+        frontier.extend(sorted(sub.self_calls - reached))
+
+    def _check(name: str, scan: _MethodScan, loop_body: bool) -> None:
+        info["checked"].append(name)
+        for pat, lineno, if_tests in scan.blocking:
+            if pat == ".item()":
+                report.add(PASS, f"{where}.{name}",
+                           f".item() forces a device sync on the hot "
+                           f"path (line {lineno})",
+                           details={"pattern": pat, "lineno": lineno})
+                continue
+            if name in allowlist:
+                continue
+            if any("blocking" in t for t in if_tests):
+                continue        # opt-in blocking branch (blocking_replans)
+            if scan.guarded:
+                continue        # polls readiness before fetching
+            report.add(PASS, f"{where}.{name}",
+                       f"blocking host sync '{pat}' reachable from the "
+                       f"non-blocking hot path (line {lineno})",
+                       details={"pattern": pat, "lineno": lineno,
+                                "in_loop_body": loop_body})
+
+    _check(f"{entry}:loop", seed, True)
+    for name in sorted(reached):
+        _check(name, _scan([methods[name]]), False)
+    info["allowlisted"] = sorted(set(reached) & set(allowlist))
+    return info
+
+
+# ---------------------------------------------------------------------------
+# traced-graph side: callbacks inside the compiled step
+# ---------------------------------------------------------------------------
+
+_CALLBACK_MARKERS = ("callback", "infeed", "outfeed")
+
+
+def _iter_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            sub = []
+            if hasattr(v, "eqns"):
+                sub = [v]
+            elif hasattr(v, "jaxpr"):
+                sub = [v.jaxpr]
+            elif isinstance(v, (list, tuple)):
+                sub = [x.jaxpr if hasattr(x, "jaxpr") else x
+                       for x in v if hasattr(x, "eqns")
+                       or hasattr(x, "jaxpr")]
+            for s in sub:
+                if hasattr(s, "eqns"):
+                    yield from _iter_eqns(s)
+
+
+def audit_jaxpr_callbacks(jaxpr, report: AuditReport,
+                          where: str = "step") -> int:
+    """Flag host-callback primitives inside a traced step jaxpr."""
+    report.ran(PASS)
+    closed = getattr(jaxpr, "jaxpr", jaxpr)
+    n = 0
+    for eqn in _iter_eqns(closed):
+        prim = eqn.primitive.name
+        if any(m in prim for m in _CALLBACK_MARKERS):
+            n += 1
+            report.add(PASS, where,
+                       f"host-callback primitive '{prim}' inside the "
+                       f"compiled step",
+                       details={"primitive": prim})
+    return n
+
+
+def audit_hlo_callbacks(hlo_text: str, report: AuditReport,
+                        where: str = "step") -> int:
+    """HLO fallback for :func:`audit_jaxpr_callbacks`: host callbacks
+    lower to custom-calls with a callback target."""
+    report.ran(PASS)
+    n = 0
+    for line in hlo_text.splitlines():
+        if "custom-call" in line and any(
+                m in line for m in _CALLBACK_MARKERS):
+            n += 1
+            report.add(PASS, where,
+                       "host-callback custom-call inside the compiled "
+                       "step", details={"hlo": line.strip()[:200]})
+    return n

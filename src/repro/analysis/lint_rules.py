@@ -1,0 +1,228 @@
+"""AST lint pack: repo conventions the generic linters can't encode.
+
+Three rules, each an AST walk over ``src/repro``:
+
+  * **no-python-rng** — ``random`` / ``np.random`` calls inside device
+    code (``core``, ``codecs``, ``kernels``, ``strategies``): Python RNG
+    inside a traced function is a trace constant, so every step replays
+    the value drawn at trace time.  Seeded ``np.random.default_rng`` in
+    host-side planning code is fine and exempted by module.
+  * **unregistered-plugin** — a concrete :class:`Codec` /
+    :class:`SyncStrategy` subclass (one that sets a non-empty ``name``)
+    must carry its ``@register_codec`` / ``@register_strategy``
+    decorator, or ``build_codec`` / ``resolve_strategy`` will not find
+    it and every string-keyed config silently falls back.
+  * **no-host-sync-in-device-plan** — modules on the device control
+    plane (``core/acesync.py``, anything defining ``device_replan_fn``)
+    must not call blocking host transfers; the whole point of the
+    device replan path is that it never leaves the accelerator.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.report import AuditReport
+
+PASS = "lint_rules"
+
+# device-code packages for the RNG rule (host-side launch/, data/,
+# runtime/, analysis/ may use seeded numpy RNG freely)
+_DEVICE_PKGS = ("core", "codecs", "kernels", "strategies")
+
+# host-planning modules inside device packages that legitimately draw
+# from a seeded host RNG (bucket shuffling, plan search)
+_RNG_EXEMPT = {"core/scheduler.py", "core/planexec.py", "core/cluster.py"}
+
+_BASES = {"Codec": "register_codec", "SyncStrategy": "register_strategy"}
+
+_BLOCKING = ("device_get", "block_until_ready")
+
+
+def _attr_chain(node: ast.AST) -> str:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def iter_source_files(root: str) -> Iterable[Tuple[str, str]]:
+    """Yield (relpath, source) for every .py under ``root``."""
+    for dirpath, _dirnames, filenames in os.walk(root):
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            full = os.path.join(dirpath, fn)
+            rel = os.path.relpath(full, root).replace(os.sep, "/")
+            try:
+                with open(full, "r") as fh:
+                    yield rel, fh.read()
+            except OSError:
+                continue
+
+
+# ---------------------------------------------------------------------------
+# rule 1: Python RNG in device code
+# ---------------------------------------------------------------------------
+
+
+def check_python_rng(rel: str, tree: ast.Module,
+                     report: AuditReport) -> None:
+    if rel.split("/")[0] not in _DEVICE_PKGS or rel in _RNG_EXEMPT:
+        return
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            chain = _attr_chain(node.func)
+            root = chain.split(".")[0]
+            if root == "random" or chain.startswith(("np.random.",
+                                                     "numpy.random.")):
+                report.add(PASS, f"{rel}:{node.lineno}",
+                           f"Python RNG '{chain}' in device code — a "
+                           f"trace constant, not per-step randomness; "
+                           f"use jax.random with a threaded key",
+                           details={"call": chain, "lineno": node.lineno})
+
+
+# ---------------------------------------------------------------------------
+# rule 2: Codec / SyncStrategy subclasses must be registered
+# ---------------------------------------------------------------------------
+
+
+def _class_name_attr(cls: ast.ClassDef) -> Optional[str]:
+    """The literal value of a ``name = "..."`` class attribute."""
+    for stmt in cls.body:
+        targets: List[ast.expr] = []
+        value: Optional[ast.expr] = None
+        if isinstance(stmt, ast.Assign):
+            targets, value = stmt.targets, stmt.value
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            targets, value = [stmt.target], stmt.value
+        for t in targets:
+            if isinstance(t, ast.Name) and t.id == "name":
+                if isinstance(value, ast.Constant) and \
+                        isinstance(value.value, str):
+                    return value.value
+    return None
+
+
+def check_registration(rel: str, tree: ast.Module,
+                       report: AuditReport) -> None:
+    # transitive base tracking within the module: FedAvg(_PeriodicStrategy)
+    # is still a SyncStrategy
+    kind_of: Dict[str, str] = {}      # class name -> base kind
+    classes = [n for n in ast.walk(tree) if isinstance(n, ast.ClassDef)]
+    changed = True
+    while changed:
+        changed = False
+        for cls in classes:
+            if cls.name in kind_of:
+                continue
+            for base in cls.bases:
+                bname = base.id if isinstance(base, ast.Name) else \
+                    getattr(base, "attr", "")
+                kind = _BASES.get(bname) or kind_of.get(bname)
+                if kind:
+                    kind_of[cls.name] = kind
+                    changed = True
+                    break
+    for cls in classes:
+        kind = kind_of.get(cls.name)
+        if not kind:
+            continue
+        concrete_name = _class_name_attr(cls)
+        if not concrete_name:
+            continue                  # abstract intermediate, no registry key
+        decorators = {_attr_chain(d.func) if isinstance(d, ast.Call)
+                      else _attr_chain(d) for d in cls.decorator_list}
+        if not any(d.split(".")[-1] == kind for d in decorators):
+            report.add(PASS, f"{rel}:{cls.lineno}",
+                       f"class {cls.name} (name={concrete_name!r}) is a "
+                       f"registry plugin but lacks @{kind} — string "
+                       f"configs will not resolve it",
+                       details={"class": cls.name, "name": concrete_name,
+                                "expected_decorator": kind})
+
+
+# ---------------------------------------------------------------------------
+# rule 3: no blocking host syncs on the device control plane
+# ---------------------------------------------------------------------------
+
+
+def _device_plan_functions(tree: ast.Module) -> Set[str]:
+    """Functions on the device control plane: device_replan_fn itself
+    plus every function it defines or calls inside the module."""
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and \
+                "device" in node.name and ("replan" in node.name
+                                           or "plan" in node.name):
+            names.add(node.name)
+    return names
+
+
+def check_device_plan_sync(rel: str, tree: ast.Module,
+                           report: AuditReport) -> None:
+    roots = _device_plan_functions(tree)
+    if not roots:
+        return
+    fns = {n.name: n for n in ast.walk(tree)
+           if isinstance(n, ast.FunctionDef)}
+    # transitive closure over module-level calls from the device roots
+    frontier, reach = sorted(roots), set()
+    while frontier:
+        name = frontier.pop()
+        if name in reach or name not in fns:
+            continue
+        reach.add(name)
+        for node in ast.walk(fns[name]):
+            if isinstance(node, ast.Call):
+                chain = _attr_chain(node.func)
+                if chain in fns:
+                    frontier.append(chain)
+    for name in sorted(reach):
+        for node in ast.walk(fns[name]):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _attr_chain(node.func)
+            leaf = chain.split(".")[-1]
+            blocking = (leaf in _BLOCKING
+                        or (leaf == "item" and not node.args
+                            and isinstance(node.func, ast.Attribute))
+                        or (leaf in ("asarray", "array")
+                            and chain.split(".")[0] in ("np", "numpy")))
+            if blocking:
+                report.add(PASS, f"{rel}:{node.lineno}",
+                           f"blocking host sync '{chain}' inside device "
+                           f"control-plane function '{name}' — the "
+                           f"device replan path must stay on device",
+                           details={"function": name, "call": chain,
+                                    "lineno": node.lineno})
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+_RULES = (check_python_rng, check_registration, check_device_plan_sync)
+
+
+def audit_conventions(src_root: str, report: AuditReport) -> dict:
+    """Run the whole lint pack over a ``src/repro`` tree."""
+    report.ran(PASS)
+    n_files = 0
+    skipped: List[str] = []
+    for rel, source in iter_source_files(src_root):
+        try:
+            tree = ast.parse(source)
+        except SyntaxError as e:
+            skipped.append(rel)
+            report.add(PASS, rel, f"unparseable: {e}", severity="warning")
+            continue
+        n_files += 1
+        for rule in _RULES:
+            rule(rel, tree, report)
+    return {"n_files": n_files, "skipped": skipped}

@@ -1,0 +1,311 @@
+"""Pallas kernel audit: BlockSpec tiling vs declared operand shapes.
+
+Every registered kernel carries implicit contracts the Mosaic compiler
+only partially enforces (and the interpreter not at all): each BlockSpec
+tile must divide its operand exactly per dimension, and the index map
+must keep every block inside the array for every grid point — an
+off-by-one index map reads out of bounds on hardware while silently
+clamping in interpret mode, which is exactly the class of bug a CPU CI
+cannot catch dynamically.
+
+The audit intercepts ``pl.pallas_call`` (no kernel body ever runs),
+records (grid, specs, operand shapes) for each call, and statically
+checks tiling and index-map bounds.  ``audit_kernels`` drives every
+public kernel entry point in ``repro.kernels`` through the interceptor
+on representative shapes.
+
+Scalar-prefetch index maps (the producer-fused gather path) are
+evaluated with a zero ref: the data-dependent ``perm[i]`` block index is
+checked at its lower bound only — the runtime range contract for perms
+(indices < NB+1) is pinned by the kernel tests, not this pass.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.analysis.report import AuditReport
+
+PASS = "pallas_blockspec"
+
+MAX_GRID_POINTS = 4096      # index-map evaluation cap per call
+
+
+@dataclasses.dataclass
+class PallasCallRecord:
+    kernel_name: str
+    grid: Tuple[int, ...]
+    in_specs: List[Any]
+    out_specs: List[Any]
+    in_shapes: List[Tuple[int, ...]]
+    out_shapes: List[Tuple[int, ...]]
+    num_scalar_prefetch: int = 0
+
+
+def _as_list(x) -> list:
+    if x is None:
+        return []
+    return list(x) if isinstance(x, (list, tuple)) else [x]
+
+
+class _ZeroRef:
+    """Stands in for the scalar-prefetch ref when evaluating index maps
+    statically: every lookup returns block index 0."""
+
+    def __getitem__(self, _):
+        return 0
+
+
+@contextlib.contextmanager
+def capture_pallas_calls():
+    """Intercept ``pl.pallas_call``: record call geometry, return zeros
+    of ``out_shape`` instead of executing.  Patch the module attribute —
+    kernel modules resolve ``pl.pallas_call`` at call time."""
+    records: List[PallasCallRecord] = []
+    orig = pl.pallas_call
+
+    def fake_pallas_call(kernel, *args, out_shape=None, grid=None,
+                         in_specs=None, out_specs=None, grid_spec=None,
+                         **kw):
+        nsp = 0
+        if grid_spec is not None:
+            grid = getattr(grid_spec, "grid", grid)
+            in_specs = getattr(grid_spec, "in_specs", in_specs)
+            out_specs = getattr(grid_spec, "out_specs", out_specs)
+            nsp = int(getattr(grid_spec, "num_scalar_prefetch", 0) or 0)
+
+        def run(*operands):
+            outs = _as_list(out_shape)
+            records.append(PallasCallRecord(
+                kernel_name=getattr(kernel, "__name__", repr(kernel)),
+                grid=tuple(int(g) for g in _as_list(grid)),
+                in_specs=_as_list(in_specs),
+                out_specs=_as_list(out_specs),
+                in_shapes=[tuple(x.shape) for x in operands[nsp:]],
+                out_shapes=[tuple(o.shape) for o in outs],
+                num_scalar_prefetch=nsp))
+            zeros = [jnp.zeros(o.shape, o.dtype) for o in outs]
+            if isinstance(out_shape, (list, tuple)):
+                return type(out_shape)(zeros)
+            return zeros[0]
+
+        return run
+
+    pl.pallas_call = fake_pallas_call
+    try:
+        yield records
+    finally:
+        pl.pallas_call = orig
+
+
+def _spec_geometry(spec) -> Tuple[Optional[tuple], Optional[Callable]]:
+    block = getattr(spec, "block_shape", None)
+    index_map = getattr(spec, "index_map", None)
+    if callable(block):         # defensively handle a swapped BlockSpec
+        block, index_map = index_map, block
+    return (tuple(block) if block is not None else None), index_map
+
+
+def _grid_points(grid: Tuple[int, ...]):
+    total = 1
+    for g in grid:
+        total *= max(int(g), 1)
+    if total <= MAX_GRID_POINTS:
+        idx = np.arange(total)
+    else:                       # sample ends + stride (bounds live there)
+        idx = np.unique(np.concatenate([
+            np.arange(64), np.arange(total - 64, total),
+            np.arange(0, total, max(total // MAX_GRID_POINTS, 1))]))
+    for flat in idx.tolist():
+        if not grid:
+            yield ()
+            continue
+        yield tuple(int(c) for c in np.unravel_index(flat, grid))
+
+
+def check_record(rec: PallasCallRecord, report: AuditReport,
+                 where: Optional[str] = None) -> None:
+    """Tile divisibility + index-map bounds for one captured call."""
+    where = where or rec.kernel_name
+    pairs = (list(zip(rec.in_specs, rec.in_shapes, ["in"] * 99))
+             + list(zip(rec.out_specs, rec.out_shapes, ["out"] * 99)))
+    for spec, shape, kind in pairs:
+        block, index_map = _spec_geometry(spec)
+        if block is None:       # whole-array spec: nothing to tile-check
+            continue
+        if len(block) != len(shape):
+            report.add(PASS, where,
+                       f"{kind} BlockSpec rank {len(block)} != operand "
+                       f"rank {len(shape)}",
+                       details={"block": list(block),
+                                "shape": list(shape)})
+            continue
+        bad_dims = [d for d, (b, s) in enumerate(zip(block, shape))
+                    if b is not None and int(s) % int(b) != 0]
+        if bad_dims:
+            report.add(PASS, where,
+                       f"{kind} block {tuple(block)} does not divide "
+                       f"operand shape {tuple(shape)}",
+                       details={"block": list(block),
+                                "shape": list(shape),
+                                "bad_dims": bad_dims})
+            continue
+        if index_map is None:
+            continue
+        nblocks = [int(s) // int(b) for b, s in zip(block, shape)]
+        extra = ((_ZeroRef(),) if rec.num_scalar_prefetch else ())
+        for point in _grid_points(rec.grid):
+            try:
+                out = index_map(*point, *extra)
+            except Exception as e:
+                report.add(PASS, where,
+                           f"index map raised at grid point {point}: "
+                           f"{type(e).__name__}: {e}")
+                break
+            out = out if isinstance(out, tuple) else (out,)
+            if len(out) != len(block):
+                report.add(PASS, where,
+                           f"index map returns {len(out)} block indices "
+                           f"for a rank-{len(block)} block")
+                break
+            idxs = []
+            for i in out:       # tracers/ZeroRef lookups stay unchecked
+                try:
+                    idxs.append(int(i))
+                except Exception:
+                    idxs.append(None)
+            oob = [d for d, (i, n) in enumerate(zip(idxs, nblocks))
+                   if i is not None and not 0 <= i < max(n, 1)]
+            if oob:
+                report.add(PASS, where,
+                           f"index map sends grid point {tuple(int(p) for p in point)} "
+                           f"out of bounds: block index {tuple(out)} vs "
+                           f"{nblocks} blocks",
+                           details={"grid_point": [int(p) for p in point],
+                                    "block_index": [i for i in idxs
+                                                    if i is not None],
+                                    "n_blocks": nblocks})
+                break
+
+
+def audit_records(records: Sequence[PallasCallRecord],
+                  report: AuditReport) -> None:
+    report.ran(PASS)
+    for rec in records:
+        check_record(rec, report)
+
+
+# ---------------------------------------------------------------------------
+# registered-kernel sweep
+# ---------------------------------------------------------------------------
+
+
+def _kernel_cases() -> Dict[str, Callable[[], None]]:
+    """One callable per public kernel entry point, on representative
+    shapes.  Each calls the RAW function (``__wrapped__`` under the jit
+    decorator) so the interceptor sees the eager ``pl.pallas_call``."""
+    from repro.kernels import decode, quantize, sign, topk_compress
+
+    R, L = 4 * decode.ROWS, decode.LANES
+    f32, i32 = jnp.float32, jnp.int32
+    g = jnp.zeros((R, L), f32)
+    e = jnp.zeros((R, L), f32)
+    s = jnp.zeros((R, 1), f32)
+    w = jnp.zeros((1, 1), f32)
+    q8 = jnp.zeros((R, L), jnp.int8)
+    p4 = jnp.zeros((R, L // 2), jnp.uint8)
+    p1 = jnp.zeros((R, L // 8), jnp.uint8)
+    acc_i = jnp.zeros((R, L), i32)
+    s_i = jnp.zeros((R, 1), i32)
+    k = 103
+    qk = jnp.zeros((R, k), f32)
+    ik = jnp.zeros((R, k), i32)
+    nb = 11
+    fb = jnp.zeros((nb + 1, L), f32)
+    perm = jnp.zeros((8,), i32)
+
+    def raw(fn):
+        return getattr(fn, "__wrapped__", fn)
+
+    return {
+        "quantize_int8_fused":
+            lambda: raw(quantize.quantize_int8_fused)(g, interpret=True),
+        "ef_int4_fused":
+            lambda: raw(quantize.ef_int4_fused)(g, e, gamma=1.0,
+                                                interpret=True),
+        "dequantize_int8":
+            lambda: raw(quantize.dequantize_int8)(q8, s, interpret=True),
+        "quantize_int8_gather":
+            lambda: raw(quantize.quantize_int8_gather)(
+                fb, fb, perm, gamma=1.0, rows=1, interpret=True),
+        "quantize_int8_gather_rows8":
+            lambda: raw(quantize.quantize_int8_gather)(
+                fb, fb, perm, gamma=1.0, rows=8, interpret=True),
+        "ef_int4_gather":
+            lambda: raw(quantize.ef_int4_gather)(
+                fb, fb, perm, gamma=1.0, rows=1, interpret=True),
+        "ef_sign_fused":
+            lambda: raw(sign.ef_sign_fused)(g, e, gamma=1.0,
+                                            interpret=True),
+        "ef_sign_gather":
+            lambda: raw(sign.ef_sign_gather)(
+                fb, fb, perm, gamma=1.0, rows=1, interpret=True),
+        "ef_topk_select":
+            lambda: raw(topk_compress.ef_topk_select)(
+                g, e, gamma=1.0, k=k, interpret=True),
+        "ef_topk_gather":
+            lambda: raw(topk_compress.ef_topk_gather)(
+                fb, fb, perm, gamma=1.0, k=k, rows=1, interpret=True),
+        "dequant_accum_int8_fused":
+            lambda: raw(decode.dequant_accum_int8_fused)(
+                g, q8, s, w, interpret=True),
+        "dequant_accum_int4_fused":
+            lambda: raw(decode.dequant_accum_int4_fused)(
+                g, p4, s, w, interpret=True),
+        "sign_vote_accum_fused":
+            lambda: raw(decode.sign_vote_accum_fused)(
+                g, s, p1, s, w, interpret=True),
+        "topk_scatter_accum_fused":
+            lambda: raw(decode.topk_scatter_accum_fused)(
+                g, qk, ik, s, w, interpret=True),
+        "dequant_accum_int8_fp_fused":
+            lambda: raw(decode.dequant_accum_int8_fp_fused)(
+                acc_i, q8, s, w, bits=16, interpret=True),
+        "dequant_accum_int4_fp_fused":
+            lambda: raw(decode.dequant_accum_int4_fp_fused)(
+                acc_i, p4, s, w, bits=16, interpret=True),
+        "sign_vote_accum_fp_fused":
+            lambda: raw(decode.sign_vote_accum_fp_fused)(
+                acc_i, s_i, p1, s, w, bits=16, interpret=True),
+    }
+
+
+def audit_kernels(report: AuditReport) -> dict:
+    """Capture + check every registered kernel entry point."""
+    report.ran(PASS)
+    cases = _kernel_cases()
+    checked, failed = [], []
+    for name, case in cases.items():
+        with capture_pallas_calls() as records:
+            try:
+                case()
+            except Exception as e:
+                failed.append(name)
+                report.add(PASS, name,
+                           f"kernel entry point failed under capture: "
+                           f"{type(e).__name__}: {e}")
+                continue
+        if not records:
+            report.add(PASS, name,
+                       "no pallas_call captured — entry point bypassed "
+                       "the kernel path", severity="warning")
+            continue
+        for rec in records:
+            check_record(rec, report, where=name)
+        checked.append(name)
+    return {"kernels_checked": checked, "kernels_failed": failed}

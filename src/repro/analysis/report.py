@@ -1,0 +1,90 @@
+"""Structured violation reporting for the graph auditor.
+
+Every auditor pass appends :class:`Violation` records to a shared
+:class:`AuditReport`; the driver serialises the report to ``AUDIT.json``
+and CI gates on ``report.ok``.  A pass that runs clean still registers
+itself (``report.ran(pass_name)``) so the artifact distinguishes "checked
+and clean" from "never ran".
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional
+
+SEVERITIES = ("error", "warning")
+
+
+@dataclasses.dataclass
+class Violation:
+    """One invariant breach found by a pass."""
+    pass_name: str              # which auditor pass fired
+    severity: str               # "error" gates CI; "warning" is advisory
+    where: str                  # strategy / function / kernel / file
+    message: str                # one-line human statement of the breach
+    details: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        assert self.severity in SEVERITIES, self.severity
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class AuditReport:
+    """Accumulates violations + per-pass info across auditor passes."""
+    violations: List[Violation] = dataclasses.field(default_factory=list)
+    info: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    passes: List[str] = dataclasses.field(default_factory=list)
+
+    def ran(self, pass_name: str) -> None:
+        if pass_name not in self.passes:
+            self.passes.append(pass_name)
+
+    def add(self, pass_name: str, where: str, message: str,
+            severity: str = "error",
+            details: Optional[Dict[str, Any]] = None) -> Violation:
+        v = Violation(pass_name, severity, where, message, details or {})
+        self.violations.append(v)
+        return v
+
+    def merge(self, other: "AuditReport") -> None:
+        self.violations.extend(other.violations)
+        for p in other.passes:
+            self.ran(p)
+        self.info.update(other.info)
+
+    def errors(self) -> List[Violation]:
+        return [v for v in self.violations if v.severity == "error"]
+
+    @property
+    def ok(self) -> bool:
+        """No error-severity violations (warnings do not gate)."""
+        return not self.errors()
+
+    def by_pass(self, pass_name: str) -> List[Violation]:
+        return [v for v in self.violations if v.pass_name == pass_name]
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "ok": self.ok,
+            "passes": list(self.passes),
+            "n_errors": len(self.errors()),
+            "n_warnings": len(self.violations) - len(self.errors()),
+            "violations": [v.to_dict() for v in self.violations],
+            "info": self.info,
+        }
+
+    def to_json(self, indent: int = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent, default=str)
+
+    def summary(self) -> str:
+        e, w = len(self.errors()), len(self.violations) - len(self.errors())
+        head = (f"audit: {len(self.passes)} passes, "
+                f"{e} errors, {w} warnings")
+        lines = [head]
+        for v in self.violations:
+            lines.append(f"  [{v.severity}] {v.pass_name} @ {v.where}: "
+                         f"{v.message}")
+        return "\n".join(lines)

@@ -13,7 +13,7 @@ estimator state is a few hundred scalars.
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional, Tuple, Union
+from typing import Dict, NamedTuple, Tuple, Union
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,7 @@ e' = g_ef - decompress(compress(g_ef)) stays in the local buffer.
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

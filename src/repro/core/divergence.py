@@ -13,7 +13,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.sync import POD_AXIS, _pod_info, fleet_axes
+from repro.core.sync import _pod_info, fleet_axes
 
 N_PROJ = 8
 

@@ -50,7 +50,7 @@ from repro.core import sync as S
 from repro.core import divergence as D
 from repro.core.planexec import ExecPlan, build_exec_plan
 from repro.core.scheduler import Scheduler, SyncPlan
-from repro.models.shardctx import use_shard_ctx, norm_spec, sharding_for
+from repro.models.shardctx import use_shard_ctx, sharding_for
 from repro.optim import adamw
 from repro.strategies import SyncStrategy, resolve_strategy
 
@@ -474,8 +474,9 @@ class Trainer:
             # uncommitted batch's single-device placement) would bake a
             # lowering the post-first-step state can never dispatch into.
             sh = NamedSharding(self.mesh, P(self._fleet_dim))
-            spec = lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype,
-                                                  sharding=sh)
+
+            def spec(x):
+                return jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=sh)
             self._arg_specs[kind] = (jax.tree.map(spec, state),
                                      jax.tree.map(spec, batch))
             return

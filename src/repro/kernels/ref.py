@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.topk_compress import _select_body, LANES
+from repro.kernels.topk_compress import _select_body
 from repro.kernels.quantize import _quant_body, _int4_body, pack_nibbles
 from repro.kernels.sign import _sign_body
 

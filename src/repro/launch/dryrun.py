@@ -9,18 +9,17 @@ import argparse
 import json
 import time
 import traceback
-from collections import Counter
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ARCHS, SHAPES, LONG_CONTEXT_ARCHS, cells
+from repro.configs import ARCHS, SHAPES, cells
 from repro.configs.base import RunConfig
 from repro.core.trainer import Trainer
 from repro.launch import mesh as mesh_lib
 from repro.models.registry import build_model
 from repro.models.flops import model_flops
-from repro.models.shardctx import use_shard_ctx, sharding_for, norm_spec
+from repro.models.shardctx import use_shard_ctx, sharding_for
 from repro.strategies import list_strategies
 
 

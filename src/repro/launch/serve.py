@@ -18,7 +18,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, SMOKE_ARCHS
-from repro.configs.base import RunConfig, ShapeConfig
 from repro.models.registry import build_model
 from repro.models.shardctx import use_shard_ctx
 

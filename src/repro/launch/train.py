@@ -63,20 +63,17 @@ from typing import Dict, List, Optional, Union
 import jax
 import numpy as np
 
-from repro.configs import ARCHS, SMOKE_ARCHS, SHAPES
-from repro.configs.base import RunConfig, ShapeConfig
+from repro.configs.base import RunConfig
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core import acesync
 from repro.core.trainer import Trainer
-from repro.data.pipeline import TokenPipeline
-from repro.data.telemetry import make_profiles, snapshot, bandwidth_at
+from repro.data.telemetry import make_profiles, snapshot
 from repro.hierarchy import ClusterState
-from repro.models.registry import build_model
 from repro.runtime import faults as F
 from repro.runtime.fault_tolerance import (ElasticPlanner, HeartbeatMonitor,
                                            MeshPlan, StragglerDetector)
-from repro.strategies import STEP_ADVANCING, SYNC_KINDS, SyncStrategy, \
-    list_strategies, resolve_strategy
+from repro.strategies import (STEP_ADVANCING, SYNC_KINDS, SyncStrategy,
+                              list_strategies)
 
 
 def _device_ready(x) -> bool:

@@ -7,7 +7,6 @@ F = seq_len // audio_downsample for train/prefill shapes.
 """
 from __future__ import annotations
 
-import math
 from typing import Optional
 
 import jax

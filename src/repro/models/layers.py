@@ -8,7 +8,6 @@ stacked along a leading L axis and driven by ``lax.scan``.
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Optional
 
@@ -16,8 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.models.shardctx import (constrain, batch_spec, seq_spec,
-                                   BATCH_AXES)
+from repro.models.shardctx import constrain, batch_spec, seq_spec
 
 # ---------------------------------------------------------------------------
 # Norms
@@ -218,7 +216,6 @@ def ring_write_prefill(cache, kv):
 def attn_init(rng, cfg, n_layers: int):
     D, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     k = jax.random.split(rng, 4)
-    s = lambda *sh: jnp.asarray(1.0 / math.sqrt(sh[-2]), jnp.float32)
     def init(key, *sh):
         return (jax.random.normal(key, sh, jnp.float32)
                 * (1.0 / math.sqrt(sh[-2])))

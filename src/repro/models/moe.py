@@ -17,7 +17,6 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.models.shardctx import constrain, batch_spec, token_spec
 
 
 def moe_init(rng, cfg, n_layers: int):

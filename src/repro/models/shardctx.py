@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import contextlib
 import threading
-from typing import Optional, Sequence, Union
+from typing import Optional, Union
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

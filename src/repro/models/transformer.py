@@ -10,8 +10,6 @@ stack is driven by one ``lax.scan`` (small HLO, remat-friendly).
 """
 from __future__ import annotations
 
-import functools
-import math
 from typing import Optional
 
 import jax
@@ -20,7 +18,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.models import layers as L
-from repro.models.shardctx import constrain, batch_spec
+from repro.models.shardctx import batch_spec
 
 
 def _norm_shapes(cfg, n, post):

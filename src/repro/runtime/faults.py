@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 

@@ -8,7 +8,7 @@ another round of cross-cutting ``if strategy == ...`` edits.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Tuple
 
 from repro.core.scheduler import Scheduler, SyncPlan, kept_fraction
 from repro.strategies.base import (SyncStrategy, mean_bandwidth,

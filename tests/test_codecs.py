@@ -11,11 +11,10 @@ try:
 except ImportError:  # property tests skip, the rest of the module runs
     from hypothesis_stub import given, settings, st
 
-from repro.codecs import (Codec, build_codec, codec_for_level, get_codec,
+from repro.codecs import (Codec, build_codec, get_codec,
                           list_codecs, pack_bits, pack_payload,
                           plan_wire_bytes, register_codec, unpack_bits,
                           unpack_payload)
-from repro.codecs import base as codecs_base
 from repro.core import compression as C
 from repro.core.compression import Level
 from repro.core.scheduler import SyncPlan

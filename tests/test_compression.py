@@ -1,5 +1,4 @@
 """Unit + property tests for the compression operators (paper eq. 6-7)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

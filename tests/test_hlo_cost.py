@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 from benchmarks import hlo_cost  # noqa: E402
 

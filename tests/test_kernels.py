@@ -11,7 +11,7 @@ except ImportError:  # property tests skip, the rest of the module runs
     from hypothesis_stub import given, settings, st
 
 from repro.kernels import autotune, ops, ref
-from repro.kernels.topk_compress import ef_topk_select, LANES, ROWS
+from repro.kernels.topk_compress import ef_topk_select, LANES
 from repro.kernels.quantize import (quantize_int8_fused, dequantize_int8,
                                     ef_int4_fused, unpack_nibbles)
 from repro.kernels.sign import ef_sign_fused

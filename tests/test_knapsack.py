@@ -1,6 +1,5 @@
 """Knapsack bandwidth allocator tests (paper's knapsack optimisation)."""
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # property tests skip, the rest of the module runs

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.configs import SMOKE_ARCHS
-from repro.configs.base import ShapeConfig, RunConfig
+from repro.configs.base import ShapeConfig
 from repro.models.registry import build_model
 from repro.optim import adamw
 

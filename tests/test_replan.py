@@ -13,7 +13,6 @@ Pins the three contracts of the planexec refactor:
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import SMOKE_ARCHS
 from repro.configs.base import ACESyncConfig, RunConfig, ShapeConfig
@@ -277,7 +276,6 @@ class TestPlanVectorParity:
         state -> same params / moments / EF residuals.  Guards the
         pack/gather/scatter invariants (intra-block tail padding and the
         shared zero row at index NB stay inert across rungs)."""
-        import dataclasses
         cfg = SMOKE_ARCHS["paper-350m"]
 
         def run(overlap):

@@ -1,14 +1,13 @@
 """SyncStrategy API tests: registry round-trip, plan/schedule/anchor parity
 of the four migrated paper strategies against the seed's string-dispatch
 behavior, and an end-to-end smoke step for every registered name."""
-import jax
 import numpy as np
 import pytest
 
 from repro.configs.base import ACESyncConfig
 from repro.core.scheduler import Scheduler
 from repro.launch.session import TrainSession
-from repro.strategies import (SYNC_KINDS, SyncStrategy, build_strategy,
+from repro.strategies import (SyncStrategy, build_strategy,
                               get_strategy, list_strategies,
                               register_strategy, resolve_strategy)
 from repro.strategies import base as strategies_base

@@ -4,7 +4,6 @@ exact, divergence control reacts."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import SMOKE_ARCHS
 from repro.configs.base import ACESyncConfig, RunConfig, ShapeConfig
